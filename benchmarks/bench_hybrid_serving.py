@@ -1,0 +1,38 @@
+"""Beyond-paper: the Skedulix scheduler driving LLM request batches over a
+reserved pod + elastic overflow (serving/hybrid.py), for three archs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import HybridServingScheduler
+
+from .common import print_rows, row, timed
+
+
+def run(full: bool = False):
+    rows = []
+    J = 128 if full else 48
+    for arch in ("llama3-8b", "recurrentgemma-9b", "arctic-480b"):
+        h = HybridServingScheduler(get_config(arch))
+        h.fit_perf_models(n_train=256 if full else 128)
+        rng = np.random.default_rng(7)
+        plen = rng.integers(128, 4096, J)
+        ntok = rng.integers(32, 512, J)
+        pub, priv = h.baselines(plen, ntok)
+        c_max = priv.makespan * 0.5
+        rep, t = timed(h.schedule, plen, ntok, c_max=c_max, order="spt")
+        r = rep.result
+        rows.append(row(
+            f"serve/{arch}", t / J * 1e6,
+            f"speedup={priv.makespan / r.makespan:.2f}x;"
+            f"cost_pct_of_public={100 * r.cost_usd / pub.cost_usd:.1f}%;"
+            f"met={int(r.makespan <= c_max * 1.1)};"
+            f"offloaded={r.n_offloaded_stages}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print_rows(run(full="--full" in sys.argv))

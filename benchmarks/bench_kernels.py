@@ -1,0 +1,94 @@
+"""Kernel microbenchmarks: jnp reference-path wall time (the CPU proxy) +
+derived GFLOP/s, plus interpret-mode correctness deltas for the Pallas
+kernels (wall time in interpret mode is meaningless — correctness only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import print_rows, row, timed
+
+
+def _bench(fn, *args, repeats=5):
+    out = jax.block_until_ready(fn(*args))          # compile + warm
+    _, t = timed(lambda: jax.block_until_ready(fn(*args)), repeats=repeats)
+    return out, t
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+    n = 1024 if full else 512
+
+    # matmul
+    x = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    out, t = _bench(jax.jit(ref.matmul_ref), x, y)
+    gf = 2 * n ** 3 / t / 1e9
+    pall = ops.matmul(x[:256, :256], y[:256, :256], use_pallas=True)
+    err = float(jnp.max(jnp.abs(pall - ref.matmul_ref(x[:256, :256],
+                                                      y[:256, :256]))))
+    rows.append(row("kernel/matmul", t * 1e6,
+                    f"ref_gflops={gf:.1f};pallas_interp_maxerr={err:.2e}"))
+
+    # flash attention (prefill)
+    B, H, Hkv, S, D = 1, 8, 2, (2048 if full else 512), 64
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    fa = jax.jit(lambda *a: ref.flash_attention_ref(*a, causal=True))
+    out, t = _bench(fa, q, k, v)
+    fl = 4 * B * H * S * S * D
+    small = ops.flash_attention(q[:, :, :128], k[:, :, :128], v[:, :, :128],
+                                use_pallas=True, bq=64, bk=64)
+    err = float(jnp.max(jnp.abs(
+        small - ref.flash_attention_ref(q[:, :, :128], k[:, :, :128],
+                                        v[:, :, :128]))))
+    rows.append(row("kernel/flash_attention", t * 1e6,
+                    f"ref_gflops={fl / t / 1e9:.1f};pallas_interp_maxerr={err:.2e}"))
+
+    # flash decode
+    S2 = 32768 if full else 4096
+    kc = jnp.asarray(rng.normal(size=(B, Hkv, S2, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, Hkv, S2, D)), jnp.float32)
+    qd = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    fd = jax.jit(ref.flash_decode_ref)
+    out, t = _bench(fd, qd, kc, vc)
+    bytes_ = kc.nbytes + vc.nbytes
+    err = float(jnp.max(jnp.abs(
+        ops.flash_decode(qd, kc[:, :, :256], vc[:, :, :256], use_pallas=True,
+                         bk=64)
+        - ref.flash_decode_ref(qd, kc[:, :, :256], vc[:, :, :256]))))
+    rows.append(row("kernel/flash_decode", t * 1e6,
+                    f"ref_gbps={bytes_ / t / 1e9:.1f};pallas_interp_maxerr={err:.2e}"))
+
+    # rglru
+    Bt, T, Dm = 4, (4096 if full else 1024), 256
+    xr = jnp.asarray(rng.normal(size=(Bt, T, Dm)), jnp.float32)
+    ar = jnp.asarray(rng.uniform(0.5, 0.99, size=(Bt, T, Dm)), jnp.float32)
+    rg = jax.jit(lambda a, b: ref.rglru_ref(a, b)[0])
+    out, t = _bench(rg, xr, ar)
+    rows.append(row("kernel/rglru", t * 1e6,
+                    f"ref_gbps={2 * xr.nbytes / t / 1e9:.1f}"))
+
+    # rwkv6
+    Hh, Tk, Dk = 4, (1024 if full else 256), 64
+    r_ = jnp.asarray(rng.normal(size=(1, Hh, Tk, Dk)), jnp.float32)
+    k_ = jnp.asarray(rng.normal(size=(1, Hh, Tk, Dk)), jnp.float32)
+    v_ = jnp.asarray(rng.normal(size=(1, Hh, Tk, Dk)), jnp.float32)
+    w_ = jnp.asarray(rng.uniform(0.5, 0.99, size=(1, Hh, Tk, Dk)), jnp.float32)
+    u_ = jnp.asarray(rng.normal(size=(Hh, Dk)), jnp.float32)
+    rw = jax.jit(lambda *a: ref.rwkv6_ref(*a)[0])
+    out, t = _bench(rw, r_, k_, v_, w_, u_)
+    fl = 4 * Hh * Tk * Dk * Dk
+    rows.append(row("kernel/rwkv6", t * 1e6, f"ref_gflops={fl / t / 1e9:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print_rows(run(full="--full" in sys.argv))

@@ -1,0 +1,56 @@
+"""Fig. 4: offloaded-function %% and total cost vs C_max, SPT vs HCF,
+for all three applications.
+
+Paper result: offloads decrease with deadline; HCF offloads more and (for
+compute-heavy apps) costs 14-18% more than SPT; image app reverses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulate_all_private
+
+from .common import app_setup, print_rows, row, timed
+
+
+def run(full: bool = False, n_points: int = 5):
+    rows = []
+    for app in ("matrix", "video", "image"):
+        spec, sched, pred, act, tr, te = app_setup(app, full)
+        priv = simulate_all_private(spec.dag, pred, act)
+        fracs = np.linspace(0.45, 0.95, n_points)
+        for order in ("spt", "hcf"):
+            costs, offs = [], []
+            t_all = 0.0
+            for f in fracs:
+                rep, t = timed(sched.schedule_batch,
+                               c_max=float(priv.makespan * f),
+                               pred=pred, act=act, order=order)
+                t_all += t
+                costs.append(rep.result.cost_usd)
+                offs.append(100.0 * rep.result.offload_fraction)
+            J = pred["P_private"].shape[0]
+            rows.append(row(
+                f"fig4/{app}/{order}", t_all / len(fracs) / J * 1e6,
+                "off%=" + "|".join(f"{o:.0f}" for o in offs)
+                + ";cost=" + "|".join(f"{c:.5f}" for c in costs)))
+        # SPT-vs-HCF cost ratio averaged over the sweep (paper: 14-18%)
+        rows.append(row(f"fig4/{app}/hcf_over_spt", 0.0,
+                        _ratio(rows[-2], rows[-1])))
+    return rows
+
+
+def _ratio(spt_row, hcf_row) -> str:
+    def costs(r):
+        part = [p for p in r["derived"].split(";") if p.startswith("cost=")][0]
+        return np.array([float(x) for x in part[5:].split("|")])
+    s, h = costs(spt_row), costs(hcf_row)
+    mask = s > 1e-12
+    if not mask.any():
+        return "ratio=nan"
+    return f"ratio={float(np.mean(h[mask] / s[mask])):.3f}"
+
+
+if __name__ == "__main__":
+    import sys
+    print_rows(run(full="--full" in sys.argv))

@@ -1,0 +1,13 @@
+# The paper's three canonical serverless applications (Sec. V-A) as real
+# JAX stage programs, + trace generation for the performance models.
+from . import image, matrix, video
+from .base import AppSpec, fit_models, generate_traces, run_job, split_traces
+
+SPECS = {
+    "matrix": matrix.make_spec,
+    "video": video.make_spec,
+    "image": image.make_spec,
+}
+
+__all__ = ["AppSpec", "generate_traces", "fit_models", "run_job",
+           "split_traces", "SPECS", "matrix", "video", "image"]

@@ -1,0 +1,148 @@
+"""Application substrate: real JAX stage programs + trace generation.
+
+Each canonical application (Sec. V-A) is an :class:`AppSpec`: the DAG, a
+job generator, and one jitted-or-eager JAX function per stage. Traces are
+gathered by *executing* the stages on this host (the paper's private-cloud
+Xeon) and timing them; public-cloud latencies are synthesized from the
+measured compute via per-stage speed ratios + Lambda startup jitter
+(the live AWS side is unavailable in this container — see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.dag import AppDAG
+from ..core.perfmodel import (AppPerfModel, FeatureBuilder, default_feature_builder,
+                              fit_app_perf_model)
+
+# stage_fn(inputs: list of predecessor outputs (or [job_input] at sources))
+#   -> output pytree of arrays
+StageFn = Callable[[List[Any]], Any]
+
+
+@dataclasses.dataclass
+class AppSpec:
+    dag: AppDAG
+    make_job: Callable[[np.random.Generator], Tuple[Any, np.ndarray]]
+    stage_fns: Sequence[StageFn]
+    # public-cloud synthesis: P_pub = P_priv_compute / speed + startup
+    public_speed: Sequence[float]
+    public_startup_s: float = 0.050
+    public_jitter: float = 0.05          # lognormal sigma on public latency
+    overhead_range_s: Tuple[float, float] = (0.015, 0.020)  # Sec. IV-B
+    zip_factor: Sequence[float] | None = None  # output "zip" compression per stage
+    feature_builder: FeatureBuilder = default_feature_builder
+    # This host runs the stage kernels ~40x faster than the paper's pinned
+    # 0.2-1.0-CPU OpenFaaS containers (2015 Xeon + CSV/file I/O). Measured
+    # compute is dilated into the paper's latency regime — seconds, where
+    # warm-start overhead is negligible — preserving the measured
+    # latency-vs-feature structure and variance (DESIGN.md §8).
+    time_scale: float = 1.0
+
+    @property
+    def name(self) -> str:
+        return self.dag.name
+
+
+def _nbytes(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.asarray(x).nbytes for x in leaves))
+
+
+def _unwrap(out: Any) -> Tuple[Any, float]:
+    """A stage may return (data, encoded_bytes) for content-dependent
+    output sizes (e.g. jpeg-like entropy coding); plain outputs use
+    raw array bytes."""
+    if isinstance(out, tuple) and len(out) == 2 and isinstance(out[1], (int, float)):
+        return out[0], float(out[1])
+    return out, float(_nbytes(out))
+
+
+def _block(tree: Any) -> Any:
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return tree
+
+
+def run_job(spec: AppSpec, job_input: Any) -> Dict[int, Any]:
+    """Execute one job through the DAG; returns per-stage outputs."""
+    outputs: Dict[int, Any] = {}
+    for k in spec.dag.topo_order():
+        preds = spec.dag.predecessors(k)
+        ins = [outputs[p] for p in preds] if preds else [job_input]
+        outputs[k], _ = _unwrap(_block(spec.stage_fns[k](ins)))
+    return outputs
+
+
+def generate_traces(spec: AppSpec, n_jobs: int, seed: int = 0,
+                    time_fn: Callable[[], float] = time.perf_counter,
+                    warmup: bool = True,
+                    ) -> Dict[str, np.ndarray]:
+    """Run ``n_jobs`` jobs, timing every stage (the paper's training runs).
+
+    ``warmup`` executes each stage once untimed first — the paper considers
+    *warm starts only* (Sec. V-A.2), and this also keeps XLA op-compile
+    time out of the measured latencies.
+
+    Returns the trace dict consumed by :func:`fit_app_perf_model`:
+    base_features [N,D], private/public/outsize/overhead [N,M].
+    """
+    rng = np.random.default_rng(seed)
+    M = spec.dag.num_stages
+    base_feats: List[np.ndarray] = []
+    priv = np.zeros((n_jobs, M))
+    pub = np.zeros((n_jobs, M))
+    outsz = np.zeros((n_jobs, M))
+    overhead = np.zeros((n_jobs, M))
+    zf = np.asarray(spec.zip_factor if spec.zip_factor is not None else [1.0] * M)
+    warmed: set = set()  # (stage, input-shape) signatures already compiled
+    for j in range(n_jobs):
+        job_input, feats = spec.make_job(rng)
+        base_feats.append(np.asarray(feats, dtype=np.float64))
+        outputs: Dict[int, Any] = {}
+        for k in spec.dag.topo_order():
+            preds = spec.dag.predecessors(k)
+            ins = [outputs[p] for p in preds] if preds else [job_input]
+            sig = (k, tuple(getattr(x, "shape", ()) for x in
+                            jax.tree_util.tree_leaves(ins)))
+            if warmup and sig not in warmed:
+                _block(spec.stage_fns[k](ins))
+                warmed.add(sig)
+            t0 = time_fn()
+            raw = _block(spec.stage_fns[k](ins))
+            compute_s = max(time_fn() - t0, 1e-6) * spec.time_scale
+            outputs[k], nbytes = _unwrap(raw)
+            ov = rng.uniform(*spec.overhead_range_s)
+            overhead[j, k] = ov
+            priv[j, k] = compute_s + ov
+            pub[j, k] = (compute_s / spec.public_speed[k]
+                         + spec.public_startup_s
+                         ) * rng.lognormal(0.0, spec.public_jitter)
+            outsz[j, k] = max(nbytes * zf[k] * rng.lognormal(0.0, 0.02), 1.0)
+    return {
+        "base_features": np.stack(base_feats),
+        "private": priv,
+        "public": pub,
+        "outsize": outsz,
+        "overhead": overhead,
+    }
+
+
+def fit_models(spec: AppSpec, traces: Dict[str, np.ndarray],
+               **kwargs) -> AppPerfModel:
+    return fit_app_perf_model(spec.dag, traces,
+                              feature_builder=spec.feature_builder, **kwargs)
+
+
+def split_traces(traces: Dict[str, np.ndarray], n_train: int
+                 ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """Train/test split in trace order (paper: 774/150, 800/200, 800/200)."""
+    tr = {k: v[:n_train] for k, v in traces.items()}
+    te = {k: v[n_train:] for k, v in traces.items()}
+    return tr, te

@@ -1,0 +1,107 @@
+"""Image Processing application (I/O heavy): Rotate -> Resize -> Compress.
+
+Rotate: bilinear rotation onto the enlarged bounding canvas (output size
+similar but non-identical to the input). Resize: bilinear to 200x200 —
+uniform pixel count but *content-dependent encoded bytes* downstream.
+Compress: 8x8 block-DCT quantization; output bytes = packed nonzero
+coefficients (jpeg-like), so the output-size prediction models genuinely
+matter for this app (Sec. V-A).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dag import image_app
+from .base import AppSpec
+
+_ANGLE = math.radians(15.0)
+_TARGET = 200  # paper: resize to 200x200
+
+
+def _rotate_stage(ins: List[Any]):
+    img = ins[0].astype(jnp.float32)            # [H, W, 3]
+    h, w = img.shape[:2]
+    c, s = math.cos(_ANGLE), math.sin(_ANGLE)
+    H2 = int(abs(h * c) + abs(w * s)) + 1
+    W2 = int(abs(w * c) + abs(h * s)) + 1
+    yy, xx = jnp.meshgrid(jnp.arange(H2, dtype=jnp.float32),
+                          jnp.arange(W2, dtype=jnp.float32), indexing="ij")
+    cy, cx = (H2 - 1) / 2.0, (W2 - 1) / 2.0
+    oy, ox = (h - 1) / 2.0, (w - 1) / 2.0
+    ysrc = (yy - cy) * c + (xx - cx) * s + oy
+    xsrc = -(yy - cy) * s + (xx - cx) * c + ox
+    y0 = jnp.clip(jnp.floor(ysrc).astype(jnp.int32), 0, h - 2)
+    x0 = jnp.clip(jnp.floor(xsrc).astype(jnp.int32), 0, w - 2)
+    fy = jnp.clip(ysrc - y0, 0.0, 1.0)[..., None]
+    fx = jnp.clip(xsrc - x0, 0.0, 1.0)[..., None]
+    g = lambda dy, dx: img[y0 + dy, x0 + dx]
+    out = ((1 - fy) * (1 - fx) * g(0, 0) + (1 - fy) * fx * g(0, 1)
+           + fy * (1 - fx) * g(1, 0) + fy * fx * g(1, 1))
+    inside = ((ysrc >= 0) & (ysrc <= h - 1) & (xsrc >= 0) & (xsrc <= w - 1))
+    return (out * inside[..., None]).astype(jnp.uint8)
+
+
+def _resize_stage(ins: List[Any]):
+    img = ins[0].astype(jnp.float32)
+    out = jax.image.resize(img, (_TARGET, _TARGET, 3), method="bilinear")
+    return out.astype(jnp.uint8)
+
+
+def _dct_matrix(n: int = 8) -> jnp.ndarray:
+    k = np.arange(n)
+    d = np.sqrt(2.0 / n) * np.cos(np.pi * (2 * k[None, :] + 1) * k[:, None] / (2 * n))
+    d[0] /= np.sqrt(2.0)
+    return jnp.asarray(d, dtype=jnp.float32)
+
+
+_DCT = _dct_matrix()
+# luminance-style quantization table scaled flat for simplicity
+_QTAB = jnp.asarray(np.full((8, 8), 24.0) + 4.0 * np.add.outer(np.arange(8), np.arange(8)),
+                    dtype=jnp.float32)
+
+
+def _compress_stage(ins: List[Any]):
+    img = ins[0].astype(jnp.float32) - 128.0     # [200, 200, 3]
+    hb, wb = img.shape[0] // 8, img.shape[1] // 8
+    blocks = img[:hb * 8, :wb * 8].reshape(hb, 8, wb, 8, 3).transpose(0, 2, 4, 1, 3)
+    coeffs = jnp.einsum("ij,bwcjk,lk->bwcil", _DCT, blocks, _DCT)
+    q = jnp.round(coeffs / _QTAB)
+    qn = np.asarray(q)
+    packed = qn[qn != 0].astype(np.int16)        # entropy-coded payload proxy
+    return jnp.asarray(q, dtype=jnp.int32), float(packed.nbytes + 1024)
+
+
+def make_spec(scale: float = 1.0, replicas: int = 2) -> AppSpec:
+    lo = max(int(300 * scale), 32)
+    hi = max(int(1200 * scale), lo + 32)
+
+    bucket = max((hi - lo) // 8, 8)  # coarse dim buckets: XLA compile-cache reuse
+
+    def make_job(rng: np.random.Generator) -> Tuple[Any, np.ndarray]:
+        h = int(rng.integers(lo, hi + 1)) // bucket * bucket
+        w = int(rng.integers(lo, hi + 1)) // bucket * bucket
+        # Image-of-Groups-like: smooth background + textured foreground
+        base = rng.integers(0, 256, (h // 8 + 1, w // 8 + 1, 3))
+        img = np.kron(base, np.ones((8, 8, 1)))[:h, :w]
+        img = (img + rng.normal(0, 12, (h, w, 3))).clip(0, 255).astype(np.uint8)
+        # features: encoded bytes, pixel count, perimeter (rotate canvas cost)
+        return jnp.asarray(img), np.array([float(img.nbytes) * 0.25,
+                                           float(h * w), float(h + w)])
+
+    return AppSpec(
+        dag=image_app(replicas=replicas),
+        make_job=make_job,
+        stage_fns=(_rotate_stage, _resize_stage, _compress_stage),
+        # 0.2 private CPUs vs 2048MB Lambda: public much faster, but
+        # latencies are small so startup dominates (high-variance regime)
+        public_speed=(2.5, 2.5, 2.5),
+        public_startup_s=0.060,
+        public_jitter=0.15,
+        zip_factor=(0.9, 0.95, 1.0),
+        time_scale=25.0,
+    )

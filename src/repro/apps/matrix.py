@@ -1,0 +1,57 @@
+"""Matrix Processing application (compute-heavy ETL): MM -> LU.
+
+Stage MM multiplies the input matrix by its transpose (uses the Pallas
+tiled-matmul kernel on TPU; jnp reference path on CPU). Stage LU computes
+an LU decomposition of the product. Inputs are random integer matrices of
+dimension 350..500 (Sec. V-A); ``scale`` shrinks dims for fast tests.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dag import matrix_app
+from ..kernels import ops as kops
+from .base import AppSpec
+
+_DIM_LO, _DIM_HI = 350, 500
+
+
+def _mm_stage(use_pallas: bool):
+    def mm(ins: List[Any]):
+        x = ins[0].astype(jnp.float32)
+        return kops.matmul(x, x.T, use_pallas=use_pallas)
+    return mm
+
+
+def _lu_stage(ins: List[Any]):
+    x = ins[0].astype(jnp.float32)
+    # right-looking LU with partial pivoting (lax.linalg), as in scipy.lu
+    lu, _, _ = jax.lax.linalg.lu(x)
+    return lu
+
+
+def make_spec(scale: float = 1.0, replicas: int = 2,
+              use_pallas: bool = False, seed_dims: bool = True) -> AppSpec:
+    lo = max(int(_DIM_LO * scale), 8)
+    hi = max(int(_DIM_HI * scale), lo + 8)
+
+    def make_job(rng: np.random.Generator) -> Tuple[Any, np.ndarray]:
+        n = int(rng.integers(lo, hi + 1))
+        n = (n // 8) * 8  # bucket dims for XLA compile-cache friendliness
+        m = rng.integers(0, 10, (n, n)).astype(np.int32)
+        csv_bytes = float(n * n * 2.5)       # CSV text encoding of ints
+        return jnp.asarray(m), np.array([csv_bytes, float(n * n)])
+
+    return AppSpec(
+        dag=matrix_app(replicas=replicas),
+        make_job=make_job,
+        stage_fns=(_mm_stage(use_pallas), _lu_stage),
+        # private replicas pinned at 1.0 CPU/512MB; Lambda at 2048MB (~1.8 vCPU)
+        public_speed=(1.7, 1.7),
+        zip_factor=(1.0, 1.0),
+        time_scale=40.0,
+    )

@@ -1,0 +1,90 @@
+"""Video Processing application (Fig. 1): EF -> {DO, RI} -> ME.
+
+A traffic-surveillance pipeline: extractFrames pulls one key frame per
+second, detectObject runs a small conv detector over the frames,
+rescaleImage halves the resolution, merger zips the detector output with
+the rescaled frames. Synthetic BDD100K-like clips: duration < 10 s.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dag import video_app
+from .base import AppSpec
+
+_FPS = 8  # decoded frame rate of the synthetic clips
+
+
+def _ef_stage(ins: List[Any]):
+    """extractFrames: temporal smoothing (decode proxy) + 1 key frame/s."""
+    vid = ins[0].astype(jnp.float32)            # [T, H, W, 3]
+    smooth = 0.5 * vid + 0.25 * jnp.roll(vid, 1, 0) + 0.25 * jnp.roll(vid, -1, 0)
+    frames = smooth[::_FPS]                      # [dur, H, W, 3]
+    return frames.astype(jnp.uint8)
+
+
+def _make_detector(seed: int = 7):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    w1 = jax.random.normal(k1, (3, 3, 3, 8)) * 0.1
+    w2 = jax.random.normal(k2, (3, 3, 8, 16)) * 0.1
+    w3 = jax.random.normal(k3, (3, 3, 16, 16)) * 0.1
+
+    def conv(x, w, stride):
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    def detect(ins: List[Any]):
+        frames = ins[0].astype(jnp.float32) / 255.0  # [F, H, W, 3]
+        h = jax.nn.relu(conv(frames, w1, 2))
+        h = jax.nn.relu(conv(h, w2, 2))
+        h = jax.nn.relu(conv(h, w3, 2))
+        # box/score head: global pool -> 16 "detections" per frame
+        pooled = h.mean(axis=(1, 2))              # [F, 16]
+        boxes = jnp.stack([pooled, pooled ** 2, jnp.sqrt(jnp.abs(pooled)),
+                           jnp.tanh(pooled)], axis=-1)  # [F, 16, 4]
+        return boxes.astype(jnp.float32)
+    return detect
+
+
+def _ri_stage(ins: List[Any]):
+    """rescaleImage: 2x average-pool downscale, zipped."""
+    frames = ins[0].astype(jnp.float32)          # [F, H, W, 3]
+    f, h, w, c = frames.shape
+    small = frames.reshape(f, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+    return small.astype(jnp.uint8)
+
+
+def _me_stage(ins: List[Any]):
+    """merger: bundle detections + rescaled frames into one archive."""
+    boxes, frames = ins[0], ins[1]
+    blob = jnp.concatenate([boxes.reshape(-1), frames.astype(jnp.float32).reshape(-1)])
+    return blob[:: max(blob.shape[0] // 4096, 1)]  # archive manifest digest
+
+
+def make_spec(scale: float = 1.0, replicas: int = 2) -> AppSpec:
+    res = max(int(96 * scale) // 4 * 4, 16)
+
+    def make_job(rng: np.random.Generator) -> Tuple[Any, np.ndarray]:
+        dur = int(rng.integers(3, 11))           # <10 s clips
+        t = dur * _FPS
+        vid = rng.integers(0, 256, (t, res, res, 3), dtype=np.uint8)
+        filesize = float(vid.nbytes) * 0.12      # H.264-ish compression
+        return jnp.asarray(vid), np.array([filesize, float(dur)])
+
+    return AppSpec(
+        dag=video_app(replicas=replicas),
+        make_job=make_job,
+        stage_fns=(_ef_stage, _make_detector(), _ri_stage, _me_stage),
+        # EF@1024MB, DO@3008MB, RI@1024MB, ME@512MB Lambda configs vs
+        # 0.5/1.0/0.2/0.2 private CPUs (Sec. V-A.2)
+        public_speed=(1.3, 1.8, 2.2, 1.5),
+        zip_factor=(0.7, 1.0, 0.8, 0.9),
+        time_scale=20.0,
+    )

@@ -1,0 +1,4 @@
+# One config module per assigned architecture (+ the paper's three apps).
+from .registry import ARCHS, get_config, get_smoke_config, SHAPES, ShapeSpec
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config", "SHAPES", "ShapeSpec"]

@@ -1,0 +1,25 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (kv=40) d_ff=27392
+vocab=152064, QKV bias. [hf:Qwen/Qwen1.5-*]"""
+from ..models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b", family="dense",
+        num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+        d_ff=27392, vocab_size=152064, qkv_bias=True,
+        norm="rmsnorm", act="silu", glu=True,
+        # MHA (kv=40) at 32k x batch 128 is a 5.5 TB bf16 cache — beyond the
+        # pod's HBM; fp8 KV storage (vLLM-style) halves it to fit. See
+        # EXPERIMENTS.md §Perf.
+        kv_dtype="float8_e4m3fn",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=160, vocab_size=256, qkv_bias=True,
+        norm="rmsnorm", act="silu", glu=True,
+    )

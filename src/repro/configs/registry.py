@@ -1,0 +1,69 @@
+"""Architecture registry + assigned input shapes (40 cells).
+
+Shapes (per the assignment):
+  train_4k     seq 4,096   global_batch 256   (training)
+  prefill_32k  seq 32,768  global_batch 32    (inference-prefill)
+  decode_32k   seq 32,768  global_batch 128   (one token, KV cache=seq)
+  long_500k    seq 524,288 global_batch 1     (long-context decode;
+               sub-quadratic archs only — skips noted in DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from ..models.config import ModelConfig
+from . import (arctic_480b, internvl2_76b, llama3_8b, olmoe_1b_7b,
+               qwen1_5_32b, recurrentgemma_9b, rwkv6_1_6b, stablelm_12b,
+               starcoder2_15b, whisper_large_v3)
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "whisper-large-v3": whisper_large_v3,
+    "qwen1.5-32b": qwen1_5_32b,
+    "llama3-8b": llama3_8b,
+    "stablelm-12b": stablelm_12b,
+    "starcoder2-15b": starcoder2_15b,
+    "rwkv6-1.6b": rwkv6_1_6b,
+    "internvl2-76b": internvl2_76b,
+    "arctic-480b": arctic_480b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    def scaled(self, seq: int, batch: int) -> "ShapeSpec":
+        return dataclasses.replace(self, seq_len=seq, global_batch=batch)
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic decode (SSM / hybrid-with-window)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k-token KV decode is "
+                       "quadratic-cost/unbounded-cache; skipped per "
+                       "assignment rules (DESIGN.md §4)")
+    return True, ""

@@ -1,0 +1,58 @@
+"""Public-cloud cost model (paper Eqn. 1) — vectorized, jit-able.
+
+    h(t) = 100 * ceil(t/100) * (M/1024) * (0.00001667/1000)
+
+t in milliseconds, M the memory configuration in MB. The framework extends
+trivially to any deterministic cost-of-latency model (Sec. II-A); the
+quantum and $/GB-ms rate are parameters so elastic TPU/GPU billing (per
+second, per 100 ms, ...) uses the same code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+USD_PER_GB_MS = 0.00001667 / 1000.0  # AWS Lambda (Feb 2020)
+QUANTUM_MS = 100.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Deterministic execution-cost model: rounded time x memory x rate."""
+
+    quantum_ms: float = QUANTUM_MS
+    usd_per_gb_ms: float = USD_PER_GB_MS
+
+    def __call__(self, t_ms, mem_mb):
+        """Cost (USD) of executing for ``t_ms`` at memory ``mem_mb``.
+
+        Works on scalars, numpy arrays and jnp arrays (broadcasting).
+        """
+        t_ms = jnp.asarray(t_ms)
+        rounded = self.quantum_ms * jnp.ceil(t_ms / self.quantum_ms)
+        return rounded * (jnp.asarray(mem_mb) / 1024.0) * self.usd_per_gb_ms
+
+    def np_cost(self, t_ms, mem_mb):
+        """Pure-numpy twin for the discrete-event hot loop."""
+        rounded = self.quantum_ms * np.ceil(np.asarray(t_ms, dtype=np.float64) / self.quantum_ms)
+        return rounded * (np.asarray(mem_mb, dtype=np.float64) / 1024.0) * self.usd_per_gb_ms
+
+
+LAMBDA_COST = CostModel()
+
+
+def lambda_cost(t_ms, mem_mb):
+    """Eqn. 1 with the paper's constants."""
+    return LAMBDA_COST(t_ms, mem_mb)
+
+
+def stage_costs(P_public_s: np.ndarray, mem_mb: np.ndarray,
+                model: CostModel = LAMBDA_COST) -> np.ndarray:
+    """H_{k,j}: public cost of each (job, stage).
+
+    ``P_public_s``: [J, M] public latencies in *seconds*;
+    ``mem_mb``: [M].  Returns [J, M] USD.
+    """
+    return model.np_cost(np.asarray(P_public_s) * 1e3, np.asarray(mem_mb)[None, :])

@@ -1,0 +1,179 @@
+"""Application DAGs: the paper's job model (Sec. II-A).
+
+An application is a DAG of *stages* (serverless functions). Every job of an
+application executes the same DAG; precedence edges constrain stage start
+times. Each stage k has a fixed number of private-cloud replicas ``I_k`` and
+a public-cloud memory configuration ``mem_mb`` (the M in the Lambda cost
+model, Eqn. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One function/stage of an application."""
+
+    name: str
+    replicas: int = 1          # I_k: private-cloud replicas
+    mem_mb: float = 1024.0     # public-cloud memory config (Lambda M)
+    must_private: bool = False  # Omega_j: privacy-constrained stages
+
+
+@dataclasses.dataclass(frozen=True)
+class AppDAG:
+    """A serverless application: stages + precedence edges.
+
+    ``edges`` are (src, dst) stage-index pairs; the DAG identifies the
+    partial order in which stages must execute (Fig. 1).
+    """
+
+    name: str
+    stages: Tuple[Stage, ...]
+    edges: Tuple[Tuple[int, int], ...]
+
+    def __post_init__(self):
+        n = len(self.stages)
+        for (u, v) in self.edges:
+            if not (0 <= u < n and 0 <= v < n and u != v):
+                raise ValueError(f"bad edge ({u},{v}) for {n} stages")
+        order = self.topo_order()  # raises on cycles
+        if len(order) != n:
+            raise ValueError("DAG has a cycle")
+
+    # -- structure -----------------------------------------------------
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def replicas(self) -> np.ndarray:
+        return np.array([s.replicas for s in self.stages], dtype=np.int64)
+
+    @property
+    def mem_mb(self) -> np.ndarray:
+        return np.array([s.mem_mb for s in self.stages], dtype=np.float64)
+
+    def successors(self, k: int) -> List[int]:
+        return [v for (u, v) in self.edges if u == k]
+
+    def predecessors(self, k: int) -> List[int]:
+        return [u for (u, v) in self.edges if v == k]
+
+    def sources(self) -> List[int]:
+        has_pred = {v for (_, v) in self.edges}
+        return [k for k in range(self.num_stages) if k not in has_pred]
+
+    def sinks(self) -> List[int]:
+        has_succ = {u for (u, _) in self.edges}
+        return [k for k in range(self.num_stages) if k not in has_succ]
+
+    def topo_order(self) -> List[int]:
+        n = len(self.stages)
+        indeg = [0] * n
+        for (_, v) in self.edges:
+            indeg[v] += 1
+        frontier = [k for k in range(n) if indeg[k] == 0]
+        out: List[int] = []
+        while frontier:
+            k = frontier.pop()
+            out.append(k)
+            for v in self.successors(k):
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    frontier.append(v)
+        return out
+
+    def descendants(self, k: int) -> List[int]:
+        """All stages reachable from k (excluding k)."""
+        seen, stack = set(), list(self.successors(k))
+        while stack:
+            v = stack.pop()
+            if v not in seen:
+                seen.add(v)
+                stack.extend(self.successors(v))
+        return sorted(seen)
+
+    # -- ACD support (Sec. III-B) ---------------------------------------
+    def longest_path_latency(self, latencies: np.ndarray) -> np.ndarray:
+        """Per-stage critical-path remainder  sum_{k in Gamma(l)} P_k.
+
+        ``latencies``: [..., M] per-stage latency (batched over jobs).
+        Returns [..., M]: for each stage l, the latency along the
+        longest-latency path from l to the sink(s), *including* stage l —
+        the optimistic time-to-finish term of the ACD.
+        """
+        lat = np.asarray(latencies, dtype=np.float64)
+        out = np.zeros_like(lat)
+        for k in reversed(self.topo_order()):
+            succ = self.successors(k)
+            best = 0.0
+            if succ:
+                best = np.max(np.stack([out[..., v] for v in succ], axis=-1), axis=-1)
+            out[..., k] = lat[..., k] + best
+        return out
+
+    def validate_schedule(
+        self,
+        start: np.ndarray,
+        dur: np.ndarray,
+        eps: float = 1e-9,
+    ) -> bool:
+        """Check precedence feasibility of per-(job,stage) start times."""
+        start = np.asarray(start)
+        dur = np.asarray(dur)
+        for (u, v) in self.edges:
+            if np.any(start[..., v] + eps < start[..., u] + dur[..., u]):
+                return False
+        return True
+
+
+# -- canonical applications (Sec. V-A) ----------------------------------
+
+def matrix_app(replicas: int = 2) -> AppDAG:
+    """Matrix Processing: MM -> LU (compute-heavy ETL)."""
+    return AppDAG(
+        name="matrix",
+        stages=(
+            Stage("MM", replicas=replicas, mem_mb=2048.0),
+            Stage("LU", replicas=replicas, mem_mb=2048.0),
+        ),
+        edges=((0, 1),),
+    )
+
+
+def video_app(replicas: int = 2) -> AppDAG:
+    """Video Processing: EF -> {DO, RI} -> ME (Fig. 1)."""
+    return AppDAG(
+        name="video",
+        stages=(
+            Stage("EF", replicas=replicas, mem_mb=1024.0),
+            Stage("DO", replicas=replicas, mem_mb=3008.0),
+            Stage("RI", replicas=replicas, mem_mb=1024.0),
+            Stage("ME", replicas=replicas, mem_mb=512.0),
+        ),
+        edges=((0, 1), (0, 2), (1, 3), (2, 3)),
+    )
+
+
+def image_app(replicas: int = 2) -> AppDAG:
+    """Image Processing: Rotate -> Resize -> Compress (I/O heavy)."""
+    return AppDAG(
+        name="image",
+        stages=(
+            Stage("Rotate", replicas=replicas, mem_mb=2048.0),
+            Stage("Resize", replicas=replicas, mem_mb=2048.0),
+            Stage("Compress", replicas=replicas, mem_mb=2048.0),
+        ),
+        edges=((0, 1), (1, 2)),
+    )
+
+
+APPS: Dict[str, "AppDAG"] = {}
+for _f in (matrix_app, video_app, image_app):
+    _d = _f()
+    APPS[_d.name] = _d

@@ -1,0 +1,234 @@
+"""Exact reference solvers for the hybrid-cloud scheduling problem.
+
+* :func:`solve_milp` — the appendix MILP (Eqns. 2-16) built verbatim and
+  handed to scipy's HiGHS branch-and-cut (the paper used Gurobi). Used for
+  the Fig.-3 "optimal vs greedy" comparison at small job counts.
+* :func:`johnson_makespan` — exact F2||Cmax makespan (Johnson's rule) for
+  2-stage/1-replica all-private instances; a simulator ground truth.
+* :func:`knapsack_lower_bound` — the appendix "special case": with one
+  stage the problem reduces to multiple knapsacks of size C_max.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from .cost import CostModel, LAMBDA_COST
+from .dag import AppDAG
+
+
+@dataclasses.dataclass
+class MilpResult:
+    status: int                 # scipy milp status (0 = optimal)
+    feasible: bool
+    cost_usd: float             # public-cloud cost of the incumbent
+    e: np.ndarray               # [J, M] 1 = private, 0 = public
+    s: np.ndarray               # [J, M] start times
+    mip_gap: float
+    objective_bound: float      # best provable bound on saved cost
+
+
+def solve_milp(
+    dag: AppDAG,
+    P_private: np.ndarray,
+    P_public: np.ndarray,
+    c_max: float,
+    upload: Optional[np.ndarray] = None,
+    download: Optional[np.ndarray] = None,
+    cost_model: CostModel = LAMBDA_COST,
+    include_sink_download: bool = True,
+    time_limit_s: float = 120.0,
+    mip_rel_gap: float = 1e-3,
+) -> MilpResult:
+    """Build and solve the appendix MILP.
+
+    Decision vars: start times s_{k,j}; e_{k,j} (1=private); replica
+    assignment x^i_{k,j}; pair orders y^r_{k,j}; transfer indicators
+    u_{k,j}, d_{k,j}. Objective (2): maximize saved cost sum e*H.
+    """
+    P_priv = np.asarray(P_private, dtype=np.float64)
+    P_pub = np.asarray(P_public, dtype=np.float64)
+    J, M = P_priv.shape
+    U = np.zeros((J, M)) if upload is None else np.asarray(upload, dtype=np.float64)
+    D = np.zeros((J, M)) if download is None else np.asarray(download, dtype=np.float64)
+    H = cost_model.np_cost(P_pub * 1e3, dag.mem_mb[None, :])
+    I = dag.replicas
+    Q = float(c_max + P_priv.sum() + P_pub.sum() + U.sum() + D.sum() + 1.0)
+    BIG = float(max(dag.stages[k].replicas for k in range(M)) + M + J + 1)
+
+    # ---- variable layout ------------------------------------------------
+    idx = 0
+    def _block(n):
+        nonlocal idx
+        lo = idx
+        idx += n
+        return lo
+    s0 = _block(J * M)
+    e0 = _block(J * M)
+    x_index: Dict[Tuple[int, int, int], int] = {}
+    for k in range(M):
+        for j in range(J):
+            for i in range(int(I[k])):
+                x_index[(j, k, i)] = _block(1)
+    y_index: Dict[Tuple[int, int, int], int] = {}
+    for k in range(M):
+        for j in range(J):
+            for r in range(j + 1, J):
+                y_index[(j, r, k)] = _block(1)
+    u0 = _block(J * M)
+    d0 = _block(J * M)
+    n_var = idx
+    S = lambda j, k: s0 + j * M + k
+    E = lambda j, k: e0 + j * M + k
+    Uv = lambda j, k: u0 + j * M + k
+    Dv = lambda j, k: d0 + j * M + k
+
+    rows: List[Dict[int, float]] = []
+    lbs: List[float] = []
+    ubs: List[float] = []
+    def _con(coef: Dict[int, float], lo: float, hi: float):
+        rows.append(coef)
+        lbs.append(lo)
+        ubs.append(hi)
+
+    sinks = set(dag.sinks())
+    sources = set(dag.sources())
+    for j in range(J):
+        for k in range(M):
+            # (3) deadline: s + Ppriv*e + Ppub*(1-e) [+ Ddl*(1-e) at sinks] <= Cmax
+            ddl = D[j, k] if (include_sink_download and k in sinks) else 0.0
+            _con({S(j, k): 1.0, E(j, k): P_priv[j, k] - P_pub[j, k] - ddl},
+                 -np.inf, c_max - P_pub[j, k] - ddl)
+            # (5) sum_i x = e
+            coef = {E(j, k): -1.0}
+            for i in range(int(I[k])):
+                coef[x_index[(j, k, i)]] = 1.0
+            _con(coef, 0.0, 0.0)
+            # source upload: batch input lives in private storage
+            if k in sources:
+                _con({S(j, k): 1.0, E(j, k): U[j, k]}, U[j, k], np.inf)
+    # (4) precedence + transfer latencies along edges
+    for j in range(J):
+        for (p, q) in dag.edges:
+            _con({S(j, q): 1.0, S(j, p): -1.0,
+                  E(j, p): -(P_priv[j, p] - P_pub[j, p]),
+                  Uv(j, p): -U[j, p], Dv(j, p): -D[j, p]},
+                 P_pub[j, p], np.inf)
+    # (6),(7) replica sequencing
+    for k in range(M):
+        for j in range(J):
+            for r in range(j + 1, J):
+                y = y_index[(j, r, k)]
+                for i in range(int(I[k])):
+                    xj = x_index[(j, k, i)]
+                    xr = x_index[(r, k, i)]
+                    _con({S(j, k): 1.0, S(r, k): -1.0, y: Q, xj: -Q, xr: -Q},
+                         P_priv[r, k] - 2 * Q, np.inf)
+                    _con({S(r, k): 1.0, S(j, k): -1.0, y: -Q, xj: -Q, xr: -Q},
+                         P_priv[j, k] - 3 * Q, np.inf)
+    # (8)-(11) transfer indicators via X_p = deg_p*e_p - sum_succ e_q
+    for j in range(J):
+        for p in range(M):
+            succ = dag.successors(p)
+            if not succ:
+                # sink download handled in (3); no upload var needed
+                _con({Uv(j, p): 1.0}, 0.0, 0.0)
+                _con({Dv(j, p): 1.0, E(j, p): 1.0}, 1.0, 1.0)  # d = 1-e at sinks
+                continue
+            xcoef = {E(j, p): float(len(succ))}
+            for q in succ:
+                xcoef[E(j, q)] = xcoef.get(E(j, q), 0.0) - 1.0
+            # (8): X - BIG*u >= 0.001 - BIG   (9): X - BIG*u <= 0
+            c8 = dict(xcoef); c8[Uv(j, p)] = c8.get(Uv(j, p), 0.0) - BIG
+            _con(c8, 0.001 - BIG, np.inf)
+            c9 = dict(xcoef); c9[Uv(j, p)] = c9.get(Uv(j, p), 0.0) - BIG
+            _con(c9, -np.inf, 0.0)
+            # (10): X + BIG*d <= BIG - 0.001  (11): X + BIG*d >= 0
+            c10 = dict(xcoef); c10[Dv(j, p)] = c10.get(Dv(j, p), 0.0) + BIG
+            _con(c10, -np.inf, BIG - 0.001)
+            c11 = dict(xcoef); c11[Dv(j, p)] = c11.get(Dv(j, p), 0.0) + BIG
+            _con(c11, 0.0, np.inf)
+    # (12) privacy pins
+    pins_lo = np.zeros(n_var)
+    pins_hi = np.ones(n_var)
+    pins_lo[:s0 + J * M] = 0.0
+    lb = np.zeros(n_var)
+    ub = np.ones(n_var)
+    ub[s0:s0 + J * M] = np.inf  # s >= 0 free above
+    for j in range(J):
+        for k in range(M):
+            if dag.stages[k].must_private:
+                lb[E(j, k)] = 1.0
+
+    # objective (2): maximize sum e*H  -> minimize -sum e*H
+    c = np.zeros(n_var)
+    for j in range(J):
+        for k in range(M):
+            c[E(j, k)] = -H[j, k]
+
+    A = sp.lil_matrix((len(rows), n_var))
+    for r, coef in enumerate(rows):
+        for v, val in coef.items():
+            A[r, v] = val
+    integrality = np.ones(n_var)
+    integrality[s0:s0 + J * M] = 0  # start times continuous
+
+    res = milp(
+        c=c,
+        constraints=LinearConstraint(A.tocsr(), np.asarray(lbs), np.asarray(ubs)),
+        integrality=integrality,
+        bounds=Bounds(lb, ub),
+        options={"time_limit": time_limit_s, "mip_rel_gap": mip_rel_gap,
+                 "presolve": True},
+    )
+    if res.x is None:
+        return MilpResult(status=int(res.status), feasible=False,
+                          cost_usd=float("inf"), e=np.zeros((J, M)),
+                          s=np.zeros((J, M)), mip_gap=float("inf"),
+                          objective_bound=0.0)
+    x = np.asarray(res.x)
+    e = np.rint(x[e0:e0 + J * M].reshape(J, M))
+    s = x[s0:s0 + J * M].reshape(J, M)
+    saved = float((e * H).sum())
+    total = float(H.sum())
+    return MilpResult(
+        status=int(res.status), feasible=True, cost_usd=total - saved,
+        e=e, s=s, mip_gap=float(getattr(res, "mip_gap", 0.0) or 0.0),
+        objective_bound=float(getattr(res, "mip_dual_bound", -res.fun) or -res.fun))
+
+
+def johnson_makespan(P: np.ndarray) -> float:
+    """Optimal F2||Cmax makespan via Johnson's rule. ``P``: [J, 2]."""
+    P = np.asarray(P, dtype=np.float64)
+    first = sorted((j for j in range(P.shape[0]) if P[j, 0] <= P[j, 1]),
+                   key=lambda j: P[j, 0])
+    last = sorted((j for j in range(P.shape[0]) if P[j, 0] > P[j, 1]),
+                  key=lambda j: -P[j, 1])
+    t1 = t2 = 0.0
+    for j in first + last:
+        t1 += P[j, 0]
+        t2 = max(t2, t1) + P[j, 1]
+    return t2
+
+
+def knapsack_lower_bound(P_private: np.ndarray, H: np.ndarray, c_max: float,
+                         replicas: int) -> float:
+    """Appendix special case (single stage == multiple knapsacks): an
+    *upper* bound on savable cost via the fractional LP relaxation (greedy
+    by H/P density), hence a *lower* bound on the optimal public cost."""
+    P = np.asarray(P_private, dtype=np.float64).ravel()
+    h = np.asarray(H, dtype=np.float64).ravel()
+    cap = replicas * c_max
+    order = np.argsort(-h / np.maximum(P, 1e-12))
+    saved = 0.0
+    for j in order:
+        take = min(1.0, max(0.0, (cap) / P[j]))
+        saved += take * h[j]
+        cap -= take * P[j]
+        if cap <= 0:
+            break
+    return float(h.sum() - saved)

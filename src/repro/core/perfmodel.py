@@ -1,0 +1,231 @@
+"""Performance models (Sec. IV-B) — closed-form ridge regression in JAX.
+
+The scheduler needs, per stage k and job j:
+  * P^private_{k,j}: private-cloud latency  = ridge(features) + overhead
+  * P^public_{k,j}:  public-cloud latency   = ridge(features)
+  * output size of stage k (features of downstream stages)
+
+The paper fits these with scikit-learn ridge + 5-fold grid search; we use
+the closed-form normal equations in jnp (vmap-able over folds x lambdas)
+so models can be refreshed on-device from streaming traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dag import AppDAG
+
+Array = jax.Array
+
+
+# -- ridge core ----------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RidgeModel:
+    """Standardized ridge regressor  y ~ ((x - mu)/sigma) . w + b."""
+
+    w: Array      # [D]
+    b: Array      # []
+    mu: Array     # [D]
+    sigma: Array  # [D]
+
+    def predict(self, X) -> Array:
+        X = jnp.atleast_2d(jnp.asarray(X, dtype=jnp.result_type(float)))
+        Z = (X - self.mu) / self.sigma
+        return Z @ self.w + self.b
+
+    def tree_flatten(self):
+        return (self.w, self.b, self.mu, self.sigma), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _standardize(X: Array) -> Tuple[Array, Array, Array]:
+    mu = X.mean(axis=0)
+    sigma = jnp.maximum(X.std(axis=0), 1e-12)
+    return (X - mu) / sigma, mu, sigma
+
+
+def fit_ridge(X, y, lam: float = 1.0) -> RidgeModel:
+    """Closed-form ridge with unpenalized intercept."""
+    X = jnp.asarray(X, dtype=jnp.result_type(float))
+    y = jnp.asarray(y, dtype=jnp.result_type(float))
+    Z, mu, sigma = _standardize(X)
+    yc = y - y.mean()
+    D = Z.shape[1]
+    A = Z.T @ Z + lam * jnp.eye(D, dtype=Z.dtype)
+    w = jnp.linalg.solve(A, Z.T @ yc)
+    b = y.mean()
+    return RidgeModel(w=w, b=b, mu=mu, sigma=sigma)
+
+
+def _cv_mse_one(Z, y, lam, fold_mask):
+    """MSE on one held-out fold, training on the rest (mask=1 -> held out)."""
+    keep = 1.0 - fold_mask
+    D = Z.shape[1]
+    Zw = Z * keep[:, None]
+    yw = y * keep
+    ybar = yw.sum() / jnp.maximum(keep.sum(), 1.0)
+    yc = (y - ybar) * keep
+    A = Zw.T @ Zw + lam * jnp.eye(D, dtype=Z.dtype)
+    w = jnp.linalg.solve(A, Zw.T @ yc)
+    pred = Z @ w + ybar
+    err = (pred - y) ** 2 * fold_mask
+    return err.sum() / jnp.maximum(fold_mask.sum(), 1.0)
+
+
+def grid_search_ridge(
+    X,
+    y,
+    lams: Sequence[float] = (1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0),
+    k: int = 5,
+    seed: int = 0,
+) -> Tuple[RidgeModel, float]:
+    """Paper's Grid Search + 5-fold CV, vectorized with vmap over
+    (lambda x fold). Returns (model fit on all data with best lam, best lam)."""
+    X = jnp.asarray(X, dtype=jnp.result_type(float))
+    y = jnp.asarray(y, dtype=jnp.result_type(float))
+    n = X.shape[0]
+    Z, _, _ = _standardize(X)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed), n)
+    fold_id = jnp.zeros(n, dtype=jnp.int32).at[perm].set(jnp.arange(n) % k)
+    masks = jnp.stack([(fold_id == f).astype(Z.dtype) for f in range(k)])  # [k, n]
+    lams_arr = jnp.asarray(lams, dtype=jnp.result_type(float))
+
+    mse = jax.vmap(  # over lambdas
+        lambda lam: jax.vmap(lambda m: _cv_mse_one(Z, y, lam, m))(masks).mean()
+    )(lams_arr)
+    best = int(jnp.argmin(mse))
+    return fit_ridge(X, y, float(lams_arr[best])), float(lams_arr[best])
+
+
+def mape(y_true, y_pred) -> float:
+    """Mean Absolute Percentage Error (%), as reported in Sec. V-B."""
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    denom = np.maximum(np.abs(y_true), 1e-12)
+    return float(np.mean(np.abs(y_true - y_pred) / denom) * 100.0)
+
+
+# -- per-application model sets -------------------------------------------
+
+# feature_builder(k, base_features[J,D0], insize[J]) -> X_k[J,Dk]
+FeatureBuilder = Callable[[int, np.ndarray, Optional[np.ndarray]], np.ndarray]
+
+
+def default_feature_builder(k: int, base: np.ndarray, insize: Optional[np.ndarray]) -> np.ndarray:
+    """Source stages see raw job features; downstream stages see the
+    predicted input size prepended to the raw features (Sec. IV-B: latency
+    models of later stages are parameterized by predicted data properties)."""
+    if insize is None:
+        return base
+    return np.concatenate([insize[:, None], base], axis=1)
+
+
+@dataclasses.dataclass
+class StageModels:
+    private: RidgeModel            # latency (s) in the private cloud
+    public: RidgeModel             # latency (s) in the public cloud
+    outsize: Optional[RidgeModel]  # output size (bytes) from stage features
+    overhead_s: float = 0.0        # framework overhead (mean over traces)
+    upload: Optional[RidgeModel] = None    # upload latency (s) vs bytes
+    download: Optional[RidgeModel] = None  # download latency (s) vs bytes
+
+
+@dataclasses.dataclass
+class AppPerfModel:
+    """All models for one application + DAG-aware feature propagation."""
+
+    dag: AppDAG
+    stages: List[StageModels]
+    feature_builder: FeatureBuilder = default_feature_builder
+
+    def predict(self, base_features: np.ndarray) -> Dict[str, np.ndarray]:
+        """Propagate predictions through the DAG.
+
+        Returns dict with P_private [J,M], P_public [J,M] (seconds),
+        sizes [J,M] (predicted output bytes), upload/download [J,M] (s).
+        """
+        base = np.atleast_2d(np.asarray(base_features, dtype=np.float64))
+        J, M = base.shape[0], self.dag.num_stages
+        P_priv = np.zeros((J, M))
+        P_pub = np.zeros((J, M))
+        sizes = np.zeros((J, M))
+        up = np.zeros((J, M))
+        down = np.zeros((J, M))
+        insize: Dict[int, Optional[np.ndarray]] = {}
+        for k in self.dag.topo_order():
+            preds = self.dag.predecessors(k)
+            if preds:
+                insize_k = np.sum([sizes[:, p] for p in preds], axis=0)
+            else:
+                insize_k = None
+            X_k = self.feature_builder(k, base, insize_k)
+            sm = self.stages[k]
+            P_priv[:, k] = np.maximum(
+                np.asarray(sm.private.predict(X_k)) + sm.overhead_s, 1e-4)
+            P_pub[:, k] = np.maximum(np.asarray(sm.public.predict(X_k)), 1e-4)
+            if sm.outsize is not None:
+                sizes[:, k] = np.maximum(np.asarray(sm.outsize.predict(X_k)), 1.0)
+            elif insize_k is not None:
+                sizes[:, k] = insize_k  # pass-through
+            else:
+                sizes[:, k] = base[:, 0]  # convention: feature 0 = input bytes
+            if sm.upload is not None:
+                up[:, k] = np.maximum(np.asarray(sm.upload.predict(sizes[:, k:k + 1])), 0.0)
+            if sm.download is not None:
+                down[:, k] = np.maximum(np.asarray(sm.download.predict(sizes[:, k:k + 1])), 0.0)
+            insize[k] = insize_k
+        return {"P_private": P_priv, "P_public": P_pub, "sizes": sizes,
+                "upload": up, "download": down}
+
+
+def fit_app_perf_model(
+    dag: AppDAG,
+    traces: Dict[str, np.ndarray],
+    lams: Sequence[float] = (1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0),
+    feature_builder: FeatureBuilder = default_feature_builder,
+    link_gbps: float = 1.0,
+    link_base_s: float = 0.02,
+) -> AppPerfModel:
+    """Fit every stage model from execution traces.
+
+    ``traces`` keys: base_features [N,D0], private [N,M], public [N,M],
+    outsize [N,M], overhead [N,M] (optional).  Upload/download latencies are
+    synthesized from a linear link model (bytes/bandwidth + base), matching
+    the paper's regularized-ridge treatment of transfer latencies.
+    """
+    base = np.asarray(traces["base_features"], dtype=np.float64)
+    priv = np.asarray(traces["private"], dtype=np.float64)
+    pub = np.asarray(traces["public"], dtype=np.float64)
+    outs = np.asarray(traces["outsize"], dtype=np.float64)
+    overhead = np.asarray(traces.get("overhead", np.zeros_like(priv)))
+    M = dag.num_stages
+    stage_models: List[StageModels] = []
+    # true input sizes per stage for feature building during training
+    insizes: Dict[int, Optional[np.ndarray]] = {}
+    for k in dag.topo_order():
+        preds = dag.predecessors(k)
+        insizes[k] = (np.sum([outs[:, p] for p in preds], axis=0) if preds else None)
+    # transfer models: fit on synthetic (bytes -> s) pairs spanning observed sizes
+    span = np.linspace(max(outs.min(), 1.0), outs.max() + 1.0, 64)[:, None]
+    lat = span[:, 0] / (link_gbps * 1e9 / 8.0) + link_base_s
+    xfer, _ = grid_search_ridge(span, lat, lams)
+    for k in range(M):
+        X_k = feature_builder(k, base, insizes[k])
+        ov = float(np.mean(overhead[:, k]))
+        m_priv, _ = grid_search_ridge(X_k, priv[:, k] - ov, lams)
+        m_pub, _ = grid_search_ridge(X_k, pub[:, k], lams)
+        m_out, _ = grid_search_ridge(X_k, outs[:, k], lams)
+        stage_models.append(StageModels(
+            private=m_priv, public=m_pub, outsize=m_out, overhead_s=ov,
+            upload=xfer, download=xfer))
+    return AppPerfModel(dag=dag, stages=stage_models, feature_builder=feature_builder)

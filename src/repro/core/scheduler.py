@@ -1,0 +1,78 @@
+"""SkedulixScheduler — the user-facing orchestration service (Sec. III-A).
+
+Ties together: perf models (predictions) -> Alg. 1 greedy scheduling ->
+hybrid execution (discrete-event sim standing in for the live platform).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .cost import CostModel, LAMBDA_COST
+from .dag import AppDAG
+from .perfmodel import AppPerfModel
+from .simulator import SimResult, simulate, simulate_all_private, simulate_all_public
+
+
+@dataclasses.dataclass
+class BatchReport:
+    result: SimResult
+    pred: Dict[str, np.ndarray]
+    order: str
+    c_max: float
+
+    def summary(self) -> Dict[str, float]:
+        r = self.result
+        return {
+            "makespan_s": r.makespan,
+            "c_max": self.c_max,
+            "cost_usd": r.cost_usd,
+            "met_deadline": float(r.met_deadline),
+            "offload_frac": r.offload_fraction,
+            "n_offloaded_stages": float(r.n_offloaded_stages),
+            "n_init_offloaded_jobs": float(r.n_init_offloaded_jobs),
+        }
+
+
+class SkedulixScheduler:
+    """Long-running scheduler service for one application.
+
+    ``perf_model`` provides P^private / P^public / transfer predictions;
+    ``schedule_batch`` runs Alg. 1 with the chosen priority order against
+    actual latencies (if given) to produce the executed schedule.
+    """
+
+    def __init__(self, dag: AppDAG, perf_model: Optional[AppPerfModel] = None,
+                 cost_model: CostModel = LAMBDA_COST):
+        self.dag = dag
+        self.perf_model = perf_model
+        self.cost_model = cost_model
+
+    def predict(self, base_features: np.ndarray) -> Dict[str, np.ndarray]:
+        if self.perf_model is None:
+            raise ValueError("no perf model attached")
+        return self.perf_model.predict(base_features)
+
+    def schedule_batch(
+        self,
+        c_max: float,
+        base_features: Optional[np.ndarray] = None,
+        pred: Optional[Dict[str, np.ndarray]] = None,
+        act: Optional[Dict[str, np.ndarray]] = None,
+        order: str = "spt",
+        **sim_kwargs,
+    ) -> BatchReport:
+        if pred is None:
+            pred = self.predict(base_features)
+        res = simulate(self.dag, pred, act, c_max=c_max, order=order,
+                       cost_model=self.cost_model, **sim_kwargs)
+        return BatchReport(result=res, pred=pred, order=order, c_max=c_max)
+
+    def baseline_all_public(self, pred, act=None) -> SimResult:
+        return simulate_all_public(self.dag, pred, act, cost_model=self.cost_model)
+
+    def baseline_all_private(self, pred, act=None, order="spt") -> SimResult:
+        return simulate_all_private(self.dag, pred, act, order=order,
+                                    cost_model=self.cost_model)

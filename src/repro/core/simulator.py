@@ -1,0 +1,287 @@
+"""Discrete-event simulator of the hybrid platform + Alg. 1 event loop.
+
+Stands in for the live AWS-Lambda/OpenFaaS deployment: private replicas are
+exclusive servers (I_k per stage), the public cloud has unlimited
+parallelism, and data transfers pay an upload/download latency. The
+*scheduler* sees only **predicted** latencies (from the perf models); the
+clock advances with **actual** latencies, so model error degrades schedule
+quality exactly as in the live system (Sec. V-C, Fig. 5).
+
+Semantics of one ACD sweep follow Alg. 1 lines 14-20 with the dispatched
+jobs removed as the loop progresses (offloading a job frees queue capacity
+for those behind it): a sequential kept-prefix scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cost import CostModel, LAMBDA_COST
+from .dag import AppDAG
+from .greedy import init_offload, t_max
+from .priority import ORDERS
+
+WAITING, QUEUED, RUNNING, DONE = 0, 1, 2, 3
+PRIVATE, PUBLIC = 0, 1
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    cost_usd: float
+    public_mask: np.ndarray      # [J, M] bool: ran in the public cloud
+    start: np.ndarray            # [J, M] stage start times (s)
+    end: np.ndarray              # [J, M] stage end times (s)
+    completion: np.ndarray       # [J] job completion (results in private storage)
+    n_offloaded_stages: int
+    n_init_offloaded_jobs: int
+    per_stage_offloads: np.ndarray  # [M]
+    deadline: float
+
+    @property
+    def offload_fraction(self) -> float:
+        return float(self.public_mask.mean())
+
+    @property
+    def met_deadline(self) -> bool:
+        return bool(self.makespan <= self.deadline + 1e-9)
+
+
+class _Sim:
+    def __init__(self, dag: AppDAG, pred: Dict[str, np.ndarray],
+                 act: Dict[str, np.ndarray], c_max: float, order: str,
+                 cost_model: CostModel, include_transfers: bool,
+                 init_phase: bool, adaptive: bool, t0: float,
+                 replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None):
+        self.dag = dag
+        self.J, self.M = pred["P_private"].shape
+        self.pred = pred
+        self.act = act
+        self.c_max = c_max
+        self.deadline = t0 + c_max
+        self.t0 = t0
+        self.order = order
+        self.cost_model = cost_model
+        self.include_transfers = include_transfers
+        self.adaptive = adaptive
+        self.init_phase = init_phase
+        # (stage, replica_idx) -> multiplicative slowdown (straggler injection)
+        self.replica_slowdown = replica_slowdown or {}
+
+        # priority keys: per-stage and whole-job, from *predicted* quantities
+        mem = dag.mem_mb
+        H_pred = cost_model.np_cost(pred["P_public"] * 1e3, mem[None, :])
+        key_fn = ORDERS[order]
+        self.stage_keys = np.stack(
+            [key_fn(pred["P_private"], H_pred, k) for k in range(self.M)], axis=1)
+        self.job_keys = key_fn(pred["P_private"], H_pred, None)
+        self.H_pred = H_pred
+        # Gamma(l): per-job critical-path remainder, predicted private latencies
+        self.path_rem = dag.longest_path_latency(pred["P_private"])  # [J, M]
+
+        # runtime state
+        self.status = np.full((self.J, self.M), WAITING, dtype=np.int8)
+        self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int8)
+        self.forced_public = np.zeros((self.J, self.M), dtype=bool)
+        self.start = np.full((self.J, self.M), np.nan)
+        self.end = np.full((self.J, self.M), np.nan)
+        self.completion = np.zeros(self.J)
+        self.queues: List[List[int]] = [[] for _ in range(self.M)]
+        self.free_replicas: List[List[int]] = [
+            list(range(dag.stages[k].replicas)) for k in range(self.M)]
+        self.cost = 0.0
+        self.n_offloaded = 0
+        self.per_stage_offloads = np.zeros(self.M, dtype=np.int64)
+        self.n_init_off = 0
+        self._heap: List[Tuple[float, int, Callable, tuple]] = []
+        self._seq = itertools.count()
+
+    # -- event plumbing -------------------------------------------------
+    def _at(self, t: float, fn: Callable, *args):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def run(self) -> SimResult:
+        self._initialize()
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            fn(t, *args)
+        makespan = float(np.max(self.completion) - self.t0) if self.J else 0.0
+        return SimResult(
+            makespan=makespan, cost_usd=self.cost,
+            public_mask=self.loc == PUBLIC, start=self.start, end=self.end,
+            completion=self.completion, n_offloaded_stages=self.n_offloaded,
+            n_init_offloaded_jobs=self.n_init_off,
+            per_stage_offloads=self.per_stage_offloads, deadline=self.c_max)
+
+    # -- Alg. 1 initialization phase ------------------------------------
+    def _initialize(self):
+        if self.init_phase:
+            C_total = self.pred["P_private"].sum(axis=1)
+            cap = t_max(self.dag.replicas, self.c_max)
+            off = init_offload(C_total, self.job_keys, cap)
+        else:
+            off = np.zeros(self.J, dtype=bool)
+        self.n_init_off = int(off.sum())
+        pinned = np.array([s.must_private for s in self.dag.stages])
+        for j in range(self.J):
+            if off[j]:
+                self.forced_public[j, ~pinned] = True  # Omega stages stay private
+        for j in range(self.J):
+            for k in self.dag.sources():
+                self._stage_ready(self.t0, j, k)
+        for k in range(self.M):
+            self._sweep_and_dispatch(self.t0, k)
+
+    # -- readiness / queueing -------------------------------------------
+    def _stage_ready(self, t: float, j: int, k: int):
+        """All predecessors of (j,k) are done: enqueue or go public."""
+        self.status[j, k] = QUEUED
+        if self.forced_public[j, k]:
+            self._start_public(t, j, k)
+        else:
+            self.queues[k].append(j)
+            self.queues[k].sort(key=lambda jj: (self.stage_keys[jj, k], jj))
+
+    def _on_queue_change(self, t: float, k: int):
+        self._sweep_and_dispatch(t, k)
+
+    def _sweep_and_dispatch(self, t: float, k: int):
+        """ACD kept-prefix scan (lines 14-20), then fill free replicas."""
+        if self.adaptive and self.queues[k]:
+            I_k = max(self.dag.stages[k].replicas, 1)
+            kept: List[int] = []
+            prefix = 0.0
+            for j in list(self.queues[k]):
+                if self.dag.stages[k].must_private:
+                    kept.append(j)
+                    prefix += self.pred["P_private"][j, k]
+                    continue
+                acd = self.deadline - (t + prefix / I_k + self.path_rem[j, k])
+                if acd < 0.0:
+                    self._offload_now(t, j, k)
+                else:
+                    kept.append(j)
+                    prefix += self.pred["P_private"][j, k]
+            self.queues[k] = kept
+        # dispatch to free replicas (head of queue first)
+        while self.free_replicas[k] and self.queues[k]:
+            j = self.queues[k].pop(0)
+            r = self.free_replicas[k].pop(0)
+            self._start_private(t, j, k, r)
+
+    # -- private execution ----------------------------------------------
+    def _start_private(self, t: float, j: int, k: int, r: int):
+        self.status[j, k] = RUNNING
+        self.loc[j, k] = PRIVATE
+        self.start[j, k] = t
+        dur = float(self.act["P_private"][j, k])
+        dur *= self.replica_slowdown.get((k, r), 1.0)
+        self._at(t + dur, self._private_done, j, k, r)
+
+    def _private_done(self, t: float, j: int, k: int, r: int):
+        self.status[j, k] = DONE
+        self.end[j, k] = t
+        self.free_replicas[k].append(r)
+        self._propagate_done(t, j, k)
+        self._on_queue_change(t, k)
+
+    # -- public execution -------------------------------------------------
+    def _offload_now(self, t: float, j: int, k: int):
+        """Job j evicted from queue k: stage k + all descendants go public
+        (privacy-pinned stages excepted, constraint (12))."""
+        self.forced_public[j, k] = True
+        for d in self.dag.descendants(k):
+            if not self.dag.stages[d].must_private:
+                self.forced_public[j, d] = True
+        self._start_public(t, j, k)
+
+    def _start_public(self, t: float, j: int, k: int):
+        self.status[j, k] = RUNNING
+        self.loc[j, k] = PUBLIC
+        self.n_offloaded += 1
+        self.per_stage_offloads[k] += 1
+        up = 0.0
+        if self.include_transfers:
+            # upload whenever some input of stage k lives in private storage
+            preds = self.dag.predecessors(k)
+            needs_up = (not preds) or any(self.loc[j, p] == PRIVATE for p in preds)
+            if needs_up:
+                up = float(self.act["upload"][j, k])
+        self.start[j, k] = t + up
+        dur = float(self.act["P_public"][j, k])
+        self.cost += float(self.cost_model.np_cost(
+            dur * 1e3, self.dag.stages[k].mem_mb))
+        self._at(t + up + dur, self._public_done, j, k)
+
+    def _public_done(self, t: float, j: int, k: int):
+        self.status[j, k] = DONE
+        self.end[j, k] = t
+        self._propagate_done(t, j, k)
+
+    # -- DAG propagation ---------------------------------------------------
+    def _propagate_done(self, t: float, j: int, k: int):
+        for q in self.dag.successors(k):
+            if self.status[j, q] == WAITING and all(
+                    self.status[j, p] == DONE for p in self.dag.predecessors(q)):
+                self._stage_ready(t, j, q)
+                if not self.forced_public[j, q]:
+                    self._on_queue_change(t, q)
+        if k in self.dag.sinks():
+            down = 0.0
+            if self.include_transfers and self.loc[j, k] == PUBLIC:
+                down = float(self.act["download"][j, k])
+            self.completion[j] = max(self.completion[j], t + down)
+
+
+def simulate(
+    dag: AppDAG,
+    pred: Dict[str, np.ndarray],
+    act: Optional[Dict[str, np.ndarray]] = None,
+    c_max: float = 60.0,
+    order: str = "spt",
+    cost_model: CostModel = LAMBDA_COST,
+    include_transfers: bool = True,
+    init_phase: bool = True,
+    adaptive: bool = True,
+    t0: float = 0.0,
+    replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
+) -> SimResult:
+    """Run Alg. 1 over the hybrid platform simulator.
+
+    ``pred``/``act``: dicts with P_private, P_public [J,M] (s) and upload,
+    download [J,M] (s). ``act`` defaults to ``pred`` (perfect models).
+    ``replica_slowdown`` injects stragglers: {(stage, replica): factor}.
+    """
+    act = act or pred
+    for d in (pred, act):
+        d.setdefault("upload", np.zeros_like(d["P_private"]))
+        d.setdefault("download", np.zeros_like(d["P_private"]))
+    sim = _Sim(dag, pred, act, c_max, order, cost_model, include_transfers,
+               init_phase, adaptive, t0, replica_slowdown)
+    return sim.run()
+
+
+def simulate_all_public(dag, pred, act=None, cost_model=LAMBDA_COST,
+                        include_transfers=True) -> SimResult:
+    """Baseline: everything offloaded at t0 (capacity prefix = 0)."""
+    act = act or pred
+    J = pred["P_private"].shape[0]
+    pred2 = dict(pred)
+    pred2["P_private"] = np.full_like(pred["P_private"], 1e12)  # nothing fits
+    res = simulate(dag, pred2, act, c_max=0.0, order="spt",
+                   cost_model=cost_model, include_transfers=include_transfers,
+                   adaptive=False)
+    return dataclasses.replace(res, deadline=res.makespan)
+
+
+def simulate_all_private(dag, pred, act=None, order: str = "spt",
+                         cost_model=LAMBDA_COST) -> SimResult:
+    """Baseline: C_max large enough that nothing offloads (Sec. V-C)."""
+    act = act or pred
+    big = float(np.sum((act or pred)["P_private"])) + 1e6
+    return simulate(dag, pred, act, c_max=big, order=order,
+                    cost_model=cost_model, init_phase=True, adaptive=True)

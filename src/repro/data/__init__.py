@@ -1,0 +1,5 @@
+# Deterministic synthetic data pipelines (stateless indexing: resumable
+# and elastic without skew).
+from .pipeline import DataConfig, SyntheticLM
+
+__all__ = ["DataConfig", "SyntheticLM"]

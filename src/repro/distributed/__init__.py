@@ -1,0 +1,9 @@
+# Distribution layer: sharding rules (DP/TP/EP/SP + pod axis), ZeRO-1
+# optimizer partitioning, GPipe pipeline, int8 gradient compression.
+from .sharding import (MeshSharder, ShardingRules, batch_shardings,
+                       cache_shardings, opt_state_shardings, param_shardings,
+                       replicated)
+
+__all__ = ["ShardingRules", "MeshSharder", "param_shardings",
+           "opt_state_shardings", "cache_shardings", "batch_shardings",
+           "replicated"]

@@ -1,0 +1,65 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map + ppermute).
+
+Stage s holds layer slice s (params sharded on the stage axis outside);
+microbatches flow through collective_permute in a (n_micro + n_stages - 1)
+step schedule. Used on the 'pod' axis in multi-pod training configs —
+cross-pod DCN then carries only [mb, S, d] activations per tick instead of
+whole-model gradients.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+def gpipe(stage_fn: Callable[[Params, jax.Array], jax.Array],
+          mesh: Mesh, axis: str, n_stages: int, n_micro: int):
+    """Build fn(stage_params, x_micro) -> y_micro.
+
+    ``stage_params``: leaves with leading dim n_stages (sliced per stage by
+    shard_map). ``x_micro``: [n_micro, mb, ...] microbatches (replicated).
+    Returns [n_micro, mb, ...] outputs (replicated; computed by last stage).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def run(params, xs):                     # params: this stage's slice
+        params = jax.tree_util.tree_map(lambda p: p[0], params)
+        stage = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        perm_fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(t, carry):
+            recv, outs = carry
+            mb_idx = t - stage
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            x_stage0 = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            x_in = jnp.where(stage == 0, x_stage0, recv)
+            y = stage_fn(params, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            nxt = jax.lax.ppermute(y, axis, perm_fwd)
+            write = active & (stage == n_stages - 1)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(write, y, jax.lax.dynamic_index_in_dim(
+                    outs, jnp.clip(mb_idx, 0, n_micro - 1), 0, keepdims=False)),
+                jnp.clip(mb_idx, 0, n_micro - 1), 0)
+            return nxt, outs
+
+        init = (jnp.zeros(mb_shape, xs.dtype),
+                jnp.zeros((n_micro,) + mb_shape, xs.dtype))
+        _, outs = jax.lax.fori_loop(0, n_micro + n_stages - 1, tick, init)
+        # replicate the last stage's outputs to every stage
+        outs = jax.lax.psum(
+            outs * (stage == n_stages - 1).astype(outs.dtype), axis)
+        return outs
+
+    pspec = jax.tree_util.tree_map(lambda _: P(axis), {"x": 0})["x"]
+    return shard_map(run, mesh=mesh,
+                     in_specs=(P(axis), P()),
+                     out_specs=P(), check_rep=False)

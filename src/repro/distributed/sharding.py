@@ -1,0 +1,331 @@
+"""Sharding rules: DP / TP / EP / SP over the production mesh.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model')
+multi-pod. Batch shards over (pod, data); weights TP over 'model'
+(output-dim preferred, input-dim fallback); MoE experts EP over 'model'
+with expert-FFN FSDP over 'data'; decode KV caches shard kv-heads over
+'model' when divisible, otherwise the *sequence* dim (flash-decoding
+style — works for any GQA ratio incl. MQA). Every rule checks
+divisibility and degrades to replication instead of failing, so all
+40 (arch x shape) cells lower on both meshes.
+
+ZeRO-1: optimizer state specs add the 'data' axis on the largest
+still-unsharded divisible dim of each parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.layers import Sharder
+
+Params = Dict[str, Any]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Computes PartitionSpecs for one (cfg, mesh) pair.
+
+    ``fold_model=False`` keeps 'model' out of the batch axes (pure
+    TP + Megatron-SP residual sharding instead of the FSDP-flavored
+    batch-over-all-chips default) — a §Perf hillclimb policy."""
+
+    cfg: ModelConfig
+    mesh: Mesh
+    fold_model: bool = True
+    # Gather TOKENS across 'data' inside the expert einsums instead of
+    # letting XLA gather the (30x larger) ff-sharded expert weights: the
+    # expert compute grid becomes (E x ff) = (model x data) and activations
+    # are broadcast over 'data' (§Perf arctic iteration).
+    moe_token_gather: bool = False
+    # Weight-stationary 2D sharding: every weight matrix [in, out] shards
+    # in->'data', out->'model'; contractions over the in-dim produce small
+    # activation psums instead of per-layer weight all-gathers (§Perf).
+    w2d: bool = False
+
+    def __post_init__(self):
+        self.m = _axis_size(self.mesh, "model")
+        self.d = _axis_size(self.mesh, "data")
+        self.b_axes = batch_axes(self.mesh)
+        self.b = int(np.prod([_axis_size(self.mesh, a) for a in self.b_axes]))
+
+    # -- generic 2D weight: prefer output-dim TP, fall back to input-dim --
+    def w2(self, a: int, b: int, prefer_out: bool = True) -> P:
+        if self.w2d and _div(a, self.d) and _div(b, self.m):
+            return P("data", "model")        # weight-stationary 2D tiles
+        if prefer_out and _div(b, self.m):
+            return P(None, "model")
+        if _div(a, self.m):
+            return P("model", None)
+        if _div(b, self.m):
+            return P(None, "model")
+        return P(None, None)
+
+    def batch_dim(self, n: int):
+        """Greedy (pod, data[, model]) sharding of the batch dim.
+
+        Non-MoE archs fold 'model' into the batch axes when it divides —
+        tokens/chip drop 16x and attention becomes chip-local (weights
+        stay 'model'-sharded; XLA turns the contraction into per-layer
+        FSDP-style gathers under the scan). MoE archs keep 'model' for
+        expert parallelism."""
+        cand = list(self.b_axes)
+        if self.fold_model and not self.cfg.num_experts:
+            cand.append("model")
+        axes = []
+        rem = n
+        for a in cand:
+            s = _axis_size(self.mesh, a)
+            if s > 1 and rem % s == 0:
+                axes.append(a)
+                rem //= s
+            else:
+                break
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    # -- named activation hints (used by MeshSharder) --
+    def hint(self, name: str, shape: Tuple[int, ...]) -> Optional[P]:
+        cfg = self.cfg
+        bd = self.batch_dim(shape[0]) if shape else None
+        bd_axes = (bd,) if isinstance(bd, str) else (bd or ())
+
+        def free(axis: str) -> bool:
+            return axis not in bd_axes
+
+        if name in ("activations", "residual"):        # [B, S, d]
+            # Megatron-SP flavored: shard the residual's sequence dim over
+            # 'model' when batch doesn't use it — the remat-saved carry
+            # shrinks 16x; layers re-gather transiently.
+            seq_ok = (len(shape) == 3 and free("model")
+                      and shape[1] > 1 and _div(shape[1], self.m))
+            return P(bd, "model" if seq_ok else None, None)
+        if name == "ffn_hidden":                       # [B, S, ff]
+            return P(bd, None, "model" if free("model")
+                     and _div(shape[-1], self.m) else None)
+        if name == "rnn_hidden":                       # [B, S, d]
+            return P(bd, None, "model" if free("model")
+                     and _div(shape[-1], self.m) else None)
+        if name in ("attn_heads", "attn_kv"):          # [B, H, S, D]
+            h = shape[1]
+            return P(bd, "model" if free("model") and _div(h, self.m)
+                     else None, None, None)
+        if name == "kv_cache":                         # [B, Hkv, S, D]
+            hkv, s = shape[1], shape[2]
+            if free("model") and _div(hkv, self.m):
+                return P(bd, "model", None, None)
+            if free("model") and _div(s, self.m):
+                return P(bd, None, "model", None)
+            return P(bd, None, None, None)
+        if name == "moe_expert_in5":                   # [B, N, E, C, d]
+            e = shape[2]
+            e_ok = free("model") and _div(e, self.m)
+            if self.moe_token_gather and self._moe_ffn_fsdp():
+                return P(None, None, "model" if _div(e, self.m) else None,
+                         None, None)
+            return P(bd, None, "model" if e_ok else None, None, None)
+        if name == "moe_hidden5":                      # [B, N, E, C, ff]
+            e, ff = shape[2], shape[4]
+            if self.moe_token_gather and self._moe_ffn_fsdp():
+                return P(None, None, "model" if _div(e, self.m) else None,
+                         None, "data" if _div(ff, self.d) else None)
+            return P(bd, None, "model" if free("model") and _div(e, self.m)
+                     else None, None,
+                     "data" if free("data") and _div(ff, self.d)
+                     and self._moe_ffn_fsdp() else None)
+        return None
+
+    def _moe_ffn_fsdp(self) -> bool:
+        """Shard expert-FFN hidden over 'data' only for very large MoEs."""
+        cfg = self.cfg
+        if not cfg.num_experts:
+            return False
+        moe_bytes = cfg.num_experts * cfg.d_model * cfg.d_ff * (3 if cfg.glu else 2) * 2
+        return moe_bytes * cfg.num_layers > 64e9   # > 64 GB of expert weights
+
+    # -- parameter tree --------------------------------------------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        cfg = self.cfg
+        # strip leading scan-stack dims: specs computed on trailing dims
+        # (layer-stacked leaves get None prepended by caller)
+        last = path.split("/")[-1]
+        if last in ("scale", "bias", "lam", "ln_scale"):
+            return P(*(None,) * len(shape))
+        if last == "pos_embed":
+            return P(None, "model" if _div(shape[-1], self.m) else None)
+        if last == "embed":
+            return P(None, "model" if _div(shape[-1], self.m) else None)
+        if last == "lm_head":
+            return P(None, "model" if _div(shape[-1], self.m) else None)
+        if last == "router":
+            return P(None, None)
+        if last == "u":                                 # rwkv bonus [H, hd]
+            return P("model" if _div(shape[0], self.m) else None, None)
+        if last == "mix":
+            return P(None, None)
+        if last == "conv":                              # [K, d]
+            return P(None, "model" if _div(shape[-1], self.m) else None)
+        if last in ("bq", "bk", "bv"):
+            return P("model" if _div(shape[-1], self.m) else None)
+        if last in ("w_up", "w_gate") and len(shape) == 3:   # MoE [E, d, ff]
+            e, d_in, ff = shape
+            if self.w2d and _div(e, self.m) and _div(d_in, self.d):
+                return P("model", "data", None)   # weight-stationary tiles
+            return P("model" if _div(e, self.m) else None, None,
+                     "data" if self._moe_ffn_fsdp() and _div(ff, self.d) else None)
+        if last == "w_down" and len(shape) == 3:             # MoE [E, ff, d]
+            e, ff, _ = shape
+            if self.w2d and _div(e, self.m) and _div(ff, self.d):
+                return P("model", "data", None)
+            return P("model" if _div(e, self.m) else None,
+                     "data" if self._moe_ffn_fsdp() and _div(ff, self.d) else None,
+                     None)
+        if last in ("wo", "w_down", "w_out", "w_o"):         # [in, d]
+            return self.w2(shape[0], shape[1], prefer_out=False)
+        if len(shape) == 2:
+            return self.w2(shape[0], shape[1], prefer_out=True)
+        return P(*(None,) * len(shape))
+
+    def zero_spec(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Optimizer-state / inference-weight spec: add 'data' on the
+        largest free divisible dim (ZeRO partitioning). No-op when the
+        spec already uses 'data'."""
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        used = {a for p in parts if p is not None
+                for a in ((p,) if isinstance(p, str) else p)}
+        if "data" in used:
+            return P(*parts)
+        cand = [(shape[i], i) for i in range(len(shape))
+                if parts[i] is None and _div(shape[i], self.d)]
+        if cand:
+            _, i = max(cand)
+            parts[i] = "data"
+        return P(*parts)
+
+
+class MeshSharder(Sharder):
+    """with_sharding_constraint by logical name, divisibility-checked."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __call__(self, x: jax.Array, name: str) -> jax.Array:
+        spec = self.rules.hint(name, tuple(x.shape))
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.rules.mesh, spec))
+
+
+# -- whole-tree spec builders -------------------------------------------
+
+def _tree_paths(tree: Params, prefix: str = "") -> Any:
+    """Map leaves -> (path, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: ("/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                                for k in kp), x), tree)
+
+
+def param_shardings(rules: ShardingRules, params: Params,
+                    zero: bool = False) -> Params:
+    """NamedSharding tree for a parameter pytree (handles scan-stacked
+    leaves: leading layer dim is never sharded).
+
+    ``zero=True`` additionally spreads each weight over the 'data' axis
+    (ZeRO-3-flavored inference sharding: weights gathered per layer under
+    the scan — used for decode where there is no optimizer state)."""
+
+    def spec_for(kp, x) -> NamedSharding:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        shape = tuple(x.shape)
+        stacked = "scan_layers" in path or path.startswith("encoder/layers")
+        core = shape[1:] if stacked and len(shape) >= 1 else shape
+        spec = rules.param_spec(path, core)
+        if stacked:
+            spec = P(None, *spec)
+        if zero:
+            spec = rules.zero_spec(spec, shape)
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def opt_state_shardings(rules: ShardingRules, params: Params) -> Params:
+    """ZeRO-1 specs for per-param optimizer moments."""
+
+    def spec_for(kp, x) -> NamedSharding:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        shape = tuple(x.shape)
+        stacked = "scan_layers" in path or path.startswith("encoder/layers")
+        core = shape[1:] if stacked else shape
+        spec = rules.param_spec(path, core)
+        if stacked:
+            spec = P(None, *spec)
+        spec = rules.zero_spec(spec, shape)
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_shardings(rules: ShardingRules, cache: Params) -> Params:
+    """Decode-cache tree: KV [.., B, Hkv, S, D] / recurrent states."""
+
+    def spec_for(kp, x) -> NamedSharding:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        shape = tuple(x.shape)
+        stacked = path.startswith("scan/")
+        core = shape[1:] if stacked else shape
+        last = path.split("/")[-1]
+        if last in ("k", "v", "ck", "cv") and len(core) == 4:
+            spec = rules.hint("kv_cache", core)
+        elif last == "wkv" and len(core) == 4:          # [B, H, dk, dv]
+            bd = rules.batch_dim(core[0])
+            spec = P(bd, "model" if _div(core[1], rules.m) else None, None, None)
+        elif last == "h" and len(core) == 2:            # [B, d]
+            bd = rules.batch_dim(core[0])
+            spec = P(bd, "model" if _div(core[1], rules.m) else None)
+        elif last in ("conv", "shift") and len(core) == 3:
+            bd = rules.batch_dim(core[0])
+            spec = P(bd, None, "model" if _div(core[2], rules.m) else None)
+        else:
+            spec = P(*(None,) * len(core))
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def batch_shardings(rules: ShardingRules, batch: Params) -> Params:
+    """Input batch: shard dim 0 over (pod, data)."""
+
+    def spec_for(x) -> NamedSharding:
+        bd = rules.batch_dim(x.shape[0]) if x.ndim else None
+        return NamedSharding(rules.mesh,
+                             P(bd, *(None,) * (max(x.ndim, 1) - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch)
+
+
+def replicated(mesh: Mesh, tree: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(*(None,) * x.ndim)), tree)

@@ -1,0 +1,18 @@
+# Pallas TPU kernels for the compute hot-spots of the *scheduled workloads*
+# (the paper's contribution is the scheduler; these are the stage programs
+# it schedules + the serving-path attention/recurrence kernels):
+#   matmul          — Matrix-app MM stage (MXU tiled, fp32 accumulate)
+#   flash_attention — prefill attention (online softmax, causal/window, GQA)
+#   flash_decode    — one-token decode vs long KV (GQA rows on the MXU)
+#   rglru           — RecurrentGemma RG-LRU scan (time-sequential, VPU)
+#   rwkv6           — RWKV-6 WKV recurrence (rank-1 state updates)
+# ops.py = jit'd wrappers (ref fallback + interpret on CPU); ref.py = oracles.
+from . import ops, ref
+from .flash_attention import flash_attention
+from .flash_decode import flash_decode
+from .matmul import matmul
+from .rglru import rglru
+from .rwkv6 import rwkv6
+
+__all__ = ["ops", "ref", "matmul", "flash_attention", "flash_decode",
+           "rglru", "rwkv6"]

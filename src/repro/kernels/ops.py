@@ -1,0 +1,62 @@
+"""jit'd public wrappers over the Pallas kernels with jnp reference
+fallbacks.
+
+``use_pallas=False`` (default) routes to the pure-jnp oracle — the path
+used by dry-run lowering/roofline on the CPU backend (Pallas Mosaic only
+lowers for TPU). ``use_pallas=True`` uses the kernel; on a non-TPU backend
+it automatically switches the kernel to interpret mode so tests exercise
+the real kernel body everywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import flash_decode as _fd
+from . import matmul as _mm
+from . import ref
+from . import rglru as _rg
+from . import rwkv6 as _rk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(x, y, *, use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.matmul_ref(x, y)
+    return _mm.matmul(x, y, interpret=_interpret(), **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, scale=None,
+                    use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=_interpret(), **kw)
+
+
+def flash_decode(q, k, v, length=None, *, scale=None,
+                 use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.flash_decode_ref(q, k, v, length=length, scale=scale)
+    return _fd.flash_decode(q, k, v, length, scale=scale,
+                            interpret=_interpret(), **kw)
+
+
+def rglru(x, a, h0=None, *, use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.rglru_ref(x, a, h0)
+    return _rg.rglru(x, a, h0, interpret=_interpret(), **kw)
+
+
+def rwkv6(r, k, v, w, u, s0=None, *, use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.rwkv6_ref(r, k, v, w, u, s0)
+    return _rk.rwkv6(r, k, v, w, u, s0, interpret=_interpret(), **kw)

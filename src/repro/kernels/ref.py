@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the *lowering* path used by the dry-run/roofline on the CPU
+backend, so `cost_analysis()` FLOPs reflect the real math (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain matmul in fp32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _expand_kv(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """[B, Hkv, S, D] -> [B, Hq, S, D] by repeating each kv head."""
+    b, hkv, s, d = k.shape
+    group = n_q_heads // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def flash_attention_ref(
+    q: jax.Array,          # [B, Hq, Sq, D]
+    k: jax.Array,          # [B, Hkv, Sk, D]
+    v: jax.Array,          # [B, Hkv, Sk, D]
+    causal: bool = True,
+    window: Optional[int] = None,   # local attention window (None = full)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference multi-head attention with GQA, causal and sliding-window
+    masks. O(S^2) memory — oracle only."""
+    b, hq, sq, d = q.shape
+    scale = (d ** -0.5) if scale is None else scale
+    kk = _expand_kv(k, hq)
+    vv = _expand_kv(v, hq)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    sk = k.shape[2]
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned queries
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_decode_ref(
+    q: jax.Array,          # [B, Hq, D] single new token
+    k: jax.Array,          # [B, Hkv, S, D] cache
+    v: jax.Array,          # [B, Hkv, S, D]
+    length: Optional[jax.Array] = None,  # [B] valid cache lengths
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, hq, d = q.shape
+    out = flash_attention_ref(q[:, :, None], k, v, causal=False, scale=scale)
+    if length is not None:
+        # mask out positions >= length before softmax: recompute with mask
+        hkv = k.shape[1]
+        kk = _expand_kv(k, hq)
+        vv = _expand_kv(v, hq)
+        s = (d ** -0.5) if scale is None else scale
+        logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * s
+        valid = jnp.arange(k.shape[2])[None, :] < length[:, None]
+        logits = jnp.where(valid[:, None], logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhk,bhkd->bhd", p, vv.astype(jnp.float32)).astype(q.dtype)
+    return out[:, :, 0]
+
+
+def rglru_ref(x: jax.Array, a: jax.Array, h0: Optional[jax.Array] = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU linear recurrence (RecurrentGemma):
+
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t
+
+    x, a: [B, T, D] (a in (0,1)); returns (y [B,T,D], h_T [B,D])."""
+    x32, a32 = x.astype(jnp.float32), a.astype(jnp.float32)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a32 ** 2, 0.0)) * x32
+
+    def step(h, ts):
+        a_t, g_t = ts
+        h = a_t * h + g_t
+        return h, h
+
+    init = jnp.zeros_like(x32[:, 0]) if h0 is None else h0.astype(jnp.float32)
+    hT, ys = jax.lax.scan(step, init,
+                          (a32.swapaxes(0, 1), gated.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hT
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: Optional[jax.Array] = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 (Finch) WKV recurrence with data-dependent decay.
+
+    r,k,w: [B, H, T, Dk]; v: [B, H, T, Dv]; u: [H, Dk].
+        o_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+        S_t = diag(w_t) S_{t-1} + k_t^T v_t          (w_t in (0,1))
+    Returns (o [B,H,T,Dv], S_T [B,H,Dk,Dv])."""
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+    b, h, t, dk = r32.shape
+    dv = v32.shape[-1]
+
+    def step(S, ts):
+        r_t, k_t, v_t, w_t = ts                       # [B,H,Dk]/[B,H,Dv]
+        kv = k_t[..., :, None] * v_t[..., None, :]    # [B,H,Dk,Dv]
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, o
+
+    init = (jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None
+            else s0.astype(jnp.float32))
+    ST, os_ = jax.lax.scan(
+        step, init,
+        tuple(x.swapaxes(0, 2).swapaxes(1, 2)      # [T,B,H,...]
+              for x in (r32, k32, v32, w32)))
+    return os_.swapaxes(0, 1).swapaxes(1, 2).astype(v.dtype), ST

@@ -1,0 +1,11 @@
+# Launch layer: production meshes, input specs, the multi-pod dry-run,
+# roofline analysis, and train/serve entrypoints.
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS (512 host devices) before jax initializes.
+from .mesh import make_production_mesh, make_test_mesh
+from .roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, RooflineTerms,
+                       collective_bytes, model_flops_estimate, roofline)
+
+__all__ = ["make_production_mesh", "make_test_mesh", "collective_bytes",
+           "roofline", "RooflineTerms", "model_flops_estimate",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW"]

@@ -1,0 +1,357 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step including the
+sharded optimizer update; prefill; or one-token decode with donated
+caches), lowers it with ShapeDtypeStruct inputs under the production mesh
+in_shardings, compiles, and records memory_analysis / cost_analysis /
+collective-bytes + roofline terms to JSON.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+# (no `from __future__ import annotations`: the XLA_FLAGS lines must be
+# the first statements in this module)
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ARCHS, SHAPES, ShapeSpec, cell_applicable, get_config
+from ..distributed.sharding import (MeshSharder, ShardingRules, batch_shardings,
+                                    cache_shardings, param_shardings)
+from ..models.config import ModelConfig
+from ..models.model import Model
+from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.train_loop import make_train_step
+from .mesh import make_production_mesh
+from .roofline import collective_bytes, model_flops_estimate, roofline
+from .specs import input_specs
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """Optimizer-state dtype policy: int8 moments for >100B-param models
+    (arctic), bf16 for >40B (internvl2), fp32 otherwise (DESIGN.md §6)."""
+    n = cfg.param_count()
+    if n > 100e9:
+        sd = "int8"
+    elif n > 40e9:
+        sd = "bfloat16"
+    else:
+        sd = "float32"
+    return AdamWConfig(state_dtype=sd)
+
+
+def opt_state_sharding_tree(rules: ShardingRules, opt_spec, params_sh):
+    """Shardings for AdamWState.
+
+    int8 moments are shape-preserving: `q` has the parameter's shape and
+    takes the parameter's ZeRO spec verbatim; `scale`/`lo` ([..., nb, 1]
+    per last-dim block) take the spec minus its last axis."""
+
+    def moments(tree_spec):
+        def leaf_sh(kp, x):
+            path = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+            last = path[-1]
+            core_path = "/".join(p for p in path
+                                 if p not in ("q", "scale", "lo"))
+            stacked = "scan_layers" in core_path or core_path.startswith(
+                "encoder/layers")
+            if last in ("q", "scale", "lo"):
+                # recover the parameter spec from the param-shaped `q`
+                if last == "q":
+                    core = tuple(x.shape[1:]) if stacked else tuple(x.shape)
+                    spec = rules.param_spec(core_path, core)
+                    if stacked:
+                        spec = P(None, *spec)
+                    spec = rules.zero_spec(spec, tuple(x.shape))
+                    return NamedSharding(rules.mesh, spec)
+                # scale/lo: [..., nb, 1] — drop sharding on trailing dims
+                core = tuple(x.shape[1:]) if stacked else tuple(x.shape)
+                pspec = rules.param_spec(core_path, core[:-2] + (1,))
+                parts = list(pspec)[:len(core) - 2] + [None, None]
+                parts = parts[:len(core)]
+                if stacked:
+                    parts = [None] + parts
+                spec = rules.zero_spec(P(*parts), tuple(x.shape))
+                return NamedSharding(rules.mesh, spec)
+            # plain-array moment: param spec + ZeRO
+            core = tuple(x.shape[1:]) if stacked else tuple(x.shape)
+            spec = rules.param_spec(core_path, core)
+            if stacked:
+                spec = P(None, *spec)
+            spec = rules.zero_spec(spec, tuple(x.shape))
+            return NamedSharding(rules.mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(leaf_sh, tree_spec)
+
+    step_sh = NamedSharding(rules.mesh, P())
+    return type(opt_spec)(step=step_sh, m=moments(opt_spec.m),
+                          v=moments(opt_spec.v))
+
+
+def loss_chunk_for(cfg: ModelConfig, mesh) -> int:
+    m = mesh.shape.get("model", 1)
+    v_local = cfg.vocab_size / (m if cfg.vocab_size % m == 0 else 1)
+    if v_local > 50000:
+        return 128
+    if v_local > 12000:
+        return 256
+    return 512
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    skipped: bool = False
+    reason: str = ""
+    compile_s: float = 0.0
+    n_chips: int = 0
+    memory: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cost: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collectives: Dict[str, int] = dataclasses.field(default_factory=dict)
+    terms: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    variant: str = "baseline"
+
+
+def _lower_and_compile(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                       remat: bool = True, moe_dispatch: str = "einsum",
+                       fold_model: bool = True, moe_token_gather: bool = False,
+                       w2d: bool = False, zero3: bool = False):
+    """Build the real step for one cell and compile it under the mesh."""
+    rules = ShardingRules(cfg, mesh, fold_model=fold_model,
+                          moe_token_gather=moe_token_gather, w2d=w2d)
+    model = Model(cfg, shard=MeshSharder(rules), use_pallas=False,
+                  remat=remat, loss_chunk=loss_chunk_for(cfg, mesh),
+                  moe_dispatch=moe_dispatch)
+    with mesh:
+        key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        params_spec = jax.eval_shape(model.init, key_spec)
+        params_sh = param_shardings(rules, params_spec)
+        specs = input_specs(model, shape)
+        if shape.kind == "train":
+            if zero3:
+                # ZeRO-3: params stored fully sharded; grads reduce-scatter
+                # instead of all-reduce; update entirely local
+                params_sh = param_shardings(rules, params_spec, zero=True)
+            ocfg = opt_config_for(cfg)
+            opt_spec = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_spec)
+            opt_sh = opt_state_sharding_tree(rules, opt_spec, params_sh)
+            batch_sh = batch_shardings(rules, specs)
+            step = make_train_step(model, ocfg)
+            # explicit out_shardings: without them XLA may replicate the
+            # new params/opt outputs, breaking donation (observed 42 GiB
+            # of replicated outputs on arctic-480b)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh,
+                                            NamedSharding(mesh, P())),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_spec, opt_spec, specs)
+        elif shape.kind == "prefill":
+            batch_sh = batch_shardings(rules, specs)
+
+            # VLM archs prepend the patch prefix: cache covers it too
+            cache_len = shape.seq_len + (cfg.vision_patches or 0)
+
+            def prefill_fn(params, batch):
+                kw = {k: v for k, v in batch.items() if k != "tokens"}
+                return model.prefill(params, batch["tokens"],
+                                     cache_len=cache_len, **kw)
+
+            jitted = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_spec, specs)
+        else:  # decode
+            if zero3:
+                # opt-in ZeRO-3 serving sharding: trades per-step weight
+                # gathers for residency — refuted as the default (§Perf:
+                # params already fit under TP for every arch, and the
+                # gathers dominate the MoE decode collective term)
+                params_sh = param_shardings(rules, params_spec, zero=True)
+            cache_sh = cache_shardings(rules, specs["cache"])
+            tok_sh = batch_shardings(rules, {"t": specs["token"]})["t"]
+            pos_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_spec, specs["cache"],
+                                   specs["token"], specs["pos"])
+        return lowered.compile()
+
+
+def _cost_coll(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes accessed": float(ca.get("bytes accessed", 0.0))}
+    out.update(collective_bytes(compiled.as_text()))
+    return out
+
+
+def _probe_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
+    """k super-blocks (k * pattern period layers); encoder scaled along."""
+    period = cfg.pattern_period
+    n_super = max(cfg.num_layers // period, 1)
+    enc_per = cfg.encoder_layers // n_super if cfg.encoder_layers else 0
+    return dataclasses.replace(cfg, num_layers=k * period,
+                               encoder_layers=k * enc_per)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "baseline",
+             overrides: Optional[Dict[str, Any]] = None) -> CellResult:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    overrides = overrides or {}
+    if overrides.get("config"):
+        cfg = dataclasses.replace(cfg, **overrides["config"])
+    if overrides.get("shape"):
+        shape = dataclasses.replace(shape, **overrides["shape"])
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return CellResult(arch, shape_name, mesh_kind, ok=False, skipped=True,
+                          reason=why, variant=variant)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    remat = overrides.get("remat", True)
+
+    moe_dispatch = overrides.get("moe_dispatch", "einsum")
+    fold_model = overrides.get("fold_model", True)
+    moe_token_gather = overrides.get("moe_token_gather", False)
+    w2d = overrides.get("w2d", False)
+    zero3 = overrides.get("zero3", False)
+    t0 = time.perf_counter()
+    compiled = _lower_and_compile(cfg, shape, mesh, remat=remat,
+                                  moe_dispatch=moe_dispatch,
+                                  fold_model=fold_model,
+                                  moe_token_gather=moe_token_gather, w2d=w2d,
+                                  zero3=zero3)
+    compile_s = time.perf_counter() - t0
+
+    # ---- memory (per device) ----
+    mem: Dict[str, float] = {}
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                mem[f] = float(v)
+        if mem:
+            mem["per_device_hbm_bytes"] = (
+                mem.get("argument_size_in_bytes", 0.0)
+                + mem.get("output_size_in_bytes", 0.0)
+                + mem.get("temp_size_in_bytes", 0.0)
+                - mem.get("alias_size_in_bytes", 0.0))
+            # persistent state only (params/caches/outputs). XLA:CPU's
+            # bf16 emulation hoists fp32 converts of weights/caches into
+            # temps that native-bf16 TPUs never materialize, so temp_size
+            # is a CPU-pessimistic bound (EXPERIMENTS.md §Dry-run).
+            mem["persistent_bytes"] = (
+                mem.get("argument_size_in_bytes", 0.0)
+                + mem.get("output_size_in_bytes", 0.0)
+                - mem.get("alias_size_in_bytes", 0.0))
+
+    # ---- flops/bytes/collectives with loop-trip correction ----
+    # XLA's HloCostAnalysis (and the HLO text) count a while/scan body
+    # ONCE regardless of trip count. We compile two probes — k=0 and k=1
+    # super-blocks — whose difference is one super-block's true cost, and
+    # add (n_super - 1) of it to the full program's numbers.
+    full = _cost_coll(compiled)
+    period = cfg.pattern_period
+    n_super = cfg.num_layers // period
+    corrected = dict(full)
+    if n_super >= 2:
+        kw = dict(remat=remat, moe_dispatch=moe_dispatch,
+                  fold_model=fold_model, moe_token_gather=moe_token_gather,
+                  w2d=w2d, zero3=zero3)
+        p0 = _cost_coll(_lower_and_compile(_probe_cfg(cfg, 0), shape, mesh, **kw))
+        p1 = _cost_coll(_lower_and_compile(_probe_cfg(cfg, 1), shape, mesh, **kw))
+        for k in corrected:
+            delta = max(p1.get(k, 0.0) - p0.get(k, 0.0), 0.0)
+            corrected[k] = full.get(k, 0.0) + (n_super - 1) * delta
+    cost = {"flops": corrected["flops"],
+            "bytes accessed": corrected["bytes accessed"],
+            "flops_raw": full["flops"],
+            "bytes_raw": full["bytes accessed"]}
+    coll = {k: v for k, v in corrected.items()
+            if k not in ("flops", "bytes accessed")}
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch
+    mf = model_flops_estimate(cfg.active_param_count(), tokens, shape.kind)
+    terms = roofline(cost, coll, n_chips, model_flops=mf)
+    return CellResult(arch, shape_name, mesh_kind, ok=True,
+                      compile_s=compile_s, n_chips=n_chips, memory=mem,
+                      cost=cost, collectives=coll, terms=terms.to_dict(),
+                      variant=variant)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--overrides", default=None,
+                    help='JSON dict of overrides, e.g. '
+                         '{"config": {"capacity_factor": 1.0}}')
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            tag = f"{arch}_{shape}_{mesh_kind}_{args.variant}"
+            try:
+                res = run_cell(arch, shape, mesh_kind, args.variant, overrides)
+            except Exception as e:  # a failure here is a bug in the system
+                res = CellResult(arch, shape, mesh_kind, ok=False,
+                                 reason=f"{type(e).__name__}: {e}\n"
+                                        f"{traceback.format_exc()[-2000:]}",
+                                 variant=args.variant)
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(dataclasses.asdict(res), f, indent=1)
+            status = ("SKIP" if res.skipped else "OK" if res.ok else "FAIL")
+            dom = res.terms.get("dominant", "-") if res.ok else "-"
+            hbm = res.memory.get("per_device_hbm_bytes", 0) / 2**30
+            print(f"{status:4s} {tag:60s} compile={res.compile_s:6.1f}s "
+                  f"hbm/dev={hbm:6.2f}GiB dominant={dom}", flush=True)
+            if not res.ok and not res.skipped:
+                print(res.reason[-1500:], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips, 'pod' crosses DCN.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over however many (fake) devices tests have."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,126 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs / (chips * 197 TF/s bf16)
+    memory     = HLO_bytes / (chips * 819 GB/s HBM)
+    collective = collective_bytes / (chips * 50 GB/s/link ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+parsed from the post-SPMD HLO (``compiled.as_text()`` — per-device
+program): we sum the *output* shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (counting
+``-start`` ops once, skipping ``-done``) and multiply by chip count for
+the global wire volume. cost_analysis is per-device on SPMD modules, so
+flops/bytes are scaled back to globals the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# "  %x = (f32[1,2]{...}, bf16[3]{...}) all-gather-start(...)" or plain form
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device output bytes per collective kind."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_global: float
+    bytes_global: float
+    collective_global: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops_global if self.flops_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time — the perf score."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops / (self.n_chips * PEAK_FLOPS)) / self.bound_s
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {**dataclasses.asdict(self),
+                "useful_flops_ratio": self.useful_flops_ratio,
+                "roofline_fraction": self.roofline_fraction,
+                "bound_s": self.bound_s}
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, int], n_chips: int,
+             model_flops: float = 0.0) -> RooflineTerms:
+    """cost_analysis numbers are per-device for SPMD modules."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(sum(v for k, v in coll.items() if not k.startswith("n_")))
+    flops_g = flops_dev * n_chips
+    bytes_g = bytes_dev * n_chips
+    coll_g = coll_dev * n_chips
+    compute_s = flops_g / (n_chips * PEAK_FLOPS)
+    memory_s = bytes_g / (n_chips * HBM_BW)
+    collective_s = coll_g / (n_chips * LINK_BW)
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return RooflineTerms(
+        flops_global=flops_g, bytes_global=bytes_g, collective_global=coll_g,
+        n_chips=n_chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant, model_flops=model_flops)
+
+
+def model_flops_estimate(param_count_active: int, tokens: int,
+                         kind: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D for training, 2*N_active*D for a forward
+    (prefill/decode) pass."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * param_count_active * tokens

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the exact pytree each lowered step
+consumes; modality frontends are stubs, so [audio]/[vlm] archs receive
+precomputed frame/patch embeddings here (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ShapeSpec
+from ..models.config import ModelConfig
+from ..models.model import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _mod_inputs(cfg: ModelConfig, b: int) -> Dict[str, SDS]:
+    out: Dict[str, SDS] = {}
+    if cfg.vision_patches:
+        out["patches"] = SDS((b, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        out["frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+        "loss_mask": SDS((b, s), jnp.float32),
+        **_mod_inputs(cfg, b),
+    }
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    return {"tokens": SDS((b, s), jnp.int32), **_mod_inputs(cfg, b)}
+
+
+def decode_specs(model: Model, shape: ShapeSpec) -> Dict[str, Any]:
+    """One decode step: new token + position + the full KV/state cache
+    (cache specs via eval_shape on init_cache — no allocation)."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "token": SDS((b,), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(model: Model, shape: ShapeSpec) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_batch_specs(model.cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(model.cfg, shape)
+    return decode_specs(model, shape)

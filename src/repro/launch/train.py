@@ -1,0 +1,89 @@
+"""Training launcher: real steps on whatever devices exist.
+
+On this CPU container it trains reduced configs end-to-end (the full
+configs are exercised by dryrun.py); on a TPU pod the same entrypoint
+builds the production mesh and runs the sharded step with checkpoints,
+preemption handling and elastic resume.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --smoke --steps 50 --ckpt /tmp/ck
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from ..configs.registry import ARCHS, get_config, get_smoke_config
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..distributed.sharding import (MeshSharder, ShardingRules,
+                                    batch_shardings, param_shardings)
+from ..models.model import Model
+from ..training.fault import PreemptionGuard, run_with_restarts
+from ..training.optimizer import AdamWConfig
+from ..training.train_loop import Trainer
+from .mesh import make_production_mesh, make_test_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"))
+    ap.add_argument("--mesh", choices=("none", "test", "single", "multi"),
+                    default="none")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh == "test":
+        mesh = make_test_mesh()
+    elif args.mesh in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps, state_dtype=args.state_dtype)
+    data = SyntheticLM(cfg, DataConfig(seq_len=args.seq,
+                                       global_batch=args.batch))
+    guard = PreemptionGuard()
+
+    def attempt(attempt_idx: int):
+        if mesh is not None:
+            rules = ShardingRules(cfg, mesh)
+            model = Model(cfg, shard=MeshSharder(rules))
+            with mesh:
+                trainer = Trainer(model, ocfg, ckpt_dir=args.ckpt,
+                                  ckpt_every=args.ckpt_every)
+                params, opt = trainer.init_state(jax.random.PRNGKey(0))
+                p_sh = param_shardings(rules, params)
+                params = jax.device_put(params, p_sh)
+                params, opt, start = trainer.maybe_restore(params, opt)
+                return trainer.fit(params, opt, data.iterate(start),
+                                   steps=args.steps, start_step=start,
+                                   guard=guard)
+        model = Model(cfg, remat=True)
+        trainer = Trainer(model, ocfg, ckpt_dir=args.ckpt,
+                          ckpt_every=args.ckpt_every)
+        params, opt = trainer.init_state(jax.random.PRNGKey(0))
+        params, opt, start = trainer.maybe_restore(params, opt)
+        return trainer.fit(params, opt, data.iterate(start),
+                           steps=args.steps, start_step=start, guard=guard)
+
+    params, opt, log = run_with_restarts(attempt,
+                                         max_restarts=args.max_restarts)
+    for e in log:
+        print(f"step {e['step']:5d} loss={e['loss']:.4f} lr={e['lr']:.2e}"
+              + (" [straggled]" if e.get("straggled") else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+# 10-architecture model zoo: config-driven decoder LM / enc-dec / VLM with
+# scanned heterogeneous layer stacks, GShard MoE, RG-LRU and RWKV-6 blocks.
+from .config import ModelConfig
+from .layers import NO_SHARD, Sharder
+from .model import Model
+
+__all__ = ["ModelConfig", "Model", "Sharder", "NO_SHARD"]

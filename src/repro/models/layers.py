@@ -1,0 +1,305 @@
+"""Shared model layers: norms, RoPE, (G)QA attention (chunked flash-style
+prefill + one-token decode), gated FFN. Pure functions over explicit
+parameter pytrees; layer stacks are scanned in model.py so the HLO stays
+O(1) in depth.
+
+Sharding: activations/caches receive hints through an optional ``Sharder``
+(no-op by default) so the same code runs unsharded smoke tests and the
+512-way production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class Sharder:
+    """Applies with_sharding_constraint specs by logical name; no-op base."""
+
+    def __call__(self, x: jax.Array, name: str) -> jax.Array:
+        return x
+
+
+NO_SHARD = Sharder()
+
+
+# -- norms ---------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# -- RoPE ------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, D] (D even), positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# -- FFN --------------------------------------------------------------------
+
+def _act(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x) if cfg.act == "silu" else jax.nn.gelu(x)
+
+
+def ffn_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+              shard: Sharder = NO_SHARD) -> jax.Array:
+    """Gated (SwiGLU-style) or plain 2-matrix FFN."""
+    if cfg.glu:
+        h = _act(cfg, x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = _act(cfg, x @ p["w_up"])
+    h = shard(h, "ffn_hidden")
+    return h @ p["w_down"]
+
+
+def ffn_init(cfg: ModelConfig, key: jax.Array, d: int, ff: int,
+             dtype: jnp.dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {"w_up": jax.random.normal(k2, (d, ff), dtype) * s_in,
+         "w_down": jax.random.normal(k3, (ff, d), dtype) * s_out}
+    if cfg.glu:
+        p["w_gate"] = jax.random.normal(k1, (d, ff), dtype) * s_in
+    return p
+
+
+# -- attention ----------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key: jax.Array, dtype: jnp.dtype,
+              heads: Optional[int] = None, kv_heads: Optional[int] = None
+              ) -> Params:
+    H = heads or cfg.num_heads
+    Hkv = kv_heads or cfg.num_kv_heads
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {"wq": jax.random.normal(kq, (d, H * hd), dtype) * s,
+         "wk": jax.random.normal(kk, (d, Hkv * hd), dtype) * s,
+         "wv": jax.random.normal(kv, (d, Hkv * hd), dtype) * s,
+         "wo": jax.random.normal(ko, (H * hd, d), dtype) * (H * hd) ** -0.5}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array,
+                 heads: int, kv_heads: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, heads, cfg.hd)
+    k = k.reshape(b, s, kv_heads, cfg.hd)
+    v = v.reshape(b, s, kv_heads, cfg.hd)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,           # [B, Hq, Sq, D]
+    k: jax.Array,           # [B, Hkv, Sk, D]
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Flash-style chunked attention in pure jnp: O(chunk^2) memory.
+
+    The kv step is wrapped in jax.checkpoint so the backward pass
+    recomputes chunk logits instead of storing O(S^2) residuals (the
+    flash-attention backward). This is the XLA lowering path
+    (dry-run/roofline); on TPU the Pallas flash_attention kernel
+    replaces it 1:1.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // kv_chunk)
+    q_chunk = -(-sq // nq)
+    kv_chunk = -(-sk // nk)
+    sqp, skp = nq * q_chunk, nk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    kp = kp.reshape(b, hkv, nk, kv_chunk, d)
+    vp = vp.reshape(b, hkv, nk, kv_chunk, d)
+    q_off = sk - sq  # right-aligned query positions
+    neg = jnp.float32(-1e30)
+
+    def q_step(iq, qc):
+        qcs = (qc * scale).astype(qc.dtype)            # [B,Hq,qc,D]
+        qpos = q_off + iq * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            ik, kc, vc = inputs                        # [B,Hkv,kvc,D]
+            kc = jnp.repeat(kc, group, axis=1)         # [B,Hq,kvc,D]
+            vc = jnp.repeat(vc, group, axis=1)
+            logits = jnp.einsum("bhqd,bhkd->bhqk", qcs, kc,
+                                preferred_element_type=jnp.float32)
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            mask = (kpos[None, :] < sk)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, neg)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), ()
+
+        init = (jnp.zeros((b, hq, q_chunk, d), jnp.float32),
+                jnp.full((b, hq, q_chunk), neg),
+                jnp.zeros((b, hq, q_chunk), jnp.float32))
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.arange(nk), kp.swapaxes(0, 2).swapaxes(1, 2),
+             vp.swapaxes(0, 2).swapaxes(1, 2)))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    qp = qp.reshape(b, hq, nq, q_chunk, d)
+    out = jax.lax.map(lambda args: q_step(*args),
+                      (jnp.arange(nq), qp.swapaxes(0, 2).swapaxes(1, 2)))
+    out = out.swapaxes(0, 1).swapaxes(1, 2)            # [B,Hq,nq,qc,D]
+    return out.reshape(b, hq, sqp, d)[:, :, :sq]
+
+
+def decode_attention(
+    q: jax.Array,           # [B, Hq, D] one new token
+    k_cache: jax.Array,     # [B, Hkv, S, D]
+    v_cache: jax.Array,
+    pos: jax.Array,         # [] current position (tokens < pos+1 valid)
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One-token attention over the cache (einsum path; XLA inserts the
+    partial-softmax collectives when the cache is sequence-sharded).
+
+    The cache stays in its storage dtype — einsums accumulate in fp32 via
+    preferred_element_type, so no fp32 copy of the (multi-hundred-GB)
+    cache is ever materialized."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    qg = (q.reshape(b, hkv, group, d) * scale).astype(k_cache.dtype)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s)
+    valid = kpos <= pos
+    if window is not None:
+        valid &= kpos > pos - window
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(k_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / p.sum(-1, keepdims=True)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def cache_update(cache: jax.Array, new: jax.Array, slot: jax.Array
+                 ) -> jax.Array:
+    """cache [B,H,S,D] <- new [B,H,D] at position ``slot``.
+
+    A plain dynamic-update-slice: the SPMD partitioner applies it on the
+    owning shard under sequence sharding (verified in the dry-run HLO),
+    and unlike the one-hot mul-add formulation it performs no arithmetic
+    on the cache — XLA:CPU's bf16 emulation would otherwise materialize an
+    fp32 copy of the entire (hundreds-of-GB) cache."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new[:, :, None, :].astype(cache.dtype), slot, axis=2)
+
+
+onehot_cache_update = cache_update  # historical alias
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,               # [B, S, d_model]
+    positions: jax.Array,       # [B, S]
+    causal: bool = True,
+    window: Optional[int] = None,
+    shard: Sharder = NO_SHARD,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train/prefill). Returns (out, (k, v)).
+
+    ``kv_override`` supplies precomputed (k, v) [B, S_enc, Hkv, D] for
+    cross-attention (no self K/V projection, no RoPE)."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, cfg.num_heads, cfg.hd)
+    if kv_override is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(b, s, cfg.num_kv_heads, cfg.hd)
+        v = v.reshape(b, s, cfg.num_kv_heads, cfg.hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = shard(q.swapaxes(1, 2), "attn_heads")          # [B, H, S, D]
+    kt = shard(k.swapaxes(1, 2), "attn_kv")
+    vt = shard(v.swapaxes(1, 2), "attn_kv")
+    out = chunked_attention(q, kt, vt, causal=causal, window=window)
+    out = out.swapaxes(1, 2).reshape(x.shape[0], x.shape[1], -1)
+    return out @ p["wo"], (kt, vt)

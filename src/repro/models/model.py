@@ -1,0 +1,486 @@
+"""Decoder-only / encoder-decoder LM assembly for all 10 architectures.
+
+Layers are grouped into *super-blocks* of ``cfg.block_pattern`` period and
+scanned (lax.scan) so HLO size is O(1) in depth — heterogeneous stacks
+(RecurrentGemma's rglru/rglru/attn) scan over the period, with any
+remainder layers unrolled.
+
+Modes:
+  train   — full-sequence forward, chunked softmax-CE loss (the [B,S,V]
+            logits tensor is never materialized).
+  prefill — full-sequence forward; returns last-token logits + caches
+            (attention K/V right-aligned into ``cache_len`` slots;
+            recurrent states carried).
+  decode  — one token; K/V caches updated via one-hot mul-add (rolling
+            slot = pos %% cache_len for windowed layers) — collective-free
+            under sequence sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (NO_SHARD, Params, Sharder, apply_norm, attn_init,
+                     attention_apply, chunked_attention, decode_attention,
+                     ffn_apply, ffn_init, init_norm, onehot_cache_update, rope)
+from .moe import moe_apply, moe_init
+from .recurrent import (rglru_block, rglru_init, rglru_state_init, rwkv6_block,
+                        rwkv6_init, rwkv6_state_init)
+
+
+def _dtype(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# -- per-layer params -------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key: jax.Array, kind: str,
+                cross: bool = False) -> Params:
+    dt = _dtype(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p: Params = {"norm1": init_norm(cfg, cfg.d_model),
+                 "norm2": init_norm(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["mixer"] = attn_init(cfg, k1, dt)
+    elif kind == "rglru":
+        p["mixer"] = rglru_init(cfg, k1, dt)
+    elif kind == "rwkv6":
+        p["mixer"] = rwkv6_init(cfg, k1, dt)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross"] = attn_init(cfg, k4, dt)
+        p["norm_cross"] = init_norm(cfg, cfg.d_model)
+    if cfg.num_experts:
+        p["moe"] = moe_init(cfg, k2, dt)
+        if cfg.dense_residual:
+            p["ffn"] = ffn_init(cfg, k3, cfg.d_model, cfg.d_ff, dt)
+    else:
+        p["ffn"] = ffn_init(cfg, k3, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                      cross_len: int = 0) -> Params:
+    dt = jnp.dtype(cfg.kv_dtype)
+    if kind == "attn":
+        hkv, hd = cfg.num_kv_heads, cfg.hd
+        eff = min(cache_len, cfg.window) if cfg.window else cache_len
+        c = {"k": jnp.zeros((batch, hkv, eff, hd), dt),
+             "v": jnp.zeros((batch, hkv, eff, hd), dt)}
+        if cross_len:
+            c["ck"] = jnp.zeros((batch, hkv, cross_len, hd), dt)
+            c["cv"] = jnp.zeros((batch, hkv, cross_len, hd), dt)
+        return c
+    if kind == "rglru":
+        return rglru_state_init(cfg, batch, _dtype(cfg))
+    return rwkv6_state_init(cfg, batch, _dtype(cfg))
+
+
+# -- one layer, all modes ----------------------------------------------------
+
+def _self_attn_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                      cache: Params, pos: jax.Array, shard: Sharder
+                      ) -> Tuple[jax.Array, Params]:
+    """x [B,1,d]; one-hot cache update + single-token attention."""
+    b = x.shape[0]
+    q = x @ p["mixer"]["wq"]
+    k = x @ p["mixer"]["wk"]
+    v = x @ p["mixer"]["wv"]
+    if cfg.qkv_bias:
+        q, k, v = (q + p["mixer"]["bq"], k + p["mixer"]["bk"],
+                   v + p["mixer"]["bv"])
+    q = q.reshape(b, 1, cfg.num_heads, cfg.hd)
+    k = k.reshape(b, 1, cfg.num_kv_heads, cfg.hd)
+    v = v.reshape(b, 1, cfg.num_kv_heads, cfg.hd)
+    posb = jnp.broadcast_to(pos, (b, 1))
+    q = rope(q, posb, cfg.rope_theta)[:, 0]                          # [B,H,D]
+    k = rope(k, posb, cfg.rope_theta)[:, 0]                          # [B,Hkv,D]
+    v = v[:, 0]
+    s_cache = cache["k"].shape[2]
+    slot = pos % s_cache if cfg.window else jnp.minimum(pos, s_cache - 1)
+    k_new = shard(onehot_cache_update(cache["k"], k, slot), "kv_cache")
+    v_new = shard(onehot_cache_update(cache["v"], v, slot), "kv_cache")
+    if cfg.window:
+        # rolling cache: valid slots = all once pos >= s_cache
+        eff_pos = jnp.minimum(pos, s_cache - 1)
+        out = decode_attention(q, k_new, v_new, eff_pos, window=None)
+    else:
+        out = decode_attention(q, k_new, v_new, pos, window=None)
+    out = out.reshape(b, 1, -1) @ p["mixer"]["wo"]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    return out, new_cache
+
+
+def _cross_attn(cfg: ModelConfig, p: Params, x: jax.Array,
+                ck: jax.Array, cv: jax.Array, shard: Sharder) -> jax.Array:
+    """Decoder cross-attention over cached encoder K/V [B,Senc,Hkv,D]."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.hd).swapaxes(1, 2)
+    q = shard(q, "attn_heads")
+    out = chunked_attention(q, ck, cv, causal=False)
+    out = out.swapaxes(1, 2).reshape(b, s, -1)
+    return out @ p["wo"]
+
+
+def _layer_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                 positions: jax.Array, mode: str,
+                 cache: Optional[Params], pos: Optional[jax.Array],
+                 cache_len: int, enc_out: Optional[jax.Array],
+                 shard: Sharder, use_pallas: bool,
+                 moe_dispatch: str = "einsum"
+                 ) -> Tuple[jax.Array, Optional[Params]]:
+    new_cache: Optional[Params] = None
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind == "attn":
+        if mode == "decode":
+            out, new_cache = _self_attn_decode(cfg, p, h, cache, pos, shard)
+        else:
+            out, (kt, vt) = attention_apply(
+                cfg, p["mixer"], h, positions, causal=True, window=cfg.window,
+                shard=shard)
+            if mode == "prefill":
+                new_cache = _right_align_cache(cfg, kt, vt, cache_len, shard)
+    elif kind == "rglru":
+        state = cache if mode == "decode" else None
+        out, new_cache = rglru_block(cfg, p["mixer"], h, state, shard,
+                                     use_pallas)
+        if mode == "train":
+            new_cache = None
+    else:  # rwkv6
+        state = cache if mode == "decode" else None
+        out, new_cache = rwkv6_block(cfg, p["mixer"], h, state, shard,
+                                     use_pallas)
+        if mode == "train":
+            new_cache = None
+    x = x + out
+    # cross-attention (whisper decoder)
+    if "cross" in p:
+        hx = apply_norm(cfg, p["norm_cross"], x)
+        if mode == "decode":
+            ck, cv = cache["ck"], cache["cv"]
+            q = (hx @ p["cross"]["wq"]).reshape(
+                x.shape[0], cfg.num_heads, cfg.hd)
+            out = decode_attention(q, ck, cv,
+                                   jnp.asarray(ck.shape[2] - 1))
+            out = out.reshape(x.shape[0], 1, -1) @ p["cross"]["wo"]
+            if new_cache is not None:
+                new_cache["ck"], new_cache["cv"] = ck, cv
+        else:
+            b = enc_out.shape[0]
+            se = enc_out.shape[1]
+            ck = (enc_out @ p["cross"]["wk"]).reshape(
+                b, se, cfg.num_kv_heads, cfg.hd).swapaxes(1, 2)
+            cv = (enc_out @ p["cross"]["wv"]).reshape(
+                b, se, cfg.num_kv_heads, cfg.hd).swapaxes(1, 2)
+            out = _cross_attn(cfg, p["cross"], hx, ck, cv, shard)
+            if mode == "prefill" and new_cache is not None:
+                kd = jnp.dtype(cfg.kv_dtype)
+                new_cache["ck"], new_cache["cv"] = ck.astype(kd), cv.astype(kd)
+        x = x + out
+    # FFN / MoE
+    h2 = apply_norm(cfg, p["norm2"], x)
+    if cfg.num_experts:
+        out2 = moe_apply(cfg, p["moe"], h2, shard, dispatch=moe_dispatch)
+        if cfg.dense_residual:
+            out2 = out2 + ffn_apply(cfg, p["ffn"], h2, shard)
+    else:
+        out2 = ffn_apply(cfg, p["ffn"], h2, shard)
+    x = shard(x + out2, "residual")
+    return x, new_cache
+
+
+def _right_align_cache(cfg: ModelConfig, kt: jax.Array, vt: jax.Array,
+                       cache_len: int, shard: Sharder) -> Params:
+    """[B,Hkv,S,D] -> cache of ``min(cache_len, window)`` slots, with each
+    absolute position p stored at slot p %% len (rolling invariant)."""
+    s = kt.shape[2]
+    eff = min(cache_len, cfg.window) if cfg.window else cache_len
+    if not cfg.window and s > eff:
+        raise ValueError(
+            f"full-attention prefill of {s} tokens needs cache_len >= {s}, "
+            f"got {cache_len}")
+    if s >= eff:
+        k_sl, v_sl = kt[:, :, s - eff:], vt[:, :, s - eff:]
+        if cfg.window:
+            shift = (s - eff) % eff
+            k_sl = jnp.roll(k_sl, shift, axis=2)
+            v_sl = jnp.roll(v_sl, shift, axis=2)
+    else:
+        pad = ((0, 0), (0, 0), (0, eff - s), (0, 0))
+        k_sl, v_sl = jnp.pad(kt, pad), jnp.pad(vt, pad)
+    kd = jnp.dtype(cfg.kv_dtype)
+    return {"k": shard(k_sl.astype(kd), "kv_cache"),
+            "v": shard(v_sl.astype(kd), "kv_cache")}
+
+
+# -- the model ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    shard: Sharder = dataclasses.field(default_factory=Sharder)
+    use_pallas: bool = False
+    remat: bool = True
+    loss_chunk: int = 512
+    moe_dispatch: str = "einsum"      # einsum | scatter (see moe.py)
+
+    # ---- init ----
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, cfg.num_layers + 8)
+        params: Params = {
+            "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                       dt) * cfg.d_model ** -0.5,
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tied_embeddings:
+            params["lm_head"] = jax.random.normal(
+                keys[1], (cfg.d_model, cfg.vocab_size), dt) * cfg.d_model ** -0.5
+        cross = cfg.is_encdec
+        per_layer = [
+            _layer_init(cfg, keys[2 + i], cfg.layer_kind(i), cross=cross)
+            for i in range(cfg.num_layers)]
+        params.update(self._group_layers(per_layer))
+        if cfg.is_encdec:
+            ekeys = jax.random.split(keys[-1], cfg.encoder_layers + 2)
+            enc_cfg = self.encoder_cfg()
+            enc_layers = [_layer_init(enc_cfg, ekeys[i], "attn")
+                          for i in range(cfg.encoder_layers)]
+            params["encoder"] = {
+                "layers": jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *enc_layers),
+                "pos_embed": jax.random.normal(
+                    ekeys[-1], (cfg.encoder_seq, cfg.d_model), dt) * 0.02,
+                "final_norm": init_norm(cfg, cfg.d_model),
+            }
+        return params
+
+    def encoder_cfg(self) -> ModelConfig:
+        cfg = self.cfg
+        return dataclasses.replace(
+            cfg, num_kv_heads=cfg.encoder_heads or cfg.num_heads,
+            num_heads=cfg.encoder_heads or cfg.num_heads,
+            block_pattern=("attn",), num_experts=0, window=None)
+
+    def _group_layers(self, per_layer: List[Params]) -> Params:
+        period = self.cfg.pattern_period
+        n_super = len(per_layer) // period
+        rest = per_layer[n_super * period:]
+        out: Params = {"rest_layers": rest}
+        if n_super:
+            slots = {}
+            for si in range(period):
+                slot_params = [per_layer[b * period + si] for b in range(n_super)]
+                slots[f"slot{si}"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *slot_params)
+            out["scan_layers"] = slots
+        return out
+
+    # ---- caches ----
+    def init_cache(self, batch: int, cache_len: int) -> Params:
+        cfg = self.cfg
+        cross_len = cfg.encoder_seq if cfg.is_encdec else 0
+        period = cfg.pattern_period
+        n_super = cfg.num_layers // period
+        caches: Params = {"rest": [
+            _layer_cache_init(cfg, cfg.layer_kind(n_super * period + i),
+                              batch, cache_len, cross_len)
+            for i in range(cfg.num_layers - n_super * period)]}
+        if n_super:
+            slots = {}
+            for si in range(period):
+                one = _layer_cache_init(cfg, cfg.block_pattern[si], batch,
+                                        cache_len, cross_len)
+                slots[f"slot{si}"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape),
+                    one)
+            caches["scan"] = slots
+        return caches
+
+    # ---- stacks ----
+    def _run_stack(self, params: Params, x: jax.Array, positions: jax.Array,
+                   mode: str, caches: Optional[Params], pos, cache_len: int,
+                   enc_out: Optional[jax.Array]) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        period = cfg.pattern_period
+        n_super = cfg.num_layers // period
+
+        def superblock(x, slot_params, slot_caches):
+            new_caches = {}
+            for si in range(period):
+                kind = cfg.block_pattern[si]
+                c_in = slot_caches[f"slot{si}"] if slot_caches else None
+                x, c_out = _layer_apply(
+                    cfg, kind, slot_params[f"slot{si}"], x, positions, mode,
+                    c_in, pos, cache_len, enc_out, self.shard, self.use_pallas,
+                    self.moe_dispatch)
+                new_caches[f"slot{si}"] = c_out
+            return x, new_caches
+
+        sb = superblock
+        if self.remat and mode == "train":
+            sb = jax.checkpoint(superblock,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+
+        new_cache_out: Params = {}
+        if n_super:
+            scan_params = params["scan_layers"]
+            scan_caches = caches["scan"] if caches else None
+
+            def body(carry, xs):
+                slot_params, slot_caches = xs
+                y, new_c = sb(carry, slot_params, slot_caches)
+                return y, new_c
+
+            xs = (scan_params, scan_caches)
+            if scan_caches is None:
+                xs = (scan_params, None)
+            x, scan_cache_new = jax.lax.scan(body, x, xs)
+            new_cache_out["scan"] = scan_cache_new
+        rest_new = []
+        for i, lp in enumerate(params["rest_layers"]):
+            li = n_super * period + i
+            kind = cfg.layer_kind(li)
+            c_in = caches["rest"][i] if caches else None
+            x, c_out = _layer_apply(cfg, kind, lp, x, positions, mode, c_in,
+                                    pos, cache_len, enc_out, self.shard,
+                                    self.use_pallas, self.moe_dispatch)
+            rest_new.append(c_out)
+        new_cache_out["rest"] = rest_new
+        return x, new_cache_out
+
+    def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Whisper encoder over frontend-stub frame embeddings [B,Se,d]."""
+        cfg = self.cfg
+        enc_cfg = self.encoder_cfg()
+        enc = params["encoder"]
+        x = frames + enc["pos_embed"][None, :frames.shape[1]]
+        positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                     frames.shape[:2])
+
+        def body(carry, lp):
+            y, _ = _layer_apply(enc_cfg, "attn", lp, carry, positions,
+                                "train", None, None, 0, None, self.shard,
+                                self.use_pallas, self.moe_dispatch)
+            return y, None
+
+        body_fn = body
+        if self.remat:
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body_fn, x, enc["layers"])
+        return apply_norm(cfg, enc["final_norm"], x)
+
+    # ---- embeddings / heads ----
+    def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        return params["embed"][tokens]
+
+    def _head(self, params: Params) -> jax.Array:
+        if self.cfg.tied_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ---- public: train ----
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Next-token CE, chunked over the sequence (no [B,S,V] tensor)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]                         # [B, S]
+        b, s = tokens.shape
+        x = self._embed(params, tokens)
+        n_prefix = 0
+        if cfg.vision_patches and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            n_prefix = batch["patches"].shape[1]
+        x = self.shard(x, "activations")
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch["frames"].astype(x.dtype))
+        x, _ = self._run_stack(params, x, positions, "train", None, None, 0,
+                               enc_out)
+        x = apply_norm(cfg, params["final_norm"], x)
+        x = x[:, n_prefix:]                              # text positions only
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+        head = self._head(params)
+        loss, denom = _chunked_ce(x, head, labels, mask, self.loss_chunk)
+        return loss, {"loss": loss, "tokens": denom}
+
+    # ---- public: serving ----
+    def prefill(self, params: Params, tokens: jax.Array,
+                cache_len: Optional[int] = None,
+                patches: Optional[jax.Array] = None,
+                frames: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = self._embed(params, tokens)
+        if cfg.vision_patches and patches is not None:
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        x = self.shard(x, "activations")
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        enc_out = self._encode(params, frames.astype(x.dtype)) \
+            if cfg.is_encdec else None
+        cache_len = cache_len or x.shape[1]
+        x, caches = self._run_stack(params, x, positions, "prefill", None,
+                                    None, cache_len, enc_out)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x[:, -1] @ self._head(params)           # [B, V]
+        return logits, caches
+
+    def decode_step(self, params: Params, caches: Params, token: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        """token [B] int32, pos [] int32 -> (logits [B,V], new caches)."""
+        cfg = self.cfg
+        x = self._embed(params, token[:, None])          # [B, 1, d]
+        x = self.shard(x, "activations")
+        positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+        x, new_caches = self._run_stack(params, x, positions, "decode",
+                                        caches, pos, 0, None)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x[:, 0] @ self._head(params)
+        return logits, new_caches
+
+
+def _chunked_ce(x: jax.Array, head: jax.Array, labels: jax.Array,
+                mask: jax.Array, chunk: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Streaming softmax cross-entropy over sequence chunks."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    sp = n * chunk
+    xp = jnp.pad(x, ((0, 0), (0, sp - s), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, sp - s)))
+    mp = jnp.pad(mask, ((0, 0), (0, sp - s)))
+    xp = xp.reshape(b, n, chunk, d).swapaxes(0, 1)
+    lp = lp.reshape(b, n, chunk).swapaxes(0, 1)
+    mp = mp.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stores
+    def step(carry, inp):  # a [B, chunk, V] tensor across the loss scan
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = (xc @ head).astype(jnp.float32)         # [B, chunk, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction (not take_along_axis): partitions cleanly
+        # when the vocab dim is model-sharded (sum over V -> psum).
+        gold = jnp.sum(logits * jax.nn.one_hot(lc, logits.shape[-1],
+                                               dtype=logits.dtype), axis=-1)
+        ce = (lse - gold) * mc
+        return (tot + ce.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (xp, lp, mp))
+    return tot / jnp.maximum(cnt, 1.0), cnt

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity factor.
+
+Tokens are re-grouped to ``group_len`` before dispatch (GShard style):
+dispatch/combine one-hot cost scales as gl/(3*d_ff) of expert compute, so
+group size — not sequence length — bounds the overhead (~7% for arctic at
+gl=1024). Two dispatch paths:
+
+  * ``einsum`` (default): one-hot dispatch/combine einsums — the
+    SPMD-safe formulation (expert dim sharded over 'model' => XLA inserts
+    the all-to-alls).
+  * ``scatter``: scatter-add into [E*C, d] slots — removes the dispatch
+    matmul FLOPs; a §Perf hillclimb candidate.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import NO_SHARD, Sharder, _act
+
+Params = Dict[str, Any]
+
+
+def moe_init(cfg: ModelConfig, key: jax.Array, dtype: jnp.dtype) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": jax.random.normal(kr, (d, E), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ku, (E, d, ff), dtype) * s_in,
+        "w_down": jax.random.normal(kd, (E, ff, d), dtype) * s_out,
+    }
+    if cfg.glu:
+        p["w_gate"] = jax.random.normal(kg, (E, d, ff), dtype) * s_in
+    return p
+
+
+def group_len(cfg: ModelConfig, s: int) -> int:
+    """Pick a dispatch group size: bounded one-hot overhead, divides S."""
+    target = max(min(3 * cfg.d_ff // 8, 1024), 128)
+    g = min(target, s)
+    while s % g:
+        g -= 1
+    return g
+
+
+def capacity(cfg: ModelConfig, gl: int) -> int:
+    return max(int(-(-gl * cfg.top_k * cfg.capacity_factor // cfg.num_experts)), 1)
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+              shard: Sharder = NO_SHARD, dispatch: str = "einsum") -> jax.Array:
+    """x [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    gl = group_len(cfg, s)
+    ns = s // gl
+    C = capacity(cfg, gl)
+    xg = x.reshape(b, ns, gl, d)                              # [B,N,g,d]
+
+    logits = (xg.astype(jnp.float32) @ p["router"])           # [B,N,g,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                      # [B,N,g,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert, per group
+    mask = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # [B,N,g,k,E]
+    flat = mask.reshape(b, ns, gl * k, E)
+    pos = (jnp.cumsum(flat, axis=2) - flat).reshape(b, ns, gl, k, E)
+    in_cap = (pos < C) & (mask > 0)
+    slot_id = jnp.sum(pos * mask, -1).astype(jnp.int32)       # [B,N,g,k]
+    gates_kept = jnp.where(in_cap.any(-1), gates, 0.0)
+
+    if dispatch == "einsum":
+        pos_oh = jax.nn.one_hot(slot_id, C, dtype=jnp.float32)  # [B,N,g,k,C]
+        keepm = (mask * in_cap).astype(jnp.float32)
+        disp = jnp.einsum("bngke,bngkc->bngec", keepm, pos_oh)
+        comb = jnp.einsum("bngec,bngk->bngec", disp,
+                          gates_kept.astype(jnp.float32))
+        xin = jnp.einsum("bngec,bngd->bnecd", disp.astype(x.dtype), xg)
+        xin = shard(xin, "moe_expert_in5")
+        h = jnp.einsum("bnecd,edf->bnecf", xin, p["w_up"])
+        if cfg.glu:
+            h = _act(cfg, jnp.einsum("bnecd,edf->bnecf", xin, p["w_gate"])) * h
+        else:
+            h = _act(cfg, h)
+        h = shard(h, "moe_hidden5")
+        out = jnp.einsum("bnecf,efd->bnecd", h, p["w_down"])
+        y = jnp.einsum("bngec,bnecd->bngd", comb.astype(x.dtype), out)
+        return y.reshape(b, s, d)
+
+    # scatter path: flat slot index e*C + pos (overflow slots dropped)
+    slot = jnp.where(in_cap.any(-1), idx * C + slot_id, E * C)  # [B,N,g,k]
+    bn = b * ns
+    slot_f = slot.reshape(bn, gl * k)
+    xk = jnp.broadcast_to(xg.reshape(bn, gl, 1, d),
+                          (bn, gl, k, d)).reshape(bn, gl * k, d)
+    xin = jnp.zeros((bn, E * C + 1, d), x.dtype).at[
+        jnp.arange(bn)[:, None], slot_f].add(xk)[:, :-1]
+    xin = shard(xin.reshape(b, ns, E, C, d), "moe_expert_in5")
+    h = jnp.einsum("bnecd,edf->bnecf", xin, p["w_up"])
+    if cfg.glu:
+        h = _act(cfg, jnp.einsum("bnecd,edf->bnecf", xin, p["w_gate"])) * h
+    else:
+        h = _act(cfg, h)
+    h = shard(h, "moe_hidden5")
+    out = jnp.einsum("bnecf,efd->bnecd", h, p["w_down"])
+    out = out.reshape(bn, E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((bn, 1, d), out.dtype)], axis=1)
+    gathered = out[jnp.arange(bn)[:, None], slot_f].reshape(b, ns, gl, k, d)
+    y = jnp.einsum("bngkd,bngk->bngd", gathered, gates_kept.astype(x.dtype))
+    return y.reshape(b, s, d)

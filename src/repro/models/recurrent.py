@@ -1,0 +1,146 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV-6 (Finch).
+
+Both are O(1)-state decoders (the sub-quadratic archs of the pool). The
+sequence scans route through kernels/ops.py: pure-jnp lax.scan oracle for
+XLA lowering, Pallas kernels on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+from .layers import NO_SHARD, Sharder
+
+Params = Dict[str, Any]
+_CONV_K = 4  # temporal conv width (Griffin)
+
+
+# -- RG-LRU block -----------------------------------------------------------
+
+def rglru_init(cfg: ModelConfig, key: jax.Array, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    kx, kg, ko, kr, ki, kc = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_x": jax.random.normal(kx, (d, d), dtype) * s,       # recurrent branch
+        "w_gate": jax.random.normal(kg, (d, d), dtype) * s,    # gelu gate branch
+        "w_out": jax.random.normal(ko, (d, d), dtype) * s,
+        "w_rg": jax.random.normal(kr, (d, d), dtype) * s,      # recurrence gate
+        "w_ig": jax.random.normal(ki, (d, d), dtype) * s,      # input gate
+        "conv": jax.random.normal(kc, (_CONV_K, d), dtype) * 0.5,
+        "lam": jnp.full((d,), 0.7, jnp.float32),               # Lambda (decay)
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal temporal conv. x [B,S,d], w [K,d].
+    ``state`` [B,K-1,d] carries the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)                  # [B, S+K-1, d]
+    out = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out, xx[:, -(k - 1):, :]
+
+
+def _decay(p: Params, x: jax.Array) -> jax.Array:
+    """a_t = exp(-c * softplus(lam) * sigmoid(W_rg x))  in (0, 1)."""
+    c = 8.0
+    r = jax.nn.sigmoid((x @ p["w_rg"]).astype(jnp.float32))
+    return jnp.exp(-c * jax.nn.softplus(p["lam"]) * r)
+
+
+def rglru_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None,
+                shard: Sharder = NO_SHARD, use_pallas: bool = False
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x [B,S,d] -> (out [B,S,d], new_state {conv [B,K-1,d], h [B,d]})."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_x"]
+    u, conv_state = _causal_conv(
+        u, p["conv"], None if state is None else state["conv"])
+    u = shard(u, "rnn_hidden")
+    a = _decay(p, x)
+    i = jax.nn.sigmoid((x @ p["w_ig"]).astype(jnp.float32))
+    h0 = None if state is None else state["h"]
+    y, hT = kops.rglru(u.astype(jnp.float32) * i, a, h0, use_pallas=use_pallas)
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"conv": conv_state, "h": hT}
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {"conv": jnp.zeros((batch, _CONV_K - 1, d), dtype),
+            "h": jnp.zeros((batch, d), jnp.float32)}
+
+
+# -- RWKV-6 block -------------------------------------------------------------
+
+def rwkv6_init(cfg: ModelConfig, key: jax.Array, dtype: jnp.dtype) -> Params:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    kr, kk, kv, kw, kg, ko, ku = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_r": jax.random.normal(kr, (d, d), dtype) * s,
+        "w_k": jax.random.normal(kk, (d, d), dtype) * s,
+        "w_v": jax.random.normal(kv, (d, d), dtype) * s,
+        "w_w": jax.random.normal(kw, (d, d), dtype) * s * 0.1,
+        "w_g": jax.random.normal(kg, (d, d), dtype) * s,
+        "w_o": jax.random.normal(ko, (d, d), dtype) * s,
+        "u": jax.random.normal(ku, (H, cfg.rwkv_head_dim), jnp.float32) * 0.1,
+        "mix": jnp.full((5, d), 0.5, jnp.float32),   # token-shift mixes r/k/v/w/g
+        "ln_scale": jnp.ones((d,), jnp.float32),     # post-wkv group norm
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream: shift right by one; decode passes ``prev`` [B,1,d]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None,
+                shard: Sharder = NO_SHARD, use_pallas: bool = False
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Time-mix block. x [B,S,d] -> (out, state {shift [B,1,d], wkv [B,H,Dk,Dv]})."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    xs = _token_shift(x, None if state is None else state["shift"])
+    mix = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x * mix[i] + xs * (1 - mix[i]) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(b, s, H, hd).swapaxes(1, 2)    # [B,H,S,hd]
+    k = (xk @ p["w_k"]).reshape(b, s, H, hd).swapaxes(1, 2)
+    v = (xv @ p["w_v"]).reshape(b, s, H, hd).swapaxes(1, 2)
+    w = jnp.exp(-jnp.exp((xw @ p["w_w"]).astype(jnp.float32) - 4.0))
+    w = w.reshape(b, s, H, hd).swapaxes(1, 2)
+    g = jax.nn.silu(xg @ p["w_g"])
+    r = shard(r, "attn_heads")
+    s0 = None if state is None else state["wkv"]
+    o, sT = kops.rwkv6(r, k, v, w, p["u"], s0, use_pallas=use_pallas)
+    o = o.swapaxes(1, 2).reshape(b, s, d)
+    # per-head group norm
+    o32 = o.astype(jnp.float32).reshape(b, s, H, hd)
+    o32 = (o32 - o32.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        o32.var(-1, keepdims=True) + 1e-5)
+    o = (o32.reshape(b, s, d) * p["ln_scale"]).astype(x.dtype)
+    out = (o * g) @ p["w_o"]
+    return out, {"shift": x[:, -1:], "wkv": sT}
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, jax.Array]:
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    H = d // hd
+    return {"shift": jnp.zeros((batch, 1, d), dtype),
+            "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)}

@@ -1,0 +1,9 @@
+# Serving: prefill/decode engine + the paper's hybrid scheduler applied to
+# LLM request batches (private pod replicas + costed elastic overflow).
+from .engine import Completion, InferenceEngine, Request
+from .hybrid import (HybridServingScheduler, ServingLatencyModel,
+                     plan_batch_jax, serving_dag)
+
+__all__ = ["InferenceEngine", "Request", "Completion",
+           "HybridServingScheduler", "ServingLatencyModel", "serving_dag",
+           "plan_batch_jax"]

@@ -1,0 +1,77 @@
+"""Inference engine: batched prefill + greedy decode over a Model.
+
+This is the *executor* for one serving replica (a mesh slice in
+production, the host CPU in tests). The hybrid scheduler (hybrid.py)
+decides which requests run on which replica or on elastic capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray           # [prompt_len] int32
+    max_new_tokens: int
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+
+
+class InferenceEngine:
+    """Greedy-decode engine with a fixed-size KV cache."""
+
+    def __init__(self, model: Model, params, cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, cache_len=cache_len))
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def generate_batch(self, requests: List[Request]) -> List[Completion]:
+        """Pads requests to a rectangular batch; greedy decode."""
+        if not requests:
+            return []
+        b = len(requests)
+        plens = [r.prompt_len for r in requests]
+        pmax = max(plens)
+        toks = np.zeros((b, pmax), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, pmax - r.prompt_len:] = r.tokens   # left-pad
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        logits.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+        n_new = max(r.max_new_tokens for r in requests)
+        out = np.zeros((b, n_new), np.int32)
+        t0 = time.perf_counter()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(n_new):
+            out[:, i] = np.asarray(tok)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pmax + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        decode_s = time.perf_counter() - t0
+        return [Completion(r.rid, out[i, :r.max_new_tokens],
+                           prefill_s, decode_s)
+                for i, r in enumerate(requests)]

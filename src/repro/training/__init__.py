@@ -1,0 +1,12 @@
+# Training substrate: AdamW (+int8-quantized moments), mesh-agnostic
+# checkpoints, fault tolerance, the train loop.
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .fault import PreemptionGuard, StepTimer, run_with_restarts
+from .optimizer import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                        dequantize_q8, quantize_q8)
+from .train_loop import Trainer, make_train_step
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "quantize_q8", "dequantize_q8", "save", "restore", "latest_step",
+           "AsyncCheckpointer", "PreemptionGuard", "StepTimer",
+           "run_with_restarts", "Trainer", "make_train_step"]

@@ -1,0 +1,147 @@
+"""Mesh-agnostic sharded checkpoints with atomic commit + async save.
+
+Layout:  <dir>/step_<N>/
+           manifest.json     {step, keys, shapes, dtypes, int8 moment flag}
+           <flatkey>.npy     global array per leaf
+
+Leaves are written as *global* arrays (numpy), so a checkpoint written on
+a 256-chip mesh restores onto any other mesh/device count (elastic
+scaling): restore just device_puts with the new shardings. Saves go to a
+``.tmp`` dir first and are renamed into place (atomic commit) — a
+preempted save never corrupts the latest checkpoint. ``keep`` old steps
+are garbage-collected.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Params = Any
+_SEP = "::"
+_UINT = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_savable(v: np.ndarray) -> Tuple[np.ndarray, str]:
+    """ml_dtypes (bf16, fp8...) are not np.load-able; save a uint view and
+    record the true dtype in the manifest."""
+    if v.dtype.kind not in "fiub":
+        return v.view(_UINT[v.dtype.itemsize]), str(v.dtype)
+    return v, str(v.dtype)
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.kind == "u" and not np.issubdtype(
+            np.dtype(getattr(ml_dtypes, dtype_name, np.float32)), np.integer):
+        try:
+            true_dt = np.dtype(getattr(ml_dtypes, dtype_name))
+            if true_dt.itemsize == arr.dtype.itemsize:
+                return arr.view(true_dt)
+        except (AttributeError, TypeError):
+            pass
+    return arr
+
+
+def _flatten(tree: Params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(tree: Params, ckpt_dir: str, step: int, keep: int = 3) -> str:
+    """Blocking atomic save. Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "keys": sorted(flat),
+                "shapes": {k: list(v.shape) for k, v in flat.items()},
+                "dtypes": {k: str(v.dtype) for k, v in flat.items()}}
+    for k, v in flat.items():
+        sv, _ = _to_savable(v)
+        np.save(os.path.join(tmp, k.replace("/", "_") + ".npy"), sv)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)             # atomic commit
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with the next training steps."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, tree: Params, step: int):
+        self.wait()
+        # materialize on host before handing to the thread
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        self._thread = threading.Thread(
+            target=save, args=(host_tree, self.ckpt_dir, step, self.keep),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Params, step: Optional[int] = None,
+            shardings: Optional[Params] = None) -> Tuple[Params, int]:
+    """Restore into the structure of ``like``; optionally device_put with
+    new ``shardings`` (elastic restore onto a different mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_kp = jax.tree_util.tree_leaves_with_path(like)
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves_kp))
+    out: List[Any] = []
+    for (kp, leaf), sh in zip(leaves_kp, shard_leaves):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        arr = np.load(os.path.join(d, key.replace("/", "_") + ".npy"))
+        arr = _from_saved(arr, manifest["dtypes"].get(key, str(arr.dtype)))
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {leaf.shape}")
+        if str(arr.dtype) != str(leaf.dtype):
+            arr = np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype))
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted([d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                    and not d.endswith(".tmp")])
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

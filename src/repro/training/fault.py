@@ -1,0 +1,83 @@
+"""Fault-tolerance plumbing: preemption capture, restart-with-resume,
+straggler detection.
+
+Straggler *mitigation* at the job level is the paper's own ACD mechanism
+(slow replica => queue delay grows => ACD < 0 => offload) — see
+serving/hybrid.py. Here we provide the training-loop side: a SIGTERM/
+SIGINT guard that requests a clean checkpoint at the next step boundary,
+an exponential-backoff restart wrapper that resumes from the latest
+checkpoint, and an EWMA step timer that flags straggling steps.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Optional, TypeVar
+
+T = TypeVar("T")
+
+
+class PreemptionGuard:
+    """Registers SIGTERM/SIGINT handlers; ``should_stop`` flips once."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._stop = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:   # not main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._stop = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+class StepTimer:
+    """EWMA step-time tracker; flags stragglers at ``threshold``x median."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: Optional[float] = None
+        self.last: Optional[float] = None
+        self.straggles = 0
+
+    def observe(self, dt: float) -> bool:
+        self.last = dt
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = dt > self.threshold * self.ewma
+        if is_straggler:
+            self.straggles += 1
+        # straggler steps do not poison the baseline
+        if not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+def run_with_restarts(make_and_run: Callable[[int], T], max_restarts: int = 3,
+                      backoff_s: float = 0.0,
+                      retryable=(RuntimeError, OSError)) -> T:
+    """Run ``make_and_run(attempt)``; on a retryable failure, back off and
+    re-invoke — the callee is expected to resume from its latest
+    checkpoint (see Trainer.fit). Non-retryable exceptions propagate."""
+    attempt = 0
+    while True:
+        try:
+            return make_and_run(attempt)
+        except retryable:
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            if backoff_s:
+                time.sleep(backoff_s * (2 ** (attempt - 1)))

@@ -1,0 +1,179 @@
+"""AdamW with optional int8 block-quantized moments.
+
+The quantized variant (``state_dtype="int8"``) stores m/v as int8 with a
+per-block fp32 scale (block = trailing 256 elements) — 4x less optimizer
+HBM than bf16, 8x less than fp32. This is what lets arctic-480b train on
+the 256-chip pod (DESIGN.md §6); dequant-update-requant runs fully
+sharded under ZeRO-1 specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+_BLOCK = 256
+
+
+# -- int8 block quantization ------------------------------------------------
+#
+# SHAPE-PRESERVING layout: q keeps the parameter's shape (int8) and scales
+# are blocked along the LAST dim ([..., nb, 1]). This is what lets the
+# quantized moments shard with exactly the parameter's PartitionSpec —
+# a flat-blocked layout would force XLA to replicate during the
+# blocked<->param reshape (catastrophic for 480B-param trees).
+
+
+def _last_block(shape) -> int:
+    last = int(shape[-1])
+    return _BLOCK if last % _BLOCK == 0 else last  # per-row fallback
+
+
+def _to_blocks(x: jax.Array) -> jax.Array:
+    b = _last_block(x.shape)
+    return x.reshape(*x.shape[:-1], x.shape[-1] // b, b)
+
+
+def quantize_q8(x: jax.Array) -> Dict[str, jax.Array]:
+    xb = _to_blocks(x.astype(jnp.float32))
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_q8(qs: Dict[str, jax.Array], shape, dtype=jnp.float32) -> jax.Array:
+    qb = _to_blocks(qs["q"].astype(jnp.float32))
+    return (qb * qs["scale"]).reshape(shape).astype(dtype)
+
+
+def quantize_q8_log(x: jax.Array) -> Dict[str, jax.Array]:
+    """Log-domain int8 for non-negative tensors (Adam second moments):
+    linear int8 on log(v) per block — relative error stays bounded across
+    the huge dynamic range of v, where linear quant would zero small
+    entries and blow up m/sqrt(v)."""
+    xb = jnp.maximum(_to_blocks(x.astype(jnp.float32)), 1e-30)
+    lx = jnp.log(xb)
+    lo = lx.min(axis=-1, keepdims=True)
+    scale = jnp.maximum((lx.max(axis=-1, keepdims=True) - lo) / 254.0, 1e-8)
+    q = (jnp.round((lx - lo) / scale) - 127.0).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "lo": lo.astype(jnp.float32),
+            "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_q8_log(qs: Dict[str, jax.Array], shape, dtype=jnp.float32
+                      ) -> jax.Array:
+    qb = _to_blocks(qs["q"].astype(jnp.float32))
+    lx = qs["lo"] + (qb + 127.0) * qs["scale"]
+    out = jnp.where(lx <= jnp.log(1e-29), 0.0, jnp.exp(lx))
+    return out.reshape(shape).astype(dtype)
+
+
+# -- AdamW --------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"       # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def _lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def _moment_init(x: jax.Array, dtype: str, kind: str):
+    if dtype == "int8":
+        qf = quantize_q8_log if kind == "v" else quantize_q8
+        return qf(jnp.zeros_like(x, jnp.float32))
+    return jnp.zeros_like(x, jnp.dtype(dtype))
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> AdamWState:
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(
+            lambda p: _moment_init(p, cfg.state_dtype, "m"), params),
+        v=jax.tree_util.tree_map(
+            lambda p: _moment_init(p, cfg.state_dtype, "v"), params))
+
+
+def _read(moment, shape, dtype_cfg: str, kind: str) -> jax.Array:
+    if dtype_cfg == "int8":
+        dq = dequantize_q8_log if kind == "v" else dequantize_q8
+        return dq(moment, shape)
+    return moment.astype(jnp.float32)
+
+
+def _write(x: jax.Array, dtype_cfg: str, kind: str):
+    if dtype_cfg == "int8":
+        qf = quantize_q8_log if kind == "v" else quantize_q8
+        return qf(x)
+    return x.astype(jnp.dtype(dtype_cfg))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 cfg: AdamWConfig) -> Tuple[Params, AdamWState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = _lr_at(cfg, state.step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_q8 = cfg.state_dtype == "int8"
+    treedef = jax.tree_util.tree_structure(
+        params, is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = _read(m, p.shape, cfg.state_dtype, "m")
+        v32 = _read(v, p.shape, cfg.state_dtype, "v")
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+        upd32 = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (upd32 + cfg.weight_decay * p32 * (p.ndim >= 2))
+        return new_p.astype(p.dtype), _write(m32, cfg.state_dtype, "m"), \
+            _write(v32, cfg.state_dtype, "v")
+
+    flat_p = jax.tree_util.tree_leaves(params)
+    is_moment_leaf = (lambda x: isinstance(x, dict) and "q" in x) if is_q8 else None
+    flat_m = jax.tree_util.tree_leaves(state.m, is_leaf=is_moment_leaf)
+    flat_v = jax.tree_util.tree_leaves(state.v, is_leaf=is_moment_leaf)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    outs = [upd(p, g, m, v) for p, g, m, v in
+            zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,103 @@
+"""Training loop: jitted step, sharded state, checkpoint/restart, metrics.
+
+``make_train_step`` builds the donated, sharding-annotated update; the
+``Trainer`` adds checkpointing (async, atomic), preemption handling and
+straggler accounting around it. Restore is mesh-agnostic: a run killed on
+one mesh resumes on another (elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from .checkpoint import AsyncCheckpointer, latest_step, restore
+from .fault import PreemptionGuard, StepTimer
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+Params = Any
+
+
+def make_train_step(model: Model, ocfg: AdamWConfig
+                    ) -> Callable[[Params, AdamWState, Dict[str, jax.Array]],
+                                  Tuple[Params, AdamWState, Dict[str, jax.Array]]]:
+    def step(params, opt_state, batch):
+        (loss, mets), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        params, opt_state, omets = adamw_update(grads, opt_state, params, ocfg)
+        return params, opt_state, {**mets, **omets}
+    return step
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Model
+    ocfg: AdamWConfig
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    jit_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self._step_fn = jax.jit(make_train_step(self.model, self.ocfg),
+                                **self.jit_kwargs)
+        self._ckpt = (AsyncCheckpointer(self.ckpt_dir, self.keep)
+                      if self.ckpt_dir else None)
+
+    def init_state(self, key: jax.Array) -> Tuple[Params, AdamWState]:
+        params = self.model.init(key)
+        return params, adamw_init(params, self.ocfg)
+
+    def maybe_restore(self, params: Params, opt_state: AdamWState,
+                      shardings=None) -> Tuple[Params, AdamWState, int]:
+        """Resume from the latest checkpoint if one exists (elastic: pass
+        the new mesh's shardings)."""
+        if not self.ckpt_dir or latest_step(self.ckpt_dir) is None:
+            return params, opt_state, 0
+        tree = {"params": params, "opt": opt_state}
+        sh = None
+        if shardings is not None:
+            sh = {"params": shardings[0], "opt": shardings[1]}
+        restored, step = restore(self.ckpt_dir, tree, shardings=sh)
+        return restored["params"], restored["opt"], step
+
+    def fit(self, params: Params, opt_state: AdamWState,
+            batches: Iterator[Dict[str, np.ndarray]], steps: int,
+            start_step: int = 0, log_every: int = 10,
+            guard: Optional[PreemptionGuard] = None,
+            fail_at: Optional[int] = None) -> Tuple[Params, AdamWState, list]:
+        """Run ``steps`` optimizer steps. ``fail_at`` injects a fault (for
+        restart tests). Returns (params, opt_state, metric log)."""
+        timer = StepTimer()
+        log = []
+        step = start_step
+        for batch in batches:
+            if step >= steps:
+                break
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected fault at step {step}")
+            t0 = time.perf_counter()
+            params, opt_state, mets = self._step_fn(
+                params, opt_state,
+                jax.tree_util.tree_map(jnp.asarray, batch))
+            jax.block_until_ready(mets["loss"])
+            straggled = timer.observe(time.perf_counter() - t0)
+            step += 1
+            if step % log_every == 0 or step == steps:
+                log.append({"step": step,
+                            **{k: float(v) for k, v in mets.items()},
+                            "straggled": straggled})
+            if self._ckpt and (step % self.ckpt_every == 0
+                               or (guard and guard.should_stop)):
+                self._ckpt.save({"params": params, "opt": opt_state}, step)
+            if guard and guard.should_stop:
+                break
+        if self._ckpt:
+            self._ckpt.save({"params": params, "opt": opt_state}, step)
+            self._ckpt.wait()
+        return params, opt_state, log

@@ -1,0 +1,15 @@
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
+# and benches must see the single real CPU device. Multi-device tests spawn
+# subprocesses with their own env (tests/_subproc.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,122 @@
+"""Unit tests: cost model, priorities, greedy math (Alg. 1 pieces)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LAMBDA_COST, CostModel, acd_sweep, acd_sweep_jax,
+                        hcf_key, init_offload, init_offload_jax, lambda_cost,
+                        offload_negative_acd, sort_queue, spt_key, stage_costs,
+                        t_max)
+
+
+class TestCostModel:
+    def test_eqn1_values(self):
+        # h(t) = 100*ceil(t/100) * M/1024 * 0.00001667/1000
+        assert float(lambda_cost(1.0, 1024.0)) == pytest.approx(
+            100 * 1.0 * 0.00001667 / 1000)
+        assert float(lambda_cost(100.0, 1024.0)) == pytest.approx(
+            100 * 0.00001667 / 1000)
+        assert float(lambda_cost(101.0, 1024.0)) == pytest.approx(
+            200 * 0.00001667 / 1000)
+        assert float(lambda_cost(250.0, 2048.0)) == pytest.approx(
+            300 * 2.0 * 0.00001667 / 1000)
+
+    def test_rounding_step(self):
+        # constant within each 100ms quantum
+        assert float(lambda_cost(101.0, 512)) == float(lambda_cost(199.9, 512))
+        assert float(lambda_cost(201.0, 512)) > float(lambda_cost(199.9, 512))
+
+    def test_vectorized_and_np_agree(self, rng):
+        t = rng.uniform(1, 5000, 100)
+        m = rng.choice([512.0, 1024.0, 3008.0], 100)
+        a = np.asarray(LAMBDA_COST(t, m))
+        b = LAMBDA_COST.np_cost(t, m)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_custom_quantum(self):
+        cm = CostModel(quantum_ms=1000.0)
+        assert float(cm(1.0, 1024.0)) == pytest.approx(1000 * 0.00001667 / 1000)
+
+    def test_stage_costs_shape(self, rng):
+        P = rng.uniform(0.1, 2.0, (5, 3))
+        H = stage_costs(P, np.array([512.0, 1024.0, 2048.0]))
+        assert H.shape == (5, 3)
+        assert (H > 0).all()
+
+
+class TestPriorities:
+    def test_spt_head_is_shortest(self, rng):
+        P = rng.uniform(1, 10, (20, 2))
+        H = rng.uniform(0, 1, (20, 2))
+        keys = spt_key(P, H)
+        order = sort_queue(np.arange(20), keys)
+        totals = P.sum(1)
+        assert totals[order[0]] == totals.min()
+        assert totals[order[-1]] == totals.max()
+
+    def test_hcf_head_is_most_expensive(self, rng):
+        P = rng.uniform(1, 10, (20, 2))
+        H = rng.uniform(0, 1, (20, 2))
+        order = sort_queue(np.arange(20), hcf_key(P, H))
+        totals = H.sum(1)
+        assert totals[order[0]] == totals.max()
+
+    def test_stage_keys(self, rng):
+        P = rng.uniform(1, 10, (10, 3))
+        H = rng.uniform(0, 1, (10, 3))
+        k1 = spt_key(P, H, stage=1)
+        np.testing.assert_array_equal(k1, P[:, 1])
+
+
+class TestInitOffload:
+    def test_capacity_prefix(self):
+        C = np.array([3.0, 1.0, 2.0, 5.0])
+        keys = C.copy()          # SPT whole-job order: 1,2,3,5
+        off = init_offload(C, keys, capacity=6.0)
+        # keep 1+2+3=6 <= 6; offload the 5
+        np.testing.assert_array_equal(off, [False, False, False, True])
+
+    def test_zero_capacity_offloads_all(self):
+        C = np.ones(5)
+        assert init_offload(C, C, 0.0).all()
+
+    def test_infinite_capacity_offloads_none(self):
+        C = np.ones(5)
+        assert not init_offload(C, C, 1e9).any()
+
+    def test_t_max(self):
+        assert t_max(np.array([2, 2]), 30.0) == 120.0
+
+    def test_jax_twin(self, rng):
+        for _ in range(5):
+            C = rng.uniform(0.5, 4.0, 64)
+            k = rng.uniform(0, 1, 64)
+            cap = float(rng.uniform(5, 60))
+            a = init_offload(C, k, cap)
+            b = np.asarray(init_offload_jax(jnp.asarray(C), jnp.asarray(k), cap))
+            np.testing.assert_array_equal(a, b)
+
+
+class TestACD:
+    def test_formula(self):
+        # ACD = D - (t + queue_delay/I + path_remaining)
+        P_q = np.array([2.0, 3.0])
+        path = np.array([4.0, 4.0])
+        acd = acd_sweep(P_q, path, t=10.0, deadline=20.0, replicas=2)
+        assert acd[0] == pytest.approx(20 - (10 + 0 + 4))
+        assert acd[1] == pytest.approx(20 - (10 + 2.0 / 2 + 4))
+
+    def test_negative_triggers_offload(self):
+        acd = np.array([1.0, -0.1, 0.0])
+        np.testing.assert_array_equal(offload_negative_acd(acd),
+                                      [False, True, False])
+
+    def test_jax_twin_with_mask(self, rng):
+        P = rng.uniform(0.5, 2.0, 16)
+        path = rng.uniform(1, 5, 16)
+        a = acd_sweep(P[:10], path[:10], 3.0, 30.0, 2)
+        mask = jnp.asarray(np.arange(16) < 10, jnp.float32)
+        b = np.asarray(acd_sweep_jax(jnp.asarray(P), jnp.asarray(path),
+                                     3.0, 30.0, 2, mask))
+        np.testing.assert_allclose(a, b[:10], rtol=1e-5)
+        assert np.isinf(b[10:]).all()

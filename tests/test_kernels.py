@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _arr(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [(64, 64, 64), (200, 300, 150),
+                                       (8, 512, 8), (129, 257, 65)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, rng, m, k, n, dtype):
+        x, y = _arr(rng, (m, k), dtype), _arr(rng, (k, n), dtype)
+        out = ops.matmul(x, y, use_pallas=True)
+        want = ref.matmul_ref(x, y)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **TOL[dtype])
+
+    def test_block_shapes(self, rng):
+        x, y = _arr(rng, (256, 256), jnp.float32), _arr(rng, (256, 256), jnp.float32)
+        for bm, bn, bk in [(64, 64, 64), (128, 128, 128), (128, 64, 256)]:
+            out = ops.matmul(x, y, use_pallas=True, bm=bm, bn=bn, bk=bk)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(x @ y),
+                                       rtol=1e-3, atol=1e-3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_gqa_causal(self, rng, hq, hkv, causal):
+        q = _arr(rng, (2, hq, 48, 32), jnp.float32)
+        k = _arr(rng, (2, hkv, 48, 32), jnp.float32)
+        v = _arr(rng, (2, hkv, 48, 32), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=causal, use_pallas=True,
+                                  bq=16, bk=16)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("window", [8, 16, 64])
+    def test_sliding_window(self, rng, window):
+        q = _arr(rng, (1, 2, 64, 16), jnp.float32)
+        k = _arr(rng, (1, 2, 64, 16), jnp.float32)
+        v = _arr(rng, (1, 2, 64, 16), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  use_pallas=True, bq=16, bk=16)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_unpadded_vs_padded_lengths(self, rng):
+        q = _arr(rng, (1, 2, 37, 16), jnp.float32)   # non-multiple of block
+        k = _arr(rng, (1, 2, 53, 16), jnp.float32)
+        v = _arr(rng, (1, 2, 53, 16), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True, use_pallas=True,
+                                  bq=16, bk=16)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self, rng):
+        q = _arr(rng, (1, 4, 32, 32), jnp.bfloat16)
+        k = _arr(rng, (1, 2, 32, 32), jnp.bfloat16)
+        v = _arr(rng, (1, 2, 32, 32), jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, use_pallas=True, bq=16, bk=16)
+        want = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("hq,hkv,s", [(4, 4, 64), (8, 2, 100), (16, 1, 48)])
+    def test_vs_ref(self, rng, hq, hkv, s):
+        q = _arr(rng, (2, hq, 32), jnp.float32)
+        k = _arr(rng, (2, hkv, s, 32), jnp.float32)
+        v = _arr(rng, (2, hkv, s, 32), jnp.float32)
+        lens = jnp.asarray(rng.integers(1, s + 1, 2), jnp.int32)
+        out = ops.flash_decode(q, k, v, lens, use_pallas=True, bk=16)
+        want = ref.flash_decode_ref(q, k, v, length=lens)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_full_length(self, rng):
+        q = _arr(rng, (1, 4, 16), jnp.float32)
+        k = _arr(rng, (1, 2, 40, 16), jnp.float32)
+        v = _arr(rng, (1, 2, 40, 16), jnp.float32)
+        out = ops.flash_decode(q, k, v, use_pallas=True, bk=16)
+        want = ref.flash_decode_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("b,t,d", [(1, 16, 8), (3, 50, 16), (4, 33, 32)])
+    def test_vs_ref(self, rng, b, t, d):
+        x = _arr(rng, (b, t, d), jnp.float32)
+        a = jnp.asarray(rng.uniform(0.2, 0.99, (b, t, d)), jnp.float32)
+        y1, h1 = ops.rglru(x, a, use_pallas=True, bb=2, bt=16)
+        y2, h2 = ref.rglru_ref(x, a)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_initial_state_chaining(self, rng):
+        """Running [0:t1] then [t1:T] with carried state == full scan."""
+        x = _arr(rng, (2, 32, 8), jnp.float32)
+        a = jnp.asarray(rng.uniform(0.3, 0.95, (2, 32, 8)), jnp.float32)
+        y_full, h_full = ref.rglru_ref(x, a)
+        y1, h1 = ops.rglru(x[:, :16], a[:, :16], use_pallas=True, bt=8)
+        y2, h2 = ops.rglru(x[:, 16:], a[:, 16:], h1, use_pallas=True, bt=8)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 16:]),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("b,h,t,dk", [(1, 1, 16, 8), (2, 2, 40, 16)])
+    def test_vs_ref(self, rng, b, h, t, dk):
+        r = _arr(rng, (b, h, t, dk), jnp.float32)
+        k = _arr(rng, (b, h, t, dk), jnp.float32)
+        v = _arr(rng, (b, h, t, dk), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.3, 0.98, (b, h, t, dk)), jnp.float32)
+        u = _arr(rng, (h, dk), jnp.float32)
+        o1, s1 = ops.rwkv6(r, k, v, w, u, use_pallas=True, bt=8)
+        o2, s2 = ref.rwkv6_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_state_chaining(self, rng):
+        b, h, t, dk = 1, 2, 24, 8
+        r = _arr(rng, (b, h, t, dk), jnp.float32)
+        k = _arr(rng, (b, h, t, dk), jnp.float32)
+        v = _arr(rng, (b, h, t, dk), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.4, 0.95, (b, h, t, dk)), jnp.float32)
+        u = _arr(rng, (h, dk), jnp.float32)
+        o_full, s_full = ref.rwkv6_ref(r, k, v, w, u)
+        o1, s1 = ops.rwkv6(r[:, :, :12], k[:, :, :12], v[:, :, :12],
+                           w[:, :, :12], u, use_pallas=True, bt=4)
+        o2, s2 = ops.rwkv6(r[:, :, 12:], k[:, :, 12:], v[:, :, 12:],
+                           w[:, :, 12:], u, s1, use_pallas=True, bt=4)
+        np.testing.assert_allclose(np.asarray(o2),
+                                   np.asarray(o_full[:, :, 12:]),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,84 @@
+"""Exact reference solvers vs the greedy scheduler."""
+import numpy as np
+import pytest
+
+from repro.core import (johnson_makespan, knapsack_lower_bound, matrix_app,
+                        simulate, simulate_all_private, solve_milp, video_app)
+from repro.core.dag import AppDAG, Stage
+
+
+def _instance(rng, dag, J):
+    P_priv = rng.uniform(1.0, 4.0, (J, dag.num_stages))
+    P_pub = P_priv * rng.uniform(0.4, 0.8, (J, dag.num_stages))
+    U = np.full_like(P_priv, 0.1)
+    D = np.full_like(P_priv, 0.1)
+    return P_priv, P_pub, U, D
+
+
+def test_milp_beats_or_matches_greedy(rng):
+    dag = matrix_app(replicas=2)
+    J = 6
+    P_priv, P_pub, U, D = _instance(rng, dag, J)
+    c_max = float(P_priv.sum() / 3.0)
+    m = solve_milp(dag, P_priv, P_pub, c_max, U, D, time_limit_s=30)
+    assert m.feasible
+    pred = dict(P_private=P_priv, P_public=P_pub, upload=U, download=D)
+    for order in ("spt", "hcf"):
+        g = simulate(dag, pred, c_max=c_max, order=order)
+        assert m.cost_usd <= g.cost_usd + 1e-9
+        assert g.met_deadline
+
+
+def test_milp_all_private_when_loose(rng):
+    dag = matrix_app(replicas=2)
+    P_priv, P_pub, U, D = _instance(rng, dag, 4)
+    m = solve_milp(dag, P_priv, P_pub, c_max=1e4, time_limit_s=20)
+    assert m.feasible
+    assert m.cost_usd == pytest.approx(0.0, abs=1e-12)
+    assert m.e.all()            # everything private
+
+
+def test_milp_infeasible_when_impossible(rng):
+    dag = matrix_app(replicas=1)
+    P_priv, P_pub, U, D = _instance(rng, dag, 4)
+    m = solve_milp(dag, P_priv, P_pub, c_max=1e-3, upload=U, download=D,
+                   time_limit_s=20)
+    assert not m.feasible       # even all-public can't finish in 1ms
+
+
+def test_milp_respects_precedence(rng):
+    dag = video_app(replicas=1)
+    J = 3
+    P_priv, P_pub, U, D = _instance(rng, dag, J)
+    c_max = float(P_priv.sum() / 1.5)
+    m = solve_milp(dag, P_priv, P_pub, c_max, time_limit_s=60,
+                   include_sink_download=False)
+    assert m.feasible
+    for j in range(J):
+        for (p, q) in dag.edges:
+            dur_p = P_priv[j, p] if m.e[j, p] else P_pub[j, p]
+            assert m.s[j, q] >= m.s[j, p] + dur_p - 1e-6
+
+
+def test_johnson_is_optimal_lower_bound(rng):
+    """DES all-private makespan >= Johnson's optimal F2||Cmax."""
+    dag = matrix_app(replicas=1)
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        P = r.uniform(0.5, 4.0, (8, 2))
+        pred = dict(P_private=P, P_public=P)
+        res = simulate_all_private(dag, pred)
+        assert res.makespan >= johnson_makespan(P) - 1e-9
+
+
+def test_johnson_known_case():
+    # jobs (3,2),(1,4): Johnson order j2,j1 -> m1: 0-1,1-4; m2: 1-5,5-7
+    P = np.array([[3.0, 2.0], [1.0, 4.0]])
+    assert johnson_makespan(P) == pytest.approx(7.0)
+
+
+def test_knapsack_bound(rng):
+    P = rng.uniform(1, 3, 10)
+    H = rng.uniform(0.1, 1.0, 10)
+    lb = knapsack_lower_bound(P, H, c_max=5.0, replicas=2)
+    assert 0 <= lb <= H.sum()

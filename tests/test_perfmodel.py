@@ -1,0 +1,61 @@
+"""Ridge performance models (Sec. IV-B)."""
+import numpy as np
+import pytest
+
+from repro.core import (fit_app_perf_model, fit_ridge, grid_search_ridge, mape,
+                        matrix_app)
+
+
+def test_ridge_recovers_linear(rng):
+    X = rng.normal(0, 2, (300, 4))
+    w = np.array([1.5, -2.0, 0.3, 0.0])
+    y = X @ w + 5.0
+    m = fit_ridge(X, y, lam=1e-4)
+    pred = np.asarray(m.predict(X))
+    assert mape(y + 10, pred + 10) < 0.5   # shift away from zero for MAPE
+
+
+def test_grid_search_picks_small_lambda_on_clean_data(rng):
+    X = rng.normal(0, 1, (200, 3))
+    y = X @ np.array([1.0, 2.0, 3.0]) + 1.0
+    m, lam = grid_search_ridge(X, y, lams=(1e-3, 1e3))
+    assert lam == pytest.approx(1e-3, rel=1e-3)
+
+
+def test_mape():
+    assert mape([100, 200], [110, 180]) == pytest.approx(10.0)
+
+
+def test_app_perf_model_propagation(rng):
+    """Downstream stage features come from predicted upstream sizes."""
+    dag = matrix_app()
+    N = 200
+    base = np.stack([rng.uniform(1e5, 1e6, N), rng.uniform(1e4, 1e5, N)], 1)
+    outsize = np.stack([base[:, 0] * 0.5, base[:, 0] * 0.25], 1)
+    priv = np.stack([base[:, 0] * 1e-6 + 0.2,
+                     outsize[:, 0] * 2e-6 + 0.1], 1)
+    pub = priv * 0.5
+    traces = {"base_features": base, "private": priv, "public": pub,
+              "outsize": outsize, "overhead": np.full((N, 2), 0.017)}
+    pm = fit_app_perf_model(dag, traces)
+    pred = pm.predict(base[:50])
+    assert mape(priv[:50, 0], pred["P_private"][:50, 0]) < 3.0
+    assert mape(priv[:50, 1], pred["P_private"][:50, 1]) < 5.0
+    assert mape(outsize[:50, 0], pred["sizes"][:50, 0]) < 3.0
+    # transfers are positive and increase with size
+    assert (pred["upload"] >= 0).all()
+
+
+def test_overhead_is_learned_as_mean(rng):
+    dag = matrix_app()
+    N = 100
+    base = np.stack([rng.uniform(1e5, 1e6, N), rng.uniform(1e4, 1e5, N)], 1)
+    traces = {
+        "base_features": base,
+        "private": np.full((N, 2), 1.0) + 0.02,
+        "public": np.full((N, 2), 0.5),
+        "outsize": np.tile(base[:, :1], (1, 2)),
+        "overhead": np.full((N, 2), 0.02),
+    }
+    pm = fit_app_perf_model(dag, traces)
+    assert pm.stages[0].overhead_s == pytest.approx(0.02)

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LAMBDA_COST, init_offload, johnson_makespan,
+                        lambda_cost, matrix_app, simulate)
+from repro.training.optimizer import (dequantize_q8, dequantize_q8_log,
+                                      quantize_q8, quantize_q8_log)
+import jax.numpy as jnp
+
+f_lat = st.floats(min_value=0.5, max_value=50.0)
+
+
+class TestCostProperties:
+    @given(t=st.floats(min_value=0.001, max_value=1e6),
+           m=st.sampled_from([128.0, 512.0, 1024.0, 3008.0]))
+    def test_cost_at_least_linear(self, t, m):
+        """Rounding never undercharges: h(t) >= t * M/1024 * rate.
+        (float64 np path; the f32 jnp path agrees to ~1e-6 rel.)"""
+        h = float(LAMBDA_COST.np_cost(t, m))
+        assert h >= t * (m / 1024.0) * (0.00001667 / 1000) - 1e-15
+
+    @given(t1=st.floats(min_value=0.1, max_value=1e5),
+           dt=st.floats(min_value=0.0, max_value=1e5))
+    def test_cost_monotone(self, t1, dt):
+        assert float(LAMBDA_COST.np_cost(t1 + dt, 1024.0)) >= float(
+            LAMBDA_COST.np_cost(t1, 1024.0)) - 1e-15
+
+
+class TestInitOffloadProperties:
+    @given(st.lists(f_lat, min_size=1, max_size=40),
+           st.floats(min_value=0.0, max_value=500.0))
+    @settings(max_examples=60, deadline=None)
+    def test_kept_fits_capacity_and_is_priority_prefix(self, cs, cap):
+        C = np.array(cs)
+        keys = C.copy()   # SPT
+        off = init_offload(C, keys, cap)
+        kept = C[~off]
+        assert kept.sum() <= cap + 1e-9
+        # kept jobs form a prefix in priority order
+        order = np.argsort(keys, kind="stable")
+        seen_off = False
+        for j in order:
+            if off[j]:
+                seen_off = True
+            else:
+                assert not seen_off, "kept job after an offloaded one"
+
+    @given(st.lists(f_lat, min_size=2, max_size=30))
+    @settings(max_examples=40, deadline=None)
+    def test_capacity_monotonicity(self, cs):
+        C = np.array(cs)
+        o_small = init_offload(C, C, 10.0).sum()
+        o_big = init_offload(C, C, 100.0).sum()
+        assert o_big <= o_small
+
+
+class TestSimulatorProperties:
+    @given(st.integers(min_value=1, max_value=25),
+           st.integers(min_value=0, max_value=10**6),
+           st.floats(min_value=0.3, max_value=0.9),
+           st.sampled_from(["spt", "hcf"]))
+    @settings(max_examples=30, deadline=None)
+    def test_invariants(self, J, seed, speed, order):
+        rng = np.random.default_rng(seed)
+        dag = matrix_app(replicas=2)
+        P = rng.uniform(0.5, 5.0, (J, 2))
+        pred = dict(P_private=P, P_public=P * speed)
+        c_max = float(P.sum() / rng.uniform(1.5, 4.0))
+        res = simulate(dag, pred, c_max=c_max, order=order,
+                       include_transfers=False)
+        # conservation: every (job, stage) executed exactly once
+        assert np.isfinite(res.end).all()
+        dur = res.end - res.start
+        exp = np.where(res.public_mask, pred["P_public"], pred["P_private"])
+        np.testing.assert_allclose(dur, exp, rtol=1e-9)
+        # precedence
+        assert dag.validate_schedule(res.start, dur)
+        # downstream-public rule
+        assert (res.public_mask[:, 1] >= res.public_mask[:, 0]).all()
+        # cost consistency: recompute from public executions
+        mem = dag.mem_mb
+        cost = sum(float(LAMBDA_COST.np_cost(pred["P_public"][j, k] * 1e3,
+                                             mem[k]))
+                   for j in range(J) for k in range(2)
+                   if res.public_mask[j, k])
+        assert res.cost_usd == pytest.approx(cost, rel=1e-9)
+
+    @given(st.integers(min_value=2, max_value=12),
+           st.integers(min_value=0, max_value=10**6))
+    @settings(max_examples=30, deadline=None)
+    def test_johnson_lower_bounds_any_schedule(self, J, seed):
+        rng = np.random.default_rng(seed)
+        dag = matrix_app(replicas=1)
+        P = rng.uniform(0.5, 5.0, (J, 2))
+        pred = dict(P_private=P, P_public=P * 1e9)  # force all-private
+        res = simulate(dag, pred, c_max=1e12, order="spt",
+                       include_transfers=False)
+        assert res.makespan >= johnson_makespan(P) - 1e-9
+
+
+class TestQuantizationProperties:
+    @given(st.integers(min_value=0, max_value=10**6),
+           st.integers(min_value=1, max_value=2000),
+           st.floats(min_value=1e-6, max_value=1e3))
+    @settings(max_examples=40, deadline=None)
+    def test_q8_roundtrip_bounded(self, seed, n, scale):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+        qs = quantize_q8(x)
+        back = np.asarray(dequantize_q8(qs, (n,)))
+        blocks = np.asarray(x).reshape(-1)
+        # error bounded by scale/127 per block (linear quant)
+        err = np.abs(back - blocks)
+        assert (err <= np.abs(blocks).max() / 127.0 + 1e-7).all()
+
+    @given(st.integers(min_value=0, max_value=10**6),
+           st.integers(min_value=1, max_value=2000))
+    @settings(max_examples=40, deadline=None)
+    def test_q8_log_relative_error(self, seed, n):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(np.abs(rng.normal(0, 1, n)) ** 3 + 1e-12, jnp.float32)
+        qs = quantize_q8_log(x)
+        back = np.asarray(dequantize_q8_log(qs, (n,)))
+        rel = np.abs(back - np.asarray(x)) / np.asarray(x)
+        # log-domain quant: relative error bounded by exp(range/254)-1
+        assert np.median(rel) < 0.25
+        assert (back >= 0).all()

@@ -1,0 +1,109 @@
+"""Serving: engine decode loop + the hybrid Skedulix-over-LLM scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import Model
+from repro.serving import (HybridServingScheduler, InferenceEngine, Request,
+                           ServingLatencyModel, plan_batch_jax, serving_dag)
+
+
+class TestEngine:
+    def test_generate_batch(self):
+        cfg = get_smoke_config("llama3-8b")
+        m = Model(cfg, remat=False)
+        params = m.init(jax.random.PRNGKey(0))
+        eng = InferenceEngine(m, params, cache_len=64)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, rng.integers(4, 20),
+                                        ).astype(np.int32), 8)
+                for i in range(3)]
+        outs = eng.generate_batch(reqs)
+        assert len(outs) == 3
+        for c in outs:
+            assert c.tokens.shape == (8,)
+            assert ((0 <= c.tokens) & (c.tokens < cfg.vocab_size)).all()
+            assert c.prefill_s > 0 and c.decode_s > 0
+
+    def test_greedy_decode_deterministic(self):
+        cfg = get_smoke_config("rwkv6-1.6b")
+        m = Model(cfg, remat=False)
+        params = m.init(jax.random.PRNGKey(1))
+        eng = InferenceEngine(m, params, cache_len=64)
+        req = [Request(0, np.arange(10, dtype=np.int32), 6)]
+        a = eng.generate_batch(req)[0].tokens
+        b = eng.generate_batch(req)[0].tokens
+        np.testing.assert_array_equal(a, b)
+
+
+class TestLatencyModel:
+    def test_prefill_scales_with_length(self):
+        lm = ServingLatencyModel(get_config("llama3-8b"))
+        t = lm.prefill_s(np.array([512, 1024, 2048]))
+        assert t[1] == pytest.approx(2 * t[0], rel=1e-6)
+        assert t[2] == pytest.approx(4 * t[0], rel=1e-6)
+
+    def test_decode_memory_bound_grows_with_kv(self):
+        lm = ServingLatencyModel(get_config("llama3-8b"))
+        t1 = lm.decode_s(np.array([64]), np.array([1024]))
+        t2 = lm.decode_s(np.array([64]), np.array([32768]))
+        assert t2 > t1
+
+    def test_window_bounds_kv_for_hybrid_arch(self):
+        lm = ServingLatencyModel(get_config("recurrentgemma-9b"))
+        t1 = lm.decode_s(np.array([64]), np.array([4096]))
+        t2 = lm.decode_s(np.array([64]), np.array([500000]))
+        np.testing.assert_allclose(t1, t2, rtol=1e-6)  # window-capped
+
+
+class TestHybridScheduler:
+    @pytest.fixture(scope="class")
+    def sched(self):
+        h = HybridServingScheduler(get_config("llama3-8b"))
+        h.fit_perf_models(n_train=150)
+        return h
+
+    def test_hybrid_meets_deadline_cheaper_than_public(self, sched):
+        rng = np.random.default_rng(2)
+        plen = rng.integers(128, 4096, 48)
+        ntok = rng.integers(32, 512, 48)
+        pub, priv = sched.baselines(plen, ntok)
+        c_max = priv.makespan * 0.5
+        rep = sched.schedule(plen, ntok, c_max=c_max, order="spt")
+        assert rep.result.makespan <= c_max * 1.15
+        assert 0 < rep.result.cost_usd < pub.cost_usd
+        assert rep.result.makespan < priv.makespan
+
+    def test_spt_cheaper_than_hcf_for_compute_heavy(self, sched):
+        rng = np.random.default_rng(3)
+        plen = rng.integers(128, 4096, 64)
+        ntok = rng.integers(32, 512, 64)
+        _, priv = sched.baselines(plen, ntok)
+        c_max = priv.makespan * 0.55
+        spt = sched.schedule(plen, ntok, c_max=c_max, order="spt")
+        hcf = sched.schedule(plen, ntok, c_max=c_max, order="hcf")
+        # paper Sec. V-C: SPT offloads fewer/longer jobs => cheaper
+        assert spt.result.cost_usd <= hcf.result.cost_usd * 1.1
+
+    def test_plan_batch_jax_matches_numpy(self, sched):
+        rng = np.random.default_rng(4)
+        P = rng.uniform(0.1, 2.0, (32, 3)).astype(np.float32)
+        keys = P.sum(1)
+        from repro.core import init_offload
+        want = init_offload(P.sum(1), keys, 20.0)
+        got = np.asarray(plan_batch_jax(jnp.asarray(P), jnp.asarray(keys),
+                                        20.0))
+        np.testing.assert_array_equal(want, got)
+
+    def test_offloads_decrease_with_deadline(self, sched):
+        rng = np.random.default_rng(5)
+        plen = rng.integers(128, 4096, 48)
+        ntok = rng.integers(32, 512, 48)
+        _, priv = sched.baselines(plen, ntok)
+        offs = []
+        for frac in (0.4, 0.6, 0.9):
+            rep = sched.schedule(plen, ntok, c_max=priv.makespan * frac)
+            offs.append(rep.result.n_offloaded_stages)
+        assert offs[0] >= offs[1] >= offs[2]

@@ -1,0 +1,104 @@
+"""Discrete-event simulator: schedule validity, baselines, stragglers."""
+import numpy as np
+import pytest
+
+from repro.core import (APPS, LAMBDA_COST, matrix_app, simulate,
+                        simulate_all_private, simulate_all_public, video_app)
+
+
+def _mk(rng, dag, J=20, pub_speed=0.5):
+    P_priv = rng.uniform(1.0, 5.0, (J, dag.num_stages))
+    P_pub = P_priv * pub_speed
+    return dict(P_private=P_priv, P_public=P_pub,
+                upload=np.full_like(P_priv, 0.2),
+                download=np.full_like(P_priv, 0.2))
+
+
+@pytest.mark.parametrize("dag", [matrix_app(), video_app()])
+@pytest.mark.parametrize("order", ["spt", "hcf"])
+def test_schedule_validity(dag, order, rng):
+    pred = _mk(rng, dag)
+    res = simulate(dag, pred, c_max=25.0, order=order)
+    J, M = pred["P_private"].shape
+    # every stage executed exactly once
+    assert np.isfinite(res.start).all() and np.isfinite(res.end).all()
+    # durations match location-specific latencies
+    dur = res.end - res.start
+    exp = np.where(res.public_mask, pred["P_public"], pred["P_private"])
+    np.testing.assert_allclose(dur, exp, rtol=1e-9)
+    # precedence constraints hold
+    assert dag.validate_schedule(res.start, dur)
+    # replica exclusivity: concurrent private executions per stage <= I_k
+    for k in range(M):
+        priv = np.where(~res.public_mask[:, k])[0]
+        events = sorted([(res.start[j, k], 1) for j in priv]
+                        + [(res.end[j, k], -1) for j in priv])
+        level = 0
+        for _, d in events:
+            level += d
+            assert level <= dag.stages[k].replicas
+    # makespan = latest completion
+    assert res.makespan == pytest.approx(res.completion.max())
+
+
+def test_public_downstream_rule(rng):
+    """Once a stage runs public, descendants run public (Sec. III-A)."""
+    dag = video_app()
+    pred = _mk(rng, dag, J=40)
+    res = simulate(dag, pred, c_max=15.0)
+    for j in range(40):
+        for k in range(dag.num_stages):
+            if res.public_mask[j, k]:
+                for d in dag.descendants(k):
+                    assert res.public_mask[j, d], (j, k, d)
+
+
+def test_tight_deadline_offloads_more(rng):
+    dag = matrix_app()
+    pred = _mk(rng, dag, J=50)
+    loose = simulate(dag, pred, c_max=80.0)
+    tight = simulate(dag, pred, c_max=30.0)
+    assert tight.n_offloaded_stages >= loose.n_offloaded_stages
+    assert tight.cost_usd >= loose.cost_usd
+
+
+def test_all_public_faster_but_costly(rng):
+    dag = matrix_app()
+    pred = _mk(rng, dag, J=30)
+    pub = simulate_all_public(dag, pred)
+    priv = simulate_all_private(dag, pred)
+    assert pub.makespan < priv.makespan       # unlimited parallelism
+    assert pub.cost_usd > 0 and priv.cost_usd == 0.0
+    assert pub.public_mask.all() and not priv.public_mask.any()
+
+
+def test_predicted_vs_actual_divergence(rng):
+    """Scheduler sees predictions; clock advances with actuals (Fig. 5)."""
+    dag = matrix_app()
+    pred = _mk(rng, dag, J=30)
+    act = {k: v * rng.lognormal(0, 0.1, v.shape) for k, v in pred.items()}
+    res = simulate(dag, pred, act, c_max=40.0)
+    dur = res.end - res.start
+    exp = np.where(res.public_mask, act["P_public"], act["P_private"])
+    np.testing.assert_allclose(dur, exp, rtol=1e-9)
+
+
+def test_straggler_triggers_acd_offload(rng):
+    """A slow replica grows queue delay => ACD offloads more stages —
+    the paper's mechanism doubling as straggler mitigation."""
+    dag = matrix_app(replicas=2)
+    pred = _mk(rng, dag, J=40, pub_speed=0.4)
+    base = simulate(dag, pred, c_max=45.0)
+    slow = simulate(dag, pred, c_max=45.0,
+                    replica_slowdown={(0, 0): 3.0, (1, 0): 3.0})
+    assert slow.n_offloaded_stages > base.n_offloaded_stages
+    # deadline still met despite the straggler
+    assert slow.makespan <= 45.0 * 1.2
+
+
+def test_must_private_pins(rng):
+    dag = matrix_app()
+    object.__setattr__(dag.stages[0], "must_private", True)
+    pred = _mk(rng, dag, J=30)
+    res = simulate(dag, pred, c_max=10.0)   # very tight
+    assert not res.public_mask[:, 0].any()
