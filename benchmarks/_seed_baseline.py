@@ -1,0 +1,263 @@
+"""Frozen copy of the seed-revision scheduler DES, for perf trajectories.
+
+``bench_scheduler_throughput`` reports speedups of the current engines
+against the repository's original (pre-optimization) discrete-event
+simulator. Rather than requiring a git checkout at benchmark time, the
+seed hot path is vendored here verbatim — per-event ``list.sort`` queue
+maintenance, O(E) adjacency scans on every call, ``descendants()``
+recomputed per offload — wrapped around a :class:`_SeedDAG` adapter that
+reproduces the seed's uncached structure queries via the ``naive_*``
+reference functions kept in :mod:`repro.core.dag`.
+
+Do not "fix" the inefficiencies in this file: it is the measurement
+baseline, not production code. Functional output is identical to
+``repro.core.simulate`` (the tests assert this transitively through the
+engine equivalence suite).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost import CostModel, LAMBDA_COST
+from repro.core.dag import (AppDAG, naive_descendants, naive_predecessors,
+                            naive_sinks, naive_sources, naive_successors,
+                            naive_topo_order)
+from repro.core.greedy import init_offload, t_max
+from repro.core.priority import ORDERS
+from repro.core.simulator import SimResult
+
+WAITING, QUEUED, RUNNING, DONE = 0, 1, 2, 3
+PRIVATE, PUBLIC = 0, 1
+
+
+class _SeedDAG:
+    """Seed-era structure queries: fresh edge scans on every call."""
+
+    def __init__(self, dag: AppDAG):
+        self.stages = dag.stages
+        self.edges = dag.edges
+        self.num_stages = dag.num_stages
+        self.replicas = np.array([s.replicas for s in dag.stages],
+                                 dtype=np.int64)
+        self.mem_mb = np.array([s.mem_mb for s in dag.stages],
+                               dtype=np.float64)
+
+    def successors(self, k):
+        return naive_successors(self.edges, k)
+
+    def predecessors(self, k):
+        return naive_predecessors(self.edges, k)
+
+    def sources(self):
+        return naive_sources(self.edges, self.num_stages)
+
+    def sinks(self):
+        return naive_sinks(self.edges, self.num_stages)
+
+    def topo_order(self):
+        return naive_topo_order(self.edges, self.num_stages)
+
+    def descendants(self, k):
+        return naive_descendants(self.edges, k)
+
+    def longest_path_latency(self, latencies):
+        lat = np.asarray(latencies, dtype=np.float64)
+        out = np.zeros_like(lat)
+        for k in reversed(self.topo_order()):
+            succ = self.successors(k)
+            best = 0.0
+            if succ:
+                best = np.max(np.stack([out[..., v] for v in succ], axis=-1),
+                              axis=-1)
+            out[..., k] = lat[..., k] + best
+        return out
+
+
+class _SeedSim:
+    def __init__(self, dag: _SeedDAG, pred, act, c_max, order, cost_model,
+                 include_transfers, init_phase, adaptive, t0):
+        self.dag = dag
+        self.J, self.M = pred["P_private"].shape
+        self.pred = pred
+        self.act = act
+        self.c_max = c_max
+        self.deadline = t0 + c_max
+        self.t0 = t0
+        self.cost_model = cost_model
+        self.include_transfers = include_transfers
+        self.adaptive = adaptive
+        self.init_phase = init_phase
+
+        mem = dag.mem_mb
+        H_pred = cost_model.np_cost(pred["P_public"] * 1e3, mem[None, :])
+        key_fn = ORDERS[order]
+        self.stage_keys = np.stack(
+            [key_fn(pred["P_private"], H_pred, k) for k in range(self.M)],
+            axis=1)
+        self.job_keys = key_fn(pred["P_private"], H_pred, None)
+        self.path_rem = dag.longest_path_latency(pred["P_private"])
+
+        self.status = np.full((self.J, self.M), WAITING, dtype=np.int8)
+        self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int8)
+        self.forced_public = np.zeros((self.J, self.M), dtype=bool)
+        self.start = np.full((self.J, self.M), np.nan)
+        self.end = np.full((self.J, self.M), np.nan)
+        self.completion = np.zeros(self.J)
+        self.queues: List[List[int]] = [[] for _ in range(self.M)]
+        self.free_replicas: List[List[int]] = [
+            list(range(dag.stages[k].replicas)) for k in range(self.M)]
+        self.cost = 0.0
+        self.n_offloaded = 0
+        self.per_stage_offloads = np.zeros(self.M, dtype=np.int64)
+        self.n_init_off = 0
+        self._heap: List[Tuple[float, int, Callable, tuple]] = []
+        self._seq = itertools.count()
+
+    def _at(self, t, fn, *args):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def run(self) -> SimResult:
+        self._initialize()
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            fn(t, *args)
+        makespan = float(np.max(self.completion) - self.t0) if self.J else 0.0
+        return SimResult(
+            makespan=makespan, cost_usd=self.cost,
+            public_mask=self.loc == PUBLIC, start=self.start, end=self.end,
+            completion=self.completion, n_offloaded_stages=self.n_offloaded,
+            n_init_offloaded_jobs=self.n_init_off,
+            per_stage_offloads=self.per_stage_offloads, deadline=self.c_max)
+
+    def _initialize(self):
+        if self.init_phase:
+            C_total = self.pred["P_private"].sum(axis=1)
+            cap = t_max(self.dag.replicas, self.c_max)
+            off = init_offload(C_total, self.job_keys, cap)
+        else:
+            off = np.zeros(self.J, dtype=bool)
+        self.n_init_off = int(off.sum())
+        pinned = np.array([s.must_private for s in self.dag.stages])
+        for j in range(self.J):
+            if off[j]:
+                self.forced_public[j, ~pinned] = True
+        for j in range(self.J):
+            for k in self.dag.sources():
+                self._stage_ready(self.t0, j, k)
+        for k in range(self.M):
+            self._sweep_and_dispatch(self.t0, k)
+
+    def _stage_ready(self, t, j, k):
+        self.status[j, k] = QUEUED
+        if self.forced_public[j, k]:
+            self._start_public(t, j, k)
+        else:
+            self.queues[k].append(j)
+            self.queues[k].sort(key=lambda jj: (self.stage_keys[jj, k], jj))
+
+    def _sweep_and_dispatch(self, t, k):
+        if self.adaptive and self.queues[k]:
+            I_k = max(self.dag.stages[k].replicas, 1)
+            kept: List[int] = []
+            prefix = 0.0
+            for j in list(self.queues[k]):
+                if self.dag.stages[k].must_private:
+                    kept.append(j)
+                    prefix += self.pred["P_private"][j, k]
+                    continue
+                acd = self.deadline - (t + prefix / I_k + self.path_rem[j, k])
+                if acd < 0.0:
+                    self._offload_now(t, j, k)
+                else:
+                    kept.append(j)
+                    prefix += self.pred["P_private"][j, k]
+            self.queues[k] = kept
+        while self.free_replicas[k] and self.queues[k]:
+            j = self.queues[k].pop(0)
+            r = self.free_replicas[k].pop(0)
+            self._start_private(t, j, k, r)
+
+    def _start_private(self, t, j, k, r):
+        self.status[j, k] = RUNNING
+        self.loc[j, k] = PRIVATE
+        self.start[j, k] = t
+        dur = float(self.act["P_private"][j, k])
+        self._at(t + dur, self._private_done, j, k, r)
+
+    def _private_done(self, t, j, k, r):
+        self.status[j, k] = DONE
+        self.end[j, k] = t
+        self.free_replicas[k].append(r)
+        self._propagate_done(t, j, k)
+        self._sweep_and_dispatch(t, k)
+
+    def _offload_now(self, t, j, k):
+        self.forced_public[j, k] = True
+        for d in self.dag.descendants(k):
+            if not self.dag.stages[d].must_private:
+                self.forced_public[j, d] = True
+        self._start_public(t, j, k)
+
+    def _start_public(self, t, j, k):
+        self.status[j, k] = RUNNING
+        self.loc[j, k] = PUBLIC
+        self.n_offloaded += 1
+        self.per_stage_offloads[k] += 1
+        up = 0.0
+        if self.include_transfers:
+            preds = self.dag.predecessors(k)
+            needs_up = (not preds) or any(
+                self.loc[j, p] == PRIVATE for p in preds)
+            if needs_up:
+                up = float(self.act["upload"][j, k])
+        self.start[j, k] = t + up
+        dur = float(self.act["P_public"][j, k])
+        self.cost += float(self.cost_model.np_cost(
+            dur * 1e3, self.dag.stages[k].mem_mb))
+        self._at(t + up + dur, self._public_done, j, k)
+
+    def _public_done(self, t, j, k):
+        self.status[j, k] = DONE
+        self.end[j, k] = t
+        self._propagate_done(t, j, k)
+
+    def _propagate_done(self, t, j, k):
+        for q in self.dag.successors(k):
+            if self.status[j, q] == WAITING and all(
+                    self.status[j, p] == DONE
+                    for p in self.dag.predecessors(q)):
+                self._stage_ready(t, j, q)
+                if not self.forced_public[j, q]:
+                    self._sweep_and_dispatch(t, q)
+        if k in self.dag.sinks():
+            down = 0.0
+            if self.include_transfers and self.loc[j, k] == PUBLIC:
+                down = float(self.act["download"][j, k])
+            self.completion[j] = max(self.completion[j], t + down)
+
+
+def simulate_seed(
+    dag: AppDAG,
+    pred: Dict[str, np.ndarray],
+    act: Optional[Dict[str, np.ndarray]] = None,
+    c_max: float = 60.0,
+    order: str = "spt",
+    cost_model: CostModel = LAMBDA_COST,
+    include_transfers: bool = True,
+    init_phase: bool = True,
+    adaptive: bool = True,
+    t0: float = 0.0,
+) -> SimResult:
+    """Seed-revision ``simulate``: same results, original hot path."""
+    act = dict(act) if act is not None else dict(pred)
+    pred = dict(pred)
+    for d in (pred, act):
+        d.setdefault("upload", np.zeros_like(d["P_private"]))
+        d.setdefault("download", np.zeros_like(d["P_private"]))
+    sim = _SeedSim(_SeedDAG(dag), pred, act, c_max, order, cost_model,
+                   include_transfers, init_phase, adaptive, t0)
+    return sim.run()

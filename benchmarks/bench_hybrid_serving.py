@@ -1,5 +1,11 @@
 """Beyond-paper: the Skedulix scheduler driving LLM request batches over a
 reserved pod + elastic overflow (serving/hybrid.py), for three archs.
+
+Each arch also runs an SLA *sweep* — both priority orders across a grid of
+deadlines — through ``HybridServingScheduler.schedule_sweep``; with
+``--engine vector`` (default) the whole grid is one batched jit-engine
+call, with ``--engine des`` it replays serially through the event-heap
+reference.
 """
 from __future__ import annotations
 
@@ -11,9 +17,10 @@ from repro.serving import HybridServingScheduler
 from .common import print_rows, row, timed
 
 
-def run(full: bool = False):
+def run(full: bool = False, engine: str = "vector"):
     rows = []
     J = 128 if full else 48
+    n_grid = 4
     for arch in ("llama3-8b", "recurrentgemma-9b", "arctic-480b"):
         h = HybridServingScheduler(get_config(arch))
         h.fit_perf_models(n_train=256 if full else 128)
@@ -30,9 +37,25 @@ def run(full: bool = False):
             f"cost_pct_of_public={100 * r.cost_usd / pub.cost_usd:.1f}%;"
             f"met={int(r.makespan <= c_max * 1.1)};"
             f"offloaded={r.n_offloaded_stages}"))
+        # SLA sweep: both orders x a deadline grid, one batched call
+        grid = tuple(float(priv.makespan * f)
+                     for f in np.linspace(0.4, 0.85, n_grid))
+        if engine == "vector":  # keep one-time jit compile out of the timing
+            h.schedule_sweep(plen, ntok, grid, orders=("spt", "hcf"),
+                             engine=engine)
+        sweep, ts = timed(h.schedule_sweep, plen, ntok, grid,
+                          orders=("spt", "hcf"), engine=engine)
+        met = int(np.sum(sweep.makespan <= np.asarray(sweep.c_max) * 1.1))
+        rows.append(row(
+            f"serve/{arch}/sweep[{engine}]",
+            ts / sweep.num_scenarios / J * 1e6,
+            f"scenarios={sweep.num_scenarios};met={met};"
+            f"cost_spread={sweep.cost_usd.min():.4f}"
+            f"..{sweep.cost_usd.max():.4f}"))
     return rows
 
 
 if __name__ == "__main__":
     import sys
-    print_rows(run(full="--full" in sys.argv))
+    eng = "des" if "--engine=des" in sys.argv or "des" in sys.argv else "vector"
+    print_rows(run(full="--full" in sys.argv, engine=eng))

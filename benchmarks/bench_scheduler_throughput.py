@@ -1,0 +1,184 @@
+"""Scheduler engine throughput: jobs/sec and scenarios/sec per engine.
+
+Measures a Fig.-4-style scenario sweep — the 3 canonical apps x {SPT, HCF}
+x a C_max grid — on three engines:
+
+* ``seed``:   the frozen seed-revision DES (``_seed_baseline``), the perf
+              trajectory's fixed reference point;
+* ``des``:    the current event-heap DES (``repro.core.simulate``);
+* ``vector``: the batched jit engine (``repro.core.sweep_scenarios``),
+              whole grid per device call, scenario axis sharded across
+              host devices.
+
+Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
+absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
+the seed baseline at each job count. ``--smoke`` runs a tiny instance and
+asserts the engines agree — used by CI; ``--full`` adds the J=32768
+single-scenario point (slow).
+
+Run as ``python -m benchmarks.bench_scheduler_throughput`` from the repo
+root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# shard the vector engine's scenario axis across all cores (must be set
+# before jax initializes)
+if "--one-device" not in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.cpu_count() or 1}")
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.dag import APPS  # noqa: E402
+from repro.core.simulator import simulate  # noqa: E402
+from repro.core.vectorsim import sweep_scenarios  # noqa: E402
+
+from benchmarks._seed_baseline import simulate_seed  # noqa: E402
+
+N_DEADLINES = 5
+DEADLINE_FRACS = np.linspace(0.45, 0.95, N_DEADLINES)
+ORDERS = ("spt", "hcf")
+
+
+def fig4_workload(J: int, jitter: float = 0.05):
+    """Synthetic Fig-4-style batch per app: lognormal stage latencies,
+    moderate prediction error, transfer latencies, deadline grid scaled
+    off the ideal all-private makespan."""
+    tasks = []
+    for ai, (name, dag) in enumerate(sorted(APPS.items())):
+        rng = np.random.default_rng(ai)
+        M = dag.num_stages
+        P_priv = rng.lognormal(0.0, 0.5, (J, M)) * 2.0
+        pred = dict(P_private=P_priv,
+                    P_public=P_priv * rng.uniform(0.8, 1.6, (J, M)),
+                    upload=rng.uniform(0.05, 0.3, (J, M)),
+                    download=rng.uniform(0.05, 0.3, (J, M)))
+        act = {k: v * rng.lognormal(0, jitter, v.shape)
+               for k, v in pred.items()}
+        base = float(P_priv.sum()) / float(dag.replicas.sum())
+        tasks.append(dict(name=name, dag=dag, pred=pred, act=act,
+                          c_max_grid=tuple(float(base * f)
+                                           for f in DEADLINE_FRACS),
+                          orders=ORDERS))
+    return tasks
+
+
+def run_serial(tasks, sim_fn):
+    t0 = time.perf_counter()
+    chk = 0.0
+    n = 0
+    for task in tasks:
+        for order in task["orders"]:
+            for c in task["c_max_grid"]:
+                r = sim_fn(task["dag"], task["pred"], task["act"],
+                           c_max=c, order=order)
+                chk += r.makespan + r.cost_usd
+                n += 1
+    return time.perf_counter() - t0, chk, n
+
+
+def run_vector(tasks, warm: bool = True):
+    calls = [{k: t[k] for k in ("dag", "pred", "act", "c_max_grid", "orders")}
+             for t in tasks]
+    if warm:  # compile outside the timed region
+        sweep_scenarios(calls)
+    t0 = time.perf_counter()
+    outs = sweep_scenarios(calls)
+    dt = time.perf_counter() - t0
+    chk = float(sum(o.makespan.sum() + o.cost_usd.sum() for o in outs))
+    return dt, chk, sum(o.num_scenarios for o in outs)
+
+
+def measure_point(J: int, engines, deadlines=N_DEADLINES):
+    tasks = fig4_workload(J)
+    if deadlines != N_DEADLINES:
+        for t in tasks:
+            t["c_max_grid"] = t["c_max_grid"][:deadlines]
+    point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
+             "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
+    checks = {}
+    for eng in engines:
+        if eng == "seed":
+            dt, chk, n = run_serial(tasks, simulate_seed)
+        elif eng == "des":
+            dt, chk, n = run_serial(tasks, simulate)
+        else:
+            dt, chk, n = run_vector(tasks)
+        checks[eng] = chk
+        point["engines"][eng] = {
+            "wall_s": round(dt, 4),
+            "scenarios_per_sec": round(n / dt, 3),
+            "jobs_per_sec": round(n * J / dt, 1),
+        }
+        print(f"  J={J:>6} {eng:>6}: {dt:8.3f}s  "
+              f"{n / dt:8.2f} scen/s  {n * J / dt:10.0f} jobs/s")
+    ref = checks.get("seed", checks.get("des"))
+    for eng, chk in checks.items():
+        if not np.isclose(chk, ref, rtol=1e-6):
+            raise AssertionError(
+                f"engine {eng} diverged: checksum {chk} vs {ref}")
+    for eng in point["engines"]:
+        if eng != "seed" and "seed" in point["engines"]:
+            point["engines"][eng]["speedup_vs_seed"] = round(
+                point["engines"]["seed"]["wall_s"]
+                / point["engines"][eng]["wall_s"], 2)
+    return point
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny J, all engines, agreement assertion (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="add the very slow J=32768 point")
+    ap.add_argument("--one-device", action="store_true",
+                    help="do not shard the vector engine across cores")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
+    args = ap.parse_args(argv)
+
+    report = {"bench": "scheduler_throughput",
+              "devices": None, "points": []}
+    import jax
+    report["devices"] = jax.local_device_count()
+
+    if args.smoke:
+        print("smoke: J=64, full sweep, all engines")
+        report["points"].append(
+            measure_point(64, ("seed", "des", "vector")))
+    else:
+        print("sweep 3 apps x 2 orders x 5 deadlines:")
+        report["points"].append(
+            measure_point(512, ("seed", "des", "vector")))
+        # large-J: seed is O(J^2 log J); one deadline keeps it bounded
+        print("large-J point (1 deadline per app/order):")
+        report["points"].append(
+            measure_point(4096, ("seed", "des", "vector"), deadlines=1))
+        if args.full:
+            print("very-large-J point (des/vector only):")
+            report["points"].append(
+                measure_point(32768, ("des", "vector"), deadlines=1))
+
+    head = report["points"][0]["engines"]
+    if "vector" in head and "seed" in head:
+        report["headline"] = {
+            "sweep_J": report["points"][0]["J"],
+            "speedup_vector_vs_seed": head["vector"]["speedup_vs_seed"],
+            "speedup_des_vs_seed": head["des"]["speedup_vs_seed"],
+        }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,11 @@ for all three applications.
 
 Paper result: offloads decrease with deadline; HCF offloads more and (for
 compute-heavy apps) costs 14-18% more than SPT; image app reverses.
+
+``--engine vector`` (default) evaluates each app's whole (order x C_max)
+grid as one batched call on the jit engine (``SkedulixScheduler.
+schedule_sweep``); ``--engine des`` replays the grid serially through the
+event-heap reference — identical numbers, the seed's code path.
 """
 from __future__ import annotations
 
@@ -13,25 +18,24 @@ from repro.core import simulate_all_private
 from .common import app_setup, print_rows, row, timed
 
 
-def run(full: bool = False, n_points: int = 5):
+def run(full: bool = False, n_points: int = 5, engine: str = "vector"):
     rows = []
     for app in ("matrix", "video", "image"):
         spec, sched, pred, act, tr, te = app_setup(app, full)
         priv = simulate_all_private(spec.dag, pred, act)
         fracs = np.linspace(0.45, 0.95, n_points)
+        c_grid = tuple(float(priv.makespan * f) for f in fracs)
+        J = pred["P_private"].shape[0]
+        if engine == "vector":  # keep one-time jit compile out of the timing
+            sched.schedule_sweep(c_grid, pred=pred, act=act,
+                                 orders=("spt",), engine=engine)
         for order in ("spt", "hcf"):
-            costs, offs = [], []
-            t_all = 0.0
-            for f in fracs:
-                rep, t = timed(sched.schedule_batch,
-                               c_max=float(priv.makespan * f),
-                               pred=pred, act=act, order=order)
-                t_all += t
-                costs.append(rep.result.cost_usd)
-                offs.append(100.0 * rep.result.offload_fraction)
-            J = pred["P_private"].shape[0]
+            rep, t = timed(sched.schedule_sweep, c_grid, pred=pred, act=act,
+                           orders=(order,), engine=engine)
+            costs = list(rep.cost_usd)
+            offs = [100.0 * f for f in rep.offload_fraction]
             rows.append(row(
-                f"fig4/{app}/{order}", t_all / len(fracs) / J * 1e6,
+                f"fig4/{app}/{order}", t / n_points / J * 1e6,
                 "off%=" + "|".join(f"{o:.0f}" for o in offs)
                 + ";cost=" + "|".join(f"{c:.5f}" for c in costs)))
         # SPT-vs-HCF cost ratio averaged over the sweep (paper: 14-18%)
@@ -53,4 +57,5 @@ def _ratio(spt_row, hcf_row) -> str:
 
 if __name__ == "__main__":
     import sys
-    print_rows(run(full="--full" in sys.argv))
+    eng = "des" if "--engine=des" in sys.argv or "des" in sys.argv else "vector"
+    print_rows(run(full="--full" in sys.argv, engine=eng))

@@ -12,6 +12,7 @@ from .priority import ORDERS, hcf_key, sort_queue, spt_key
 from .scheduler import BatchReport, SkedulixScheduler
 from .simulator import (SimResult, simulate, simulate_all_private,
                         simulate_all_public)
+from .vectorsim import VectorSimResult, simulate_scenarios, sweep_scenarios
 
 __all__ = [
     "AppDAG", "Stage", "APPS", "matrix_app", "video_app", "image_app",
@@ -24,4 +25,5 @@ __all__ = [
     "ORDERS", "spt_key", "hcf_key", "sort_queue",
     "SkedulixScheduler", "BatchReport",
     "SimResult", "simulate", "simulate_all_public", "simulate_all_private",
+    "VectorSimResult", "simulate_scenarios", "sweep_scenarios",
 ]

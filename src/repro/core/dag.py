@@ -5,10 +5,18 @@ application executes the same DAG; precedence edges constrain stage start
 times. Each stage k has a fixed number of private-cloud replicas ``I_k`` and
 a public-cloud memory configuration ``mem_mb`` (the M in the Lambda cost
 model, Eqn. 1).
+
+Structure queries (successors, topo order, descendants, ...) are cached on
+first use: ``AppDAG`` is immutable, and the discrete-event simulator calls
+these on every event, so the naive per-call edge scans were a measurable
+hot-path cost. The ``naive_*`` module functions keep the original
+O(E)-per-call implementations as the reference the caches are tested
+against (``tests/test_apps.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import cached_property
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -22,6 +30,54 @@ class Stage:
     replicas: int = 1          # I_k: private-cloud replicas
     mem_mb: float = 1024.0     # public-cloud memory config (Lambda M)
     must_private: bool = False  # Omega_j: privacy-constrained stages
+
+
+# -- reference implementations (uncached) --------------------------------
+# These are the seed's original edge-scan queries. The cached properties on
+# AppDAG must agree with them exactly; tests assert that.
+
+def naive_successors(edges: Sequence[Tuple[int, int]], k: int) -> List[int]:
+    return [v for (u, v) in edges if u == k]
+
+
+def naive_predecessors(edges: Sequence[Tuple[int, int]], k: int) -> List[int]:
+    return [u for (u, v) in edges if v == k]
+
+
+def naive_sources(edges: Sequence[Tuple[int, int]], n: int) -> List[int]:
+    has_pred = {v for (_, v) in edges}
+    return [k for k in range(n) if k not in has_pred]
+
+
+def naive_sinks(edges: Sequence[Tuple[int, int]], n: int) -> List[int]:
+    has_succ = {u for (u, _) in edges}
+    return [k for k in range(n) if k not in has_succ]
+
+
+def naive_topo_order(edges: Sequence[Tuple[int, int]], n: int) -> List[int]:
+    indeg = [0] * n
+    for (_, v) in edges:
+        indeg[v] += 1
+    frontier = [k for k in range(n) if indeg[k] == 0]
+    out: List[int] = []
+    while frontier:
+        k = frontier.pop()
+        out.append(k)
+        for v in naive_successors(edges, k):
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                frontier.append(v)
+    return out
+
+
+def naive_descendants(edges: Sequence[Tuple[int, int]], k: int) -> List[int]:
+    seen, stack = set(), list(naive_successors(edges, k))
+    while stack:
+        v = stack.pop()
+        if v not in seen:
+            seen.add(v)
+            stack.extend(naive_successors(edges, v))
+    return sorted(seen)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,53 +106,108 @@ class AppDAG:
     def num_stages(self) -> int:
         return len(self.stages)
 
-    @property
+    @cached_property
     def replicas(self) -> np.ndarray:
         return np.array([s.replicas for s in self.stages], dtype=np.int64)
 
-    @property
+    @cached_property
     def mem_mb(self) -> np.ndarray:
         return np.array([s.mem_mb for s in self.stages], dtype=np.float64)
 
-    def successors(self, k: int) -> List[int]:
-        return [v for (u, v) in self.edges if u == k]
+    @cached_property
+    def must_private_mask(self) -> np.ndarray:
+        return np.array([s.must_private for s in self.stages], dtype=bool)
 
-    def predecessors(self, k: int) -> List[int]:
-        return [u for (u, v) in self.edges if v == k]
+    # -- cached adjacency ----------------------------------------------
+    @cached_property
+    def succ_lists(self) -> Tuple[Tuple[int, ...], ...]:
+        """succ_lists[k] = successors of k, in edge order."""
+        out: List[List[int]] = [[] for _ in range(self.num_stages)]
+        for (u, v) in self.edges:
+            out[u].append(v)
+        return tuple(tuple(s) for s in out)
 
-    def sources(self) -> List[int]:
-        has_pred = {v for (_, v) in self.edges}
-        return [k for k in range(self.num_stages) if k not in has_pred]
+    @cached_property
+    def pred_lists(self) -> Tuple[Tuple[int, ...], ...]:
+        """pred_lists[k] = predecessors of k, in edge order."""
+        out: List[List[int]] = [[] for _ in range(self.num_stages)]
+        for (u, v) in self.edges:
+            out[v].append(u)
+        return tuple(tuple(p) for p in out)
 
-    def sinks(self) -> List[int]:
-        has_succ = {u for (u, _) in self.edges}
-        return [k for k in range(self.num_stages) if k not in has_succ]
+    @cached_property
+    def adjacency(self) -> np.ndarray:
+        """[M, M] bool: adjacency[u, v] iff edge u -> v."""
+        A = np.zeros((self.num_stages, self.num_stages), dtype=bool)
+        for (u, v) in self.edges:
+            A[u, v] = True
+        return A
 
-    def topo_order(self) -> List[int]:
-        n = len(self.stages)
-        indeg = [0] * n
-        for (_, v) in self.edges:
-            indeg[v] += 1
+    @cached_property
+    def source_ids(self) -> Tuple[int, ...]:
+        return tuple(k for k in range(self.num_stages) if not self.pred_lists[k])
+
+    @cached_property
+    def sink_ids(self) -> Tuple[int, ...]:
+        return tuple(k for k in range(self.num_stages) if not self.succ_lists[k])
+
+    @cached_property
+    def is_sink(self) -> np.ndarray:
+        out = np.zeros(self.num_stages, dtype=bool)
+        out[list(self.sink_ids)] = True
+        return out
+
+    @cached_property
+    def topo(self) -> Tuple[int, ...]:
+        """Topological order (same tie-breaking as the seed's Kahn loop)."""
+        n = self.num_stages
+        indeg = [len(self.pred_lists[k]) for k in range(n)]
         frontier = [k for k in range(n) if indeg[k] == 0]
         out: List[int] = []
         while frontier:
             k = frontier.pop()
             out.append(k)
-            for v in self.successors(k):
+            for v in self.succ_lists[k]:
                 indeg[v] -= 1
                 if indeg[v] == 0:
                     frontier.append(v)
-        return out
+        return tuple(out)
+
+    @cached_property
+    def descendant_masks(self) -> np.ndarray:
+        """[M, M] bool: descendant_masks[k, d] iff d is reachable from k."""
+        M = self.num_stages
+        reach = self.adjacency.copy()
+        # reverse-topo DP: reach[k] = A[k] | union of reach over successors
+        for k in reversed(self.topo):
+            for v in self.succ_lists[k]:
+                reach[k] |= reach[v]
+        return reach
+
+    @cached_property
+    def descendant_lists(self) -> Tuple[Tuple[int, ...], ...]:
+        return tuple(tuple(np.flatnonzero(self.descendant_masks[k]))
+                     for k in range(self.num_stages))
+
+    # -- list-returning API (kept for callers; backed by caches) --------
+    def successors(self, k: int) -> List[int]:
+        return list(self.succ_lists[k])
+
+    def predecessors(self, k: int) -> List[int]:
+        return list(self.pred_lists[k])
+
+    def sources(self) -> List[int]:
+        return list(self.source_ids)
+
+    def sinks(self) -> List[int]:
+        return list(self.sink_ids)
+
+    def topo_order(self) -> List[int]:
+        return list(self.topo)
 
     def descendants(self, k: int) -> List[int]:
         """All stages reachable from k (excluding k)."""
-        seen, stack = set(), list(self.successors(k))
-        while stack:
-            v = stack.pop()
-            if v not in seen:
-                seen.add(v)
-                stack.extend(self.successors(v))
-        return sorted(seen)
+        return list(self.descendant_lists[k])
 
     # -- ACD support (Sec. III-B) ---------------------------------------
     def longest_path_latency(self, latencies: np.ndarray) -> np.ndarray:
@@ -109,8 +220,8 @@ class AppDAG:
         """
         lat = np.asarray(latencies, dtype=np.float64)
         out = np.zeros_like(lat)
-        for k in reversed(self.topo_order()):
-            succ = self.successors(k)
+        for k in reversed(self.topo):
+            succ = self.succ_lists[k]
             best = 0.0
             if succ:
                 best = np.max(np.stack([out[..., v] for v in succ], axis=-1), axis=-1)

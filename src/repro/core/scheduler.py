@@ -2,11 +2,17 @@
 
 Ties together: perf models (predictions) -> Alg. 1 greedy scheduling ->
 hybrid execution (discrete-event sim standing in for the live platform).
+
+Two execution engines back the service: ``schedule_batch`` accepts
+``engine="des"`` (the event-heap reference) or ``engine="vector"`` (the
+batched jit engine in :mod:`.vectorsim`); ``schedule_sweep`` evaluates a
+whole (order x C_max) scenario grid in one batched call — the unit of work
+behind every deadline-sweep figure.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -14,6 +20,7 @@ from .cost import CostModel, LAMBDA_COST
 from .dag import AppDAG
 from .perfmodel import AppPerfModel
 from .simulator import SimResult, simulate, simulate_all_private, simulate_all_public
+from .vectorsim import VectorSimResult, simulate_scenarios
 
 
 @dataclasses.dataclass
@@ -69,6 +76,28 @@ class SkedulixScheduler:
         res = simulate(self.dag, pred, act, c_max=c_max, order=order,
                        cost_model=self.cost_model, **sim_kwargs)
         return BatchReport(result=res, pred=pred, order=order, c_max=c_max)
+
+    def schedule_sweep(
+        self,
+        c_max_grid: Sequence[float],
+        base_features: Optional[np.ndarray] = None,
+        pred: Optional[Dict[str, np.ndarray]] = None,
+        act: Optional[Dict[str, np.ndarray]] = None,
+        orders: Sequence[str] = ("spt",),
+        engine: str = "vector",
+        **sim_kwargs,
+    ) -> VectorSimResult:
+        """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
+
+        One batched engine call with ``engine="vector"`` (a Fig.-4-style
+        deadline sweep is a single dispatch); ``engine="des"`` replays the
+        grid serially through the reference simulator for parity checks.
+        """
+        if pred is None:
+            pred = self.predict(base_features)
+        return simulate_scenarios(
+            self.dag, pred, act, c_max_grid=c_max_grid, orders=orders,
+            cost_model=self.cost_model, engine=engine, **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None) -> SimResult:
         return simulate_all_public(self.dag, pred, act, cost_model=self.cost_model)

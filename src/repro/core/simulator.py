@@ -10,9 +10,26 @@ quality exactly as in the live system (Sec. V-C, Fig. 5).
 Semantics of one ACD sweep follow Alg. 1 lines 14-20 with the dispatched
 jobs removed as the loop progresses (offloading a job frees queue capacity
 for those behind it): a sequential kept-prefix scan.
+
+Engine selection: this module is the ``engine="des"`` reference
+implementation — an event heap driving per-stage sorted queues. The
+``engine="vector"`` twin (:mod:`.vectorsim`) runs the same algorithm as
+jit-compiled per-stage event loops (DAG structure as data, scenario axis
+vmapped and sharded across devices), batched over whole scenario grids;
+:func:`simulate` dispatches between them, and
+:func:`.vectorsim.sweep_scenarios` evaluates whole figures at once.
+
+Hot-path notes (perf rewrite): queues are kept sorted by ``bisect.insort``
+on precomputed ``(key, job)`` tuples instead of re-sorting on every
+arrival; the ACD kept-prefix scan runs as a vectorized first-violator
+loop over numpy views of the queue (equivalent to the sequential scan
+because every job ahead of the first violator is kept in both); per-stage
+adjacency/descendants/sinks come from the cached ``AppDAG`` structure; and
+the Eqn.-1 cost of every (job, stage) is precomputed as one matrix.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
@@ -83,6 +100,26 @@ class _Sim:
         # Gamma(l): per-job critical-path remainder, predicted private latencies
         self.path_rem = dag.longest_path_latency(pred["P_private"])  # [J, M]
 
+        # hot-path precomputation ------------------------------------------
+        self.P_pred = np.ascontiguousarray(pred["P_private"], dtype=np.float64)
+        # Eqn.-1 cost of every (job, stage) if it runs public (actual time)
+        self.H_act = cost_model.np_cost(act["P_public"] * 1e3, mem[None, :])
+        # plain-float nested lists: scalar reads off numpy arrays dominate
+        # the event loop otherwise
+        self._act_priv = act["P_private"].tolist()
+        self._act_pub = act["P_public"].tolist()
+        self._act_up = act["upload"].tolist()
+        self._act_down = act["download"].tolist()
+        self._cost_l = self.H_act.tolist()
+        self._keys_l = self.stage_keys.tolist()
+        # cached DAG structure
+        self._succ = dag.succ_lists
+        self._pred_l = dag.pred_lists
+        self._desc = dag.descendant_lists
+        self._is_sink = set(dag.sink_ids)
+        self._repl = [max(int(r), 1) for r in dag.replicas]
+        self._pinned = [bool(s.must_private) for s in dag.stages]
+
         # runtime state
         self.status = np.full((self.J, self.M), WAITING, dtype=np.int8)
         self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int8)
@@ -90,7 +127,9 @@ class _Sim:
         self.start = np.full((self.J, self.M), np.nan)
         self.end = np.full((self.J, self.M), np.nan)
         self.completion = np.zeros(self.J)
-        self.queues: List[List[int]] = [[] for _ in range(self.M)]
+        # queues[k]: (key, job) tuples kept sorted by bisect.insort — the
+        # same total order as the seed's sort(key=(stage_key, job))
+        self.queues: List[List[Tuple[float, int]]] = [[] for _ in range(self.M)]
         self.free_replicas: List[List[int]] = [
             list(range(dag.stages[k].replicas)) for k in range(self.M)]
         self.cost = 0.0
@@ -106,8 +145,9 @@ class _Sim:
 
     def run(self) -> SimResult:
         self._initialize()
-        while self._heap:
-            t, _, fn, args = heapq.heappop(self._heap)
+        heap = self._heap
+        while heap:
+            t, _, fn, args = heapq.heappop(heap)
             fn(t, *args)
         makespan = float(np.max(self.completion) - self.t0) if self.J else 0.0
         return SimResult(
@@ -126,12 +166,10 @@ class _Sim:
         else:
             off = np.zeros(self.J, dtype=bool)
         self.n_init_off = int(off.sum())
-        pinned = np.array([s.must_private for s in self.dag.stages])
+        pinned = self.dag.must_private_mask
+        self.forced_public[off[:, None] & ~pinned[None, :]] = True
         for j in range(self.J):
-            if off[j]:
-                self.forced_public[j, ~pinned] = True  # Omega stages stay private
-        for j in range(self.J):
-            for k in self.dag.sources():
+            for k in self.dag.source_ids:
                 self._stage_ready(self.t0, j, k)
         for k in range(self.M):
             self._sweep_and_dispatch(self.t0, k)
@@ -143,34 +181,40 @@ class _Sim:
         if self.forced_public[j, k]:
             self._start_public(t, j, k)
         else:
-            self.queues[k].append(j)
-            self.queues[k].sort(key=lambda jj: (self.stage_keys[jj, k], jj))
+            bisect.insort(self.queues[k], (self._keys_l[j][k], j))
 
     def _on_queue_change(self, t: float, k: int):
         self._sweep_and_dispatch(t, k)
 
     def _sweep_and_dispatch(self, t: float, k: int):
         """ACD kept-prefix scan (lines 14-20), then fill free replicas."""
-        if self.adaptive and self.queues[k]:
-            I_k = max(self.dag.stages[k].replicas, 1)
-            kept: List[int] = []
-            prefix = 0.0
-            for j in list(self.queues[k]):
-                if self.dag.stages[k].must_private:
-                    kept.append(j)
-                    prefix += self.pred["P_private"][j, k]
-                    continue
-                acd = self.deadline - (t + prefix / I_k + self.path_rem[j, k])
-                if acd < 0.0:
-                    self._offload_now(t, j, k)
-                else:
-                    kept.append(j)
-                    prefix += self.pred["P_private"][j, k]
-            self.queues[k] = kept
+        q = self.queues[k]
+        if self.adaptive and q and not self._pinned[k]:
+            I_k = self._repl[k]
+            jobs = np.fromiter((jj for (_, jj) in q), dtype=np.int64, count=len(q))
+            P = self.P_pred[jobs, k]
+            # slack_i = I_k * (D - t - path_rem_i); job i is offloaded iff the
+            # kept-prefix of P ahead of it exceeds slack_i (ACD < 0). The
+            # first violator under the *full* prefix equals the first under
+            # the kept-prefix (everything ahead of it is kept), so removing
+            # first violators one at a time reproduces the sequential scan.
+            slack = I_k * (self.deadline - t - self.path_rem[jobs, k])
+            while jobs.size:
+                prefix_excl = np.cumsum(P) - P
+                viol = np.flatnonzero(prefix_excl > slack)
+                if viol.size == 0:
+                    break
+                i = int(viol[0])
+                self._offload_now(t, int(jobs[i]), k)
+                del q[i]
+                jobs = np.delete(jobs, i)
+                P = np.delete(P, i)
+                slack = np.delete(slack, i)
         # dispatch to free replicas (head of queue first)
-        while self.free_replicas[k] and self.queues[k]:
-            j = self.queues[k].pop(0)
-            r = self.free_replicas[k].pop(0)
+        free = self.free_replicas[k]
+        while free and q:
+            _, j = q.pop(0)
+            r = free.pop(0)
             self._start_private(t, j, k, r)
 
     # -- private execution ----------------------------------------------
@@ -178,8 +222,9 @@ class _Sim:
         self.status[j, k] = RUNNING
         self.loc[j, k] = PRIVATE
         self.start[j, k] = t
-        dur = float(self.act["P_private"][j, k])
-        dur *= self.replica_slowdown.get((k, r), 1.0)
+        dur = self._act_priv[j][k]
+        if self.replica_slowdown:
+            dur *= self.replica_slowdown.get((k, r), 1.0)
         self._at(t + dur, self._private_done, j, k, r)
 
     def _private_done(self, t: float, j: int, k: int, r: int):
@@ -194,8 +239,8 @@ class _Sim:
         """Job j evicted from queue k: stage k + all descendants go public
         (privacy-pinned stages excepted, constraint (12))."""
         self.forced_public[j, k] = True
-        for d in self.dag.descendants(k):
-            if not self.dag.stages[d].must_private:
+        for d in self._desc[k]:
+            if not self._pinned[d]:
                 self.forced_public[j, d] = True
         self._start_public(t, j, k)
 
@@ -207,14 +252,14 @@ class _Sim:
         up = 0.0
         if self.include_transfers:
             # upload whenever some input of stage k lives in private storage
-            preds = self.dag.predecessors(k)
-            needs_up = (not preds) or any(self.loc[j, p] == PRIVATE for p in preds)
+            preds = self._pred_l[k]
+            loc_j = self.loc[j]
+            needs_up = (not preds) or any(loc_j[p] == PRIVATE for p in preds)
             if needs_up:
-                up = float(self.act["upload"][j, k])
+                up = self._act_up[j][k]
         self.start[j, k] = t + up
-        dur = float(self.act["P_public"][j, k])
-        self.cost += float(self.cost_model.np_cost(
-            dur * 1e3, self.dag.stages[k].mem_mb))
+        dur = self._act_pub[j][k]
+        self.cost += self._cost_l[j][k]
         self._at(t + up + dur, self._public_done, j, k)
 
     def _public_done(self, t: float, j: int, k: int):
@@ -224,17 +269,34 @@ class _Sim:
 
     # -- DAG propagation ---------------------------------------------------
     def _propagate_done(self, t: float, j: int, k: int):
-        for q in self.dag.successors(k):
-            if self.status[j, q] == WAITING and all(
-                    self.status[j, p] == DONE for p in self.dag.predecessors(q)):
+        status_j = self.status[j]
+        for q in self._succ[k]:
+            if status_j[q] == WAITING and all(
+                    status_j[p] == DONE for p in self._pred_l[q]):
                 self._stage_ready(t, j, q)
                 if not self.forced_public[j, q]:
                     self._on_queue_change(t, q)
-        if k in self.dag.sinks():
+        if k in self._is_sink:
             down = 0.0
             if self.include_transfers and self.loc[j, k] == PUBLIC:
-                down = float(self.act["download"][j, k])
-            self.completion[j] = max(self.completion[j], t + down)
+                down = self._act_down[j][k]
+            if t + down > self.completion[j]:
+                self.completion[j] = t + down
+
+
+def _with_transfer_defaults(d: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Shallow-copy ``d`` and default missing transfer matrices to zero.
+
+    Copying keeps :func:`simulate` from mutating caller-owned dicts.
+    """
+    d = dict(d)
+    zeros = None
+    for key in ("upload", "download"):
+        if key not in d:
+            if zeros is None:
+                zeros = np.zeros_like(d["P_private"])
+            d[key] = zeros
+    return d
 
 
 def simulate(
@@ -249,17 +311,31 @@ def simulate(
     adaptive: bool = True,
     t0: float = 0.0,
     replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
+    engine: str = "des",
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
     ``pred``/``act``: dicts with P_private, P_public [J,M] (s) and upload,
     download [J,M] (s). ``act`` defaults to ``pred`` (perfect models).
     ``replica_slowdown`` injects stragglers: {(stage, replica): factor}.
+    ``engine``: ``"des"`` (event-heap reference) or ``"vector"`` (the
+    jit-compiled batched engine in :mod:`.vectorsim`; no straggler
+    injection).
     """
-    act = act or pred
-    for d in (pred, act):
-        d.setdefault("upload", np.zeros_like(d["P_private"]))
-        d.setdefault("download", np.zeros_like(d["P_private"]))
+    act = act if act is not None else pred
+    pred = _with_transfer_defaults(pred)
+    act = _with_transfer_defaults(act)
+    if engine == "vector":
+        if replica_slowdown:
+            raise ValueError("engine='vector' does not support replica_slowdown")
+        from .vectorsim import simulate_scenarios
+        batched = simulate_scenarios(
+            dag, pred, act, c_max_grid=(c_max,), orders=(order,),
+            cost_model=cost_model, include_transfers=include_transfers,
+            init_phase=init_phase, adaptive=adaptive, t0=t0)
+        return batched.scenario(0)
+    if engine != "des":
+        raise ValueError(f"unknown engine {engine!r}")
     sim = _Sim(dag, pred, act, c_max, order, cost_model, include_transfers,
                init_phase, adaptive, t0, replica_slowdown)
     return sim.run()
@@ -268,8 +344,7 @@ def simulate(
 def simulate_all_public(dag, pred, act=None, cost_model=LAMBDA_COST,
                         include_transfers=True) -> SimResult:
     """Baseline: everything offloaded at t0 (capacity prefix = 0)."""
-    act = act or pred
-    J = pred["P_private"].shape[0]
+    act = act if act is not None else pred
     pred2 = dict(pred)
     pred2["P_private"] = np.full_like(pred["P_private"], 1e12)  # nothing fits
     res = simulate(dag, pred2, act, c_max=0.0, order="spt",
@@ -281,7 +356,7 @@ def simulate_all_public(dag, pred, act=None, cost_model=LAMBDA_COST,
 def simulate_all_private(dag, pred, act=None, order: str = "spt",
                          cost_model=LAMBDA_COST) -> SimResult:
     """Baseline: C_max large enough that nothing offloads (Sec. V-C)."""
-    act = act or pred
+    act = act if act is not None else pred
     big = float(np.sum((act or pred)["P_private"])) + 1e6
     return simulate(dag, pred, act, c_max=big, order=order,
                     cost_model=cost_model, init_phase=True, adaptive=True)

@@ -1,0 +1,601 @@
+"""Batched, jit-compiled scenario-sweep engine for Alg. 1 (``engine="vector"``).
+
+The discrete-event reference in :mod:`.simulator` replays one (app, order,
+C_max, latency-draw) point at a time; every headline figure of the paper is
+a *grid* of such points. This module runs the same algorithm — capacity
+prefix initialization offload, per-stage priority queues, the adaptive ACD
+kept-prefix sweep, replica occupancy, transfer latencies and Eqn.-1 cost —
+``vmap``-ed over a scenario axis, so an entire Fig.-4 sweep is a single
+batched device call (:func:`simulate_scenarios` for one application's grid,
+:func:`sweep_scenarios` for a whole figure across applications).
+
+Engine construction
+-------------------
+Influence in the platform model is strictly feed-forward: events at stage
+``k`` are shaped by upstream completions and by stage ``k``'s own replica
+occupancy, never by downstream stages (offloading forces *descendants*
+public, replica pools are per-stage). The engine therefore simulates the
+stages **in topological order**, each to completion, instead of
+interleaving one global event heap. Per stage the event loop is a
+``lax.while_loop`` whose carry is a handful of ``[J]`` vectors in *queue
+coordinates* (the static ``(stage_key, job)`` priority permutation):
+
+* queue membership is a boolean mask; *head-of-queue* is ``argmax``;
+* the ACD kept-prefix is one masked ``cumsum``; the sequential
+  first-violator semantics of Alg. 1 lines 14-20 are reproduced by
+  evicting one first violator per iteration (everything ahead of the
+  first violator is kept in both formulations);
+* replica occupancy is a vector of completion clocks — a replica is free
+  iff its clock is ``<= t``; replica *identity* is erased, which is why
+  ``replica_slowdown`` is not supported here;
+* forced-public jobs (initialization offload and eviction cascades,
+  constraint (12)) never enter a queue: their start/end times are closed
+  forms of their arrival times, computed outside the loop, as are cost,
+  completion times and the offload counters.
+
+DAG structure as data
+---------------------
+Adjacency, descendant masks, sink/pinned flags and per-stage replica
+counts enter the engine as *arrays*, not trace-time constants: one
+compiled executable serves every DAG with the same (padded) stage count,
+job count and replica bound. Heterogeneous applications batch into a
+single call — stages are topologically relabelled, short DAGs are padded
+with inert stages (no jobs eligible, so their event loops run zero
+iterations) — and the whole figure's scenario axis shards across host
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=<cores>`` on
+CPU). Lockstep vmap iteration then amortizes the small applications
+inside the largest one's event budget.
+
+All arithmetic runs in float64 (via ``jax.experimental.enable_x64``) so
+keep/offload decisions agree bit-for-bit with the numpy DES; equivalence
+is exact for tie-free (continuous) latency draws, where the DES heap order
+and the engine's index order coincide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .cost import CostModel, LAMBDA_COST
+from .dag import AppDAG
+from .greedy import init_offload_jax
+from .priority import ORDERS
+
+
+@dataclasses.dataclass
+class VectorSimResult:
+    """Batched twin of :class:`.simulator.SimResult`; axis 0 is scenarios.
+
+    ``orders``/``c_max``/``batch_idx`` record the scenario grid: scenario
+    ``s`` ran priority order ``orders[s]`` with deadline ``c_max[s]`` on
+    latency-draw ``batch_idx[s]`` of the supplied pred/act batch.
+    """
+
+    makespan: np.ndarray            # [S]
+    cost_usd: np.ndarray            # [S]
+    public_mask: np.ndarray         # [S, J, M]
+    start: np.ndarray               # [S, J, M]
+    end: np.ndarray                 # [S, J, M]
+    completion: np.ndarray          # [S, J]
+    n_offloaded_stages: np.ndarray  # [S]
+    n_init_offloaded_jobs: np.ndarray  # [S]
+    per_stage_offloads: np.ndarray  # [S, M]
+    deadline: np.ndarray            # [S]
+    orders: Tuple[str, ...]         # [S]
+    c_max: np.ndarray               # [S]
+    batch_idx: np.ndarray           # [S]
+
+    @property
+    def num_scenarios(self) -> int:
+        return int(self.makespan.shape[0])
+
+    @property
+    def offload_fraction(self) -> np.ndarray:
+        return self.public_mask.mean(axis=(1, 2))
+
+    def scenario(self, s: int):
+        """Slice scenario ``s`` into a plain :class:`SimResult`."""
+        from .simulator import SimResult
+        return SimResult(
+            makespan=float(self.makespan[s]),
+            cost_usd=float(self.cost_usd[s]),
+            public_mask=self.public_mask[s],
+            start=self.start[s], end=self.end[s],
+            completion=self.completion[s],
+            n_offloaded_stages=int(self.n_offloaded_stages[s]),
+            n_init_offloaded_jobs=int(self.n_init_offloaded_jobs[s]),
+            per_stage_offloads=self.per_stage_offloads[s],
+            deadline=float(self.deadline[s]))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_engine(M: int, I_max: int, J: int, include_transfers: bool,
+                  init_phase: bool, adaptive: bool):
+    """Trace the stage-decomposed event loop for one (stage count, replica
+    bound, job count, flags) shape family. DAG structure arrives as data:
+    ``A``/``desc`` are [M, M] adjacency / strict-descendant masks over
+    topologically-ordered stage indices (edges go low -> high), ``sink``/
+    ``pinned``/``inert`` are [M] stage flags, ``I_vec`` the replica counts.
+    """
+    iota_I = jnp.arange(I_max)
+
+    def run_stage(k, a, forced_k, elig, upk, I_k, acd_k, P_k, rem_k, dur_k,
+                  pub_k, keys_k, deadline, t0):
+        """Simulate stage k given per-job arrival times ``a`` [J].
+
+        Returns (start, end, locpub, evicted) for the stage, job coords.
+        """
+        # queue coordinates: stable sort by stage key, ties by job id
+        perm = jnp.argsort(keys_k, stable=True)
+        inv = jnp.argsort(perm, stable=True)
+        P_q = P_k[perm]
+        rem_q = rem_k[perm]
+        dur_q = dur_k[perm]
+        a_q = a[perm]
+        elig_q = elig[perm]
+        # arrival stream, time order; ineligible jobs never arrive.
+        # arr_rank[p] = arrival index of queue position p, so the queue is
+        # *derived* each iteration as (arr_rank < ap) & ~exited — arrivals
+        # need no insert scatter, only the arrival cursor ``ap`` moves.
+        a_elig = jnp.where(elig_q, a_q, jnp.inf)
+        arr_order = jnp.argsort(a_elig, stable=True)
+        arr_t = jnp.concatenate([a_elig[arr_order], jnp.full(1, jnp.inf)])
+        arr_rank = jnp.argsort(arr_order, stable=True)
+        n_arr = elig_q.sum()
+        ap0 = (elig_q & (a_q <= t0)).sum()  # t0 batch (source stages)
+        slack_c = I_k * deadline  # hoisted constant of the ACD slack
+
+        def cond(c):
+            t, ap, exited, svr, times, clean, it = c
+            return ((ap < n_arr) | ((arr_rank < ap) & ~exited).any()) \
+                & (it < 4 * J + 16)
+
+        def body(c):
+            # One event per iteration, one ACD evaluation per iteration.
+            # ``clean`` carries whether the sweep at (q, t) finished with no
+            # violators: while False, time must not advance — remaining
+            # violators of the current event evict first (the DES runs the
+            # whole kept-prefix sweep before moving on), and dispatches wait
+            # for a clean sweep (evict-before-dispatch at every event).
+            #
+            # A job leaves the queue by dispatch or eviction, never both,
+            # and either way at the current event instant — so one `times`
+            # array records both exits (dispatches as +t, evictions as
+            # -t - 1; run_stage requires t0 >= 0) and a sentinel-index
+            # scatter (J + mode="drop" = no-op) commits the conditional
+            # write without a full-width select.
+            t, ap, exited, svr, times, clean, it = c
+            arrived = arr_rank < ap
+            q = arrived & ~exited
+            nq = q.any()
+            done = (ap >= n_arr) & ~nq
+            # next event: arrival vs dispatch opportunity (free replica now,
+            # else the earliest completion)
+            t_arr = arr_t[ap]
+            sidx = jnp.argmin(svr)
+            mins = svr[sidx]
+            next_comp = jnp.min(jnp.where(svr > t, svr, jnp.inf))
+            td = jnp.where(nq, jnp.where(mins <= t, t, next_comp), jnp.inf)
+            advance = clean & ~done
+            is_arr = advance & (t_arr <= td)
+            t_new = jnp.where(advance, jnp.minimum(t_arr, td), t)
+            ap = ap + is_arr.astype(ap.dtype)
+            q1 = (arr_rank < ap) & ~exited
+            # ACD sweep step at t_new; a single priority-encoded argmax
+            # yields the first violator if any, else the queue head
+            if adaptive:
+                contrib = jnp.where(q1, P_q, 0.0)
+                prefix_excl = jnp.cumsum(contrib) - contrib
+                viol = (q1 & acd_k
+                        & (prefix_excl > slack_c - I_k * (t_new + rem_q)))
+                has_viol = viol.any()
+                pos_x = jnp.argmax(q1 + 2 * viol.astype(jnp.int8))
+            else:
+                has_viol = jnp.asarray(False)
+                pos_x = jnp.argmax(q1)
+            # evict the first violator, else dispatch head-of-queue to the
+            # earliest-free replica (mutually exclusive: one queue exit)
+            do_disp = ~has_viol & ~done & (nq | is_arr) & (mins <= t_new)
+            exit_idx = jnp.where(has_viol | do_disp, pos_x, J)
+            exited = exited.at[exit_idx].set(True, mode="drop")
+            times = times.at[exit_idx].set(
+                jnp.where(has_viol, -t_new - 1.0, t_new), mode="drop")
+            svr = jnp.where(do_disp,
+                            svr.at[sidx].set(t_new + dur_q[pos_x]), svr)
+            return (t_new, ap, exited, svr, times, ~has_viol, it + 1)
+
+        svr0 = jnp.where(iota_I < I_k, t0, jnp.inf)  # excess replica slots
+        carry = (jnp.asarray(t0, jnp.float64), ap0, jnp.zeros((J,), bool),
+                 svr0, jnp.full((J,), jnp.nan),
+                 jnp.zeros((), bool), jnp.zeros((), jnp.int32))
+        carry = jax.lax.while_loop(cond, body, carry)
+        _, _, _, _, times, _, _ = carry
+        # back to job coordinates; `times` holds the dispatch instant of
+        # private jobs and -(eviction instant) - 1 of evicted ones
+        times_j = times[inv]
+        evicted = times_j < -0.5  # NaN (never exited) compares False
+        locpub = forced_k | evicted
+        pub_event = jnp.where(forced_k, a, -times_j - 1.0)
+        start = jnp.where(locpub, pub_event + upk, times_j)
+        end = start + jnp.where(locpub, pub_k, dur_k)
+        return start, end, locpub, evicted
+
+    def run_one(P_pred, act_priv, act_pub, act_up, act_down, cost_pub,
+                stage_keys, job_keys, deadline, capacity, t0,
+                A, desc, sink, pinned, inert, I_vec):
+        # per-stage critical-path remainder (reverse index order = reverse
+        # topological order; edges go low -> high)
+        rem_l: List[Optional[jax.Array]] = [None] * M
+        for k in reversed(range(M)):
+            best = jnp.zeros(P_pred.shape[0])
+            for v in range(k + 1, M):
+                best = jnp.maximum(best, jnp.where(A[k, v], rem_l[v], 0.0))
+            rem_l[k] = P_pred[:, k] + best
+
+        if init_phase:
+            off = init_offload_jax(P_pred.sum(axis=1), job_keys, capacity)
+        else:
+            off = jnp.zeros(J, dtype=bool)
+
+        start_l: List[Optional[jax.Array]] = [None] * M
+        end_l: List[Optional[jax.Array]] = [None] * M
+        loc_l: List[Optional[jax.Array]] = [None] * M
+        evict_l: List[Optional[jax.Array]] = [None] * M
+        neg = jnp.full(J, -jnp.inf)
+        for k in range(M):
+            a = neg
+            for u in range(k):
+                a = jnp.maximum(a, jnp.where(A[u, k], end_l[u], -jnp.inf))
+            a = jnp.where(A[:k, k].any() if k else False, a, t0)
+            # forced public at entry: init offload + upstream eviction
+            # cascades (constraint (12)); privacy-pinned stages never leave
+            forced_k = off
+            for u in range(k):
+                forced_k = forced_k | (desc[u, k] & evict_l[u])
+            forced_k = forced_k & ~pinned[k]
+            elig = ~forced_k & ~inert[k]
+            # upload needed iff some input of stage k lives in private
+            # storage (or the stage reads the original private input)
+            if include_transfers:
+                needs_up = jnp.zeros(J, dtype=bool)
+                for u in range(k):
+                    needs_up = needs_up | (A[u, k] & ~loc_l[u])
+                has_pred = A[:k, k].any() if k else jnp.asarray(False)
+                needs_up = jnp.where(has_pred, needs_up, True)
+                upk = jnp.where(needs_up, act_up[:, k], 0.0)
+            else:
+                upk = jnp.zeros(J)
+            acd_k = ~pinned[k]
+            start_l[k], end_l[k], loc_l[k], evict_l[k] = run_stage(
+                k, a, forced_k, elig, upk, I_vec[k], acd_k, P_pred[:, k],
+                rem_l[k], act_priv[:, k], act_pub[:, k], stage_keys[:, k],
+                deadline, t0)
+
+        start = jnp.stack(start_l, axis=1)
+        end = jnp.stack(end_l, axis=1)
+        locpub = jnp.stack(loc_l, axis=1)
+        # job completion: results back in private storage (sink download)
+        fin = end
+        if include_transfers:
+            fin = fin + jnp.where(locpub, act_down, 0.0)
+        completion = jnp.max(
+            jnp.where(sink[None, :], fin, -jnp.inf), axis=1)
+        return dict(makespan=completion.max() - t0,
+                    cost_usd=jnp.sum(jnp.where(locpub, cost_pub, 0.0)),
+                    public_mask=locpub, start=start, end=end,
+                    completion=completion,
+                    n_offloaded_stages=locpub.sum(),
+                    n_init_offloaded_jobs=off.sum(),
+                    per_stage_offloads=locpub.sum(axis=0))
+
+    return run_one
+
+
+@functools.lru_cache(maxsize=None)
+def _engine_fn(M: int, I_max: int, J: int, include_transfers: bool,
+               init_phase: bool, adaptive: bool, n_dev: int):
+    """jit(vmap) on one device; pmap(vmap) sharding the scenario axis
+    across host devices when more are available."""
+    run_one = _build_engine(M, I_max, J, include_transfers, init_phase,
+                            adaptive)
+    if n_dev > 1:
+        return jax.pmap(jax.vmap(run_one))
+    return jax.jit(jax.vmap(run_one))
+
+
+def _norm_batch(d: Dict[str, np.ndarray], B: int) -> Dict[str, np.ndarray]:
+    """Broadcast [J,M] matrices to [B,J,M] (no copy via broadcast_to)."""
+    out = {}
+    for key, v in d.items():
+        v = np.asarray(v, dtype=np.float64)
+        if v.ndim == 2:
+            v = np.broadcast_to(v, (B,) + v.shape)
+        elif v.ndim != 3 or v.shape[0] != B:
+            raise ValueError(f"{key}: expected [J,M] or [{B},J,M], got {v.shape}")
+        out[key] = v
+    return out
+
+
+class _Task:
+    """One application's scenario grid, topologically relabelled and padded
+    to the sweep's common (M_pad, I_max) shape family."""
+
+    def __init__(self, dag: AppDAG, pred, act, c_max_grid, orders,
+                 cost_model, t0, M_pad: int):
+        from .simulator import _with_transfer_defaults
+
+        act = act if act is not None else pred
+        pred = _with_transfer_defaults(pred)
+        act = _with_transfer_defaults(act)
+        B = max([v.shape[0] if np.asarray(v).ndim == 3 else 1
+                 for v in list(pred.values()) + list(act.values())] or [1])
+        pred = _norm_batch(pred, B)
+        act = _norm_batch(act, B)
+        self.dag = dag
+        J, M = pred["P_private"].shape[1:]
+        if M != dag.num_stages:
+            raise ValueError(f"pred has {M} stages, dag has {dag.num_stages}")
+        self.J, self.M = int(J), int(M)
+        self.M_pad = M_pad
+        orders = tuple(orders)
+        self.grid = [(b, o, float(c)) for b in range(B) for o in orders
+                     for c in c_max_grid]
+        self.S = len(self.grid)
+        self.orders_out = tuple(o for (_, o, _) in self.grid)
+        self.c_max_out = np.array([c for (_, _, c) in self.grid])
+        self.batch_out = np.array([b for (b, _, _) in self.grid])
+        self.t0 = float(t0)
+
+        # topological stage relabelling: edges go low -> high afterwards
+        topo = list(dag.topo_order())
+        self.topo = topo
+        self.inv_topo = np.argsort(np.array(topo))
+        mem = dag.mem_mb
+
+        def pad_cols(v):  # [., M] -> [., M_pad], stages in topo order
+            out = np.zeros(v.shape[:-1] + (M_pad,), dtype=np.float64)
+            out[..., :M] = v[..., topo]
+            return out
+
+        # priority keys + public cost: identical numpy math to the DES
+        # preamble; keys depend only on (draw, order)
+        uniq: Dict[Tuple[int, str], Tuple[np.ndarray, np.ndarray]] = {}
+        for b in sorted({b for (b, _, _) in self.grid}):
+            H = cost_model.np_cost(pred["P_public"][b] * 1e3, mem[None, :])
+            for o in dict.fromkeys(orders):
+                key_fn = ORDERS[o]
+                uniq[(b, o)] = (
+                    np.stack([key_fn(pred["P_private"][b], H, k)
+                              for k in range(M)], axis=1),
+                    key_fn(pred["P_private"][b], H, None))
+        stage_keys = np.stack([uniq[(b, o)][0] for (b, o, _) in self.grid])
+        job_keys = np.stack([uniq[(b, o)][1] for (b, o, _) in self.grid])
+        bsel = self.batch_out
+        cost_pub = cost_model.np_cost(act["P_public"] * 1e3,
+                                      mem[None, :])[bsel]
+
+        # structure as data, in relabelled indices, padded with inert stages
+        A = np.zeros((M_pad, M_pad), dtype=bool)
+        desc = np.zeros((M_pad, M_pad), dtype=bool)
+        pos = {s: i for i, s in enumerate(topo)}
+        for (u, v) in dag.edges:
+            A[pos[u], pos[v]] = True
+        dm = dag.descendant_masks
+        for u in range(M):
+            for v in range(M):
+                if dm[u, v]:
+                    desc[pos[u], pos[v]] = True
+        sink = np.zeros(M_pad, dtype=bool)
+        sink[[pos[s] for s in dag.sink_ids]] = True
+        pinned = np.ones(M_pad, dtype=bool)  # inert pad stages: pinned
+        pinned[:M] = dag.must_private_mask[topo]
+        inert = np.ones(M_pad, dtype=bool)
+        inert[:M] = False
+        I_vec = np.ones(M_pad)
+        I_vec[:M] = np.maximum(dag.replicas[topo], 1)
+
+        S = self.S
+        self.args = tuple(
+            np.ascontiguousarray(x, dtype=x.dtype if x.dtype == bool
+                                 else np.float64)
+            for x in (
+                pad_cols(pred["P_private"][bsel]),
+                pad_cols(act["P_private"][bsel]),
+                pad_cols(act["P_public"][bsel]),
+                pad_cols(act["upload"][bsel]),
+                pad_cols(act["download"][bsel]),
+                pad_cols(cost_pub),
+                pad_cols(stage_keys), job_keys,
+                self.t0 + self.c_max_out,
+                float(dag.replicas.sum()) * self.c_max_out,
+                np.full(S, self.t0),
+                np.broadcast_to(A, (S,) + A.shape),
+                np.broadcast_to(desc, (S,) + desc.shape),
+                np.broadcast_to(sink, (S,) + sink.shape),
+                np.broadcast_to(pinned, (S,) + pinned.shape),
+                np.broadcast_to(inert, (S,) + inert.shape),
+                np.broadcast_to(I_vec, (S,) + I_vec.shape),
+            ))
+
+    def pack(self, out: Dict[str, np.ndarray]) -> VectorSimResult:
+        """Slice this task's scenarios out of a (possibly concatenated)
+        engine output and undo the topological stage relabelling."""
+        inv = self.inv_topo
+        return VectorSimResult(
+            makespan=out["makespan"], cost_usd=out["cost_usd"],
+            public_mask=out["public_mask"][:, :, inv],
+            start=out["start"][:, :, inv], end=out["end"][:, :, inv],
+            completion=out["completion"],
+            n_offloaded_stages=out["n_offloaded_stages"],
+            n_init_offloaded_jobs=out["n_init_offloaded_jobs"],
+            per_stage_offloads=out["per_stage_offloads"][:, inv],
+            deadline=self.c_max_out.copy(), orders=self.orders_out,
+            c_max=self.c_max_out, batch_idx=self.batch_out)
+
+
+def _run_task(task: _Task, I_max: int, include_transfers: bool,
+              init_phase: bool, adaptive: bool) -> VectorSimResult:
+    """Run one task's scenario grid through the engine, sharding the
+    scenario axis over host devices when available."""
+    S = task.S
+    n_dev = jax.local_device_count() if S > 1 else 1
+    fn = _engine_fn(task.M_pad, I_max, task.J, include_transfers,
+                    init_phase, adaptive, n_dev)
+    with enable_x64():
+        if n_dev > 1:
+            # strided scenario->device interleave balances heterogeneous
+            # grids across the lockstep shards
+            pad = (-S) % n_dev
+            sel = np.arange(S + pad) % S
+            perm = sel.reshape(-1, n_dev).T.reshape(-1)
+
+            def shard(x):
+                x = np.ascontiguousarray(x[perm])
+                return jnp.asarray(x.reshape((n_dev, -1) + x.shape[1:]))
+
+            out = fn(*[shard(a) for a in task.args])
+            # position of each original scenario in the device-major output
+            # (padding duplicates a few scenarios; any occurrence works)
+            pos = np.empty(S, dtype=np.int64)
+            pos[perm] = np.arange(perm.shape[0])
+            out = jax.tree_util.tree_map(
+                lambda x: np.asarray(x).reshape(
+                    (-1,) + x.shape[2:])[pos], out)
+        else:
+            out = fn(*[jnp.asarray(a) for a in task.args])
+            out = jax.tree_util.tree_map(np.asarray, out)
+    return task.pack(out)
+
+
+def simulate_scenarios(
+    dag: AppDAG,
+    pred: Dict[str, np.ndarray],
+    act: Optional[Dict[str, np.ndarray]] = None,
+    c_max_grid: Sequence[float] = (60.0,),
+    orders: Sequence[str] = ("spt",),
+    cost_model: CostModel = LAMBDA_COST,
+    include_transfers: bool = True,
+    init_phase: bool = True,
+    adaptive: bool = True,
+    t0: float = 0.0,
+    engine: str = "vector",
+) -> VectorSimResult:
+    """Run Alg. 1 over a whole scenario grid in one batched device call.
+
+    ``pred``/``act`` values are [J, M] (shared) or [B, J, M] (a batch of
+    latency draws, e.g. one per seed); the scenario axis enumerates
+    ``batch x orders x c_max_grid`` in C order. ``engine="des"`` replays
+    the same grid serially through the reference simulator — same result
+    layout, used by the equivalence suite and benchmarks.
+    """
+    from .simulator import _with_transfer_defaults, simulate
+
+    if engine == "des":
+        act_d = act if act is not None else pred
+        pred_d = _with_transfer_defaults(pred)
+        act_d = _with_transfer_defaults(act_d)
+        B = max([v.shape[0] if np.asarray(v).ndim == 3 else 1
+                 for v in list(pred_d.values()) + list(act_d.values())]
+                or [1])
+        pred_d = _norm_batch(pred_d, B)
+        act_d = _norm_batch(act_d, B)
+        grid = [(b, o, float(c)) for b in range(B) for o in orders
+                for c in c_max_grid]
+        sims = [simulate(dag, {k: v[b] for k, v in pred_d.items()},
+                         {k: v[b] for k, v in act_d.items()},
+                         c_max=c, order=o, cost_model=cost_model,
+                         include_transfers=include_transfers,
+                         init_phase=init_phase, adaptive=adaptive, t0=t0)
+                for (b, o, c) in grid]
+        return VectorSimResult(
+            makespan=np.array([r.makespan for r in sims]),
+            cost_usd=np.array([r.cost_usd for r in sims]),
+            public_mask=np.stack([r.public_mask for r in sims]),
+            start=np.stack([r.start for r in sims]),
+            end=np.stack([r.end for r in sims]),
+            completion=np.stack([r.completion for r in sims]),
+            n_offloaded_stages=np.array([r.n_offloaded_stages for r in sims]),
+            n_init_offloaded_jobs=np.array(
+                [r.n_init_offloaded_jobs for r in sims]),
+            per_stage_offloads=np.stack([r.per_stage_offloads for r in sims]),
+            deadline=np.array([r.deadline for r in sims]),
+            orders=tuple(o for (_, o, _) in grid),
+            c_max=np.array([c for (_, _, c) in grid]),
+            batch_idx=np.array([b for (b, _, _) in grid]))
+    if engine != "vector":
+        raise ValueError(f"unknown engine {engine!r}")
+    return sweep_scenarios(
+        [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
+              orders=orders)],
+        cost_model=cost_model, include_transfers=include_transfers,
+        init_phase=init_phase, adaptive=adaptive, t0=t0)[0]
+
+
+def sweep_scenarios(
+    tasks: Sequence[Dict],
+    cost_model: CostModel = LAMBDA_COST,
+    include_transfers: bool = True,
+    init_phase: bool = True,
+    adaptive: bool = True,
+    t0: float = 0.0,
+    engine: str = "vector",
+) -> List[VectorSimResult]:
+    """Run several scenario grids — e.g. a whole Fig.-4 figure, one task per
+    application — as one batched, device-parallel sweep.
+
+    Each task is a dict with keys ``dag``, ``pred``, optional ``act``,
+    ``c_max_grid`` and ``orders``; results come back in task order. Tasks
+    with a common job count batch into a single engine call (stages padded
+    to the largest DAG; the scenario axis shards across host devices);
+    differing job counts fall back to one call per group.
+    """
+    if engine == "des":
+        return [simulate_scenarios(
+            t["dag"], t["pred"], t.get("act"),
+            t.get("c_max_grid", (60.0,)), t.get("orders", ("spt",)),
+            cost_model=cost_model, include_transfers=include_transfers,
+            init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des")
+            for t in tasks]
+    if engine != "vector":
+        raise ValueError(f"unknown engine {engine!r}")
+    if t0 < 0:
+        # the engine sign-encodes eviction times as -t - 1, so the clock
+        # must stay non-negative (the DES has no such restriction)
+        raise ValueError("engine='vector' requires t0 >= 0")
+
+    M_pad = max(t["dag"].num_stages for t in tasks)
+    I_max = max(1, max(max(int(r) for r in t["dag"].replicas)
+                       for t in tasks))
+    prepped = [_Task(t["dag"], t["pred"], t.get("act"),
+                     t.get("c_max_grid", (60.0,)),
+                     t.get("orders", ("spt",)), cost_model, t0, M_pad)
+               for t in tasks]
+
+    # One engine call per task, each sharding its own scenario axis across
+    # the host devices: per-device state then stays small (cache-resident),
+    # which measures faster than fusing all tasks into one wider batch.
+    # Tasks still share compiled executables through the (M_pad, I_max, J)
+    # shape family.
+    results: List[VectorSimResult] = []
+    for p in prepped:
+        if p.J == 0:
+            z2, z3 = np.zeros((p.S, 0)), np.zeros((p.S, 0, p.M))
+            results.append(VectorSimResult(
+                makespan=np.zeros(p.S), cost_usd=np.zeros(p.S),
+                public_mask=np.zeros((p.S, 0, p.M), dtype=bool),
+                start=z3, end=z3, completion=z2,
+                n_offloaded_stages=np.zeros(p.S, dtype=np.int64),
+                n_init_offloaded_jobs=np.zeros(p.S, dtype=np.int64),
+                per_stage_offloads=np.zeros((p.S, p.M), dtype=np.int64),
+                deadline=p.c_max_out.copy(), orders=p.orders_out,
+                c_max=p.c_max_out, batch_idx=p.batch_out))
+        else:
+            results.append(_run_task(p, I_max, bool(include_transfers),
+                                     bool(init_phase), bool(adaptive)))
+    return results

@@ -15,13 +15,16 @@ ridge models fitted on simulated traces reproduce the paper's pipeline
 end-to-end.
 
 ``plan_batch_jax`` runs the initialization phase of Alg. 1 (capacity
-prefix rule) fully vectorized/jitted; the DES executes the adaptive ACD
-phase.
+prefix rule) fully vectorized/jitted. ``schedule`` executes one (order,
+C_max) point; ``schedule_sweep`` evaluates a whole SLA grid — every
+(order, deadline) scenario of a request batch — as one batched call on
+the jit engine (``engine="vector"``), with ``engine="des"`` as the
+serial event-heap reference.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +36,7 @@ from ..core.greedy import init_offload_jax, t_max
 from ..core.perfmodel import fit_app_perf_model, AppPerfModel
 from ..core.priority import ORDERS
 from ..core.scheduler import BatchReport, SkedulixScheduler
+from ..core.vectorsim import VectorSimResult
 from ..launch.roofline import HBM_BW, PEAK_FLOPS
 from ..models.config import ModelConfig
 
@@ -157,9 +161,9 @@ class HybridServingScheduler:
         self.perf_model = fit_app_perf_model(self.dag, traces)
         return self.perf_model
 
-    def schedule(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
-                 c_max: float, order: str = "spt", seed: int = 1,
-                 use_ridge: bool = True) -> BatchReport:
+    def _pred_act(self, prompt_len, new_tokens, seed: int, use_ridge: bool):
+        """(pred, act) for one batch: ridge predictions (or the noiseless
+        analytic model) vs a jittered actual-latency draw."""
         rng = np.random.default_rng(seed)
         act = self.lat.latencies(prompt_len, new_tokens, rng)
         if use_ridge and self.perf_model is not None:
@@ -169,8 +173,29 @@ class HybridServingScheduler:
                                          "upload", "download")}
         else:
             pred = self.lat.latencies(prompt_len, new_tokens, None)
+        return pred, act
+
+    def schedule(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
+                 c_max: float, order: str = "spt", seed: int = 1,
+                 use_ridge: bool = True) -> BatchReport:
+        pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
         return self.sched.schedule_batch(c_max=c_max, pred=pred, act=act,
                                          order=order)
+
+    def schedule_sweep(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
+                       c_max_grid: Sequence[float],
+                       orders: Sequence[str] = ("spt",), seed: int = 1,
+                       use_ridge: bool = True,
+                       engine: str = "vector") -> VectorSimResult:
+        """Schedule the batch across a whole (order x SLA-deadline) grid.
+
+        The serving twin of Fig. 4: one batched engine call instead of one
+        DES replay per grid point; scenario ``s`` of the result is the
+        (orders[s], c_max[s]) schedule of the same request batch.
+        """
+        pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
+        return self.sched.schedule_sweep(
+            c_max_grid, pred=pred, act=act, orders=orders, engine=engine)
 
     def baselines(self, prompt_len, new_tokens, seed: int = 1):
         rng = np.random.default_rng(seed)

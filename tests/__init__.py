@@ -1,0 +1,1 @@
+# Package marker so test modules can use relative imports (``._subproc``).

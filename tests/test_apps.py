@@ -77,3 +77,63 @@ def test_warmup_excludes_compile_time(rng):
     spec.stage_fns[0]([job])
     b = time.perf_counter() - t0
     assert abs(a - b) < max(a, b) * 5 + 0.01      # same order of magnitude
+
+
+# -- AppDAG cached structure vs the seed's naive edge scans ---------------
+# The DES hot-path rewrite replaced per-call O(E) scans with caches on the
+# immutable AppDAG; the ``naive_*`` reference implementations stay in
+# dag.py precisely so this regression suite can assert the caches agree.
+
+def _structure_dags():
+    from repro.core import APPS
+    from repro.core.dag import AppDAG, Stage
+    from repro.serving.hybrid import serving_dag
+    rng = np.random.default_rng(0)
+    dags = list(APPS.values()) + [serving_dag()]
+    for trial in range(5):  # random index-shuffled DAGs, incl. a diamond-ish
+        M = int(rng.integers(2, 7))
+        perm = rng.permutation(M)
+        edges = tuple(sorted({(int(perm[u]), int(perm[v]))
+                              for u in range(M) for v in range(u + 1, M)
+                              if rng.random() < 0.4}))
+        dags.append(AppDAG(
+            f"rand{trial}",
+            tuple(Stage(f"s{i}", replicas=int(rng.integers(1, 4)))
+                  for i in range(M)),
+            edges))
+    return dags
+
+
+@pytest.mark.parametrize("dag", _structure_dags(), ids=lambda d: d.name)
+def test_appdag_caches_match_naive(dag):
+    from repro.core.dag import (naive_descendants, naive_predecessors,
+                                naive_sinks, naive_sources, naive_successors,
+                                naive_topo_order)
+    M, E = dag.num_stages, dag.edges
+    assert dag.sources() == naive_sources(E, M)
+    assert dag.sinks() == naive_sinks(E, M)
+    assert dag.topo_order() == naive_topo_order(E, M)
+    for k in range(M):
+        assert dag.successors(k) == naive_successors(E, k)
+        assert dag.predecessors(k) == naive_predecessors(E, k)
+        assert dag.descendants(k) == naive_descendants(E, k)
+        assert list(np.flatnonzero(dag.descendant_masks[k])) == \
+            naive_descendants(E, k)
+    # adjacency matrix agrees with the edge list
+    for u in range(M):
+        for v in range(M):
+            assert dag.adjacency[u, v] == ((u, v) in E)
+
+
+def test_longest_path_latency_matches_bruteforce():
+    from repro.core import video_app
+    dag = video_app()
+    rng = np.random.default_rng(1)
+    lat = rng.uniform(0.5, 3.0, (6, dag.num_stages))
+    out = dag.longest_path_latency(lat)
+    # brute force all root-to-sink paths of the diamond
+    paths = [(0, 1, 3), (0, 2, 3)]
+    for j in range(6):
+        assert np.isclose(out[j, 0],
+                          max(lat[j, list(p)].sum() for p in paths))
+        assert np.isclose(out[j, 3], lat[j, 3])

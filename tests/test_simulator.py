@@ -102,3 +102,16 @@ def test_must_private_pins(rng):
     pred = _mk(rng, dag, J=30)
     res = simulate(dag, pred, c_max=10.0)   # very tight
     assert not res.public_mask[:, 0].any()
+
+
+def test_simulate_does_not_mutate_inputs(rng):
+    """Transfer defaults must not leak into caller-owned dicts."""
+    dag = matrix_app()
+    P = rng.uniform(1.0, 5.0, (8, dag.num_stages))
+    pred = dict(P_private=P, P_public=P * 0.5)     # no upload/download keys
+    act = dict(P_private=P * 1.1, P_public=P * 0.6)
+    pred_keys, act_keys = set(pred), set(act)
+    simulate(dag, pred, act, c_max=20.0)
+    assert set(pred) == pred_keys and set(act) == act_keys
+    simulate(dag, pred, None, c_max=20.0)
+    assert set(pred) == pred_keys

@@ -1,0 +1,140 @@
+"""Equivalence suite: the batched jit engine vs the discrete-event reference.
+
+The vector engine must reproduce the DES exactly (continuous latency draws
+have no event-time ties, so the two event orders coincide): makespan, cost,
+start/end times, completion, offload masks and counters, across the three
+canonical apps, the serving DAG, a privacy-pinned DAG, both priority
+orders, tight-to-loose deadlines, prediction error, and the engine flags.
+"""
+import numpy as np
+import pytest
+
+from repro.core import APPS, AppDAG, Stage, simulate
+from repro.core.vectorsim import simulate_scenarios, sweep_scenarios
+from repro.serving.hybrid import serving_dag
+
+J = 17
+FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
+          "n_offloaded_stages", "n_init_offloaded_jobs",
+          "per_stage_offloads")
+
+PINNED_DAG = AppDAG(
+    "pinned",
+    (Stage("a", 2), Stage("b", 2, must_private=True), Stage("c", 2)),
+    ((0, 1), (1, 2)))
+
+
+def workload(dag, J, seed, jitter=0.1):
+    rng = np.random.default_rng(seed)
+    M = dag.num_stages
+    P_priv = rng.lognormal(0.0, 0.5, (J, M)) * 2.0
+    pred = dict(P_private=P_priv,
+                P_public=P_priv * rng.uniform(0.8, 1.6, (J, M)),
+                upload=rng.uniform(0.05, 0.3, (J, M)),
+                download=rng.uniform(0.05, 0.3, (J, M)))
+    act = {k: v * rng.lognormal(0, jitter, v.shape) for k, v in pred.items()}
+    return pred, act
+
+
+def grid_for(dag, pred, fracs=(0.3, 0.6, 1.2)):
+    base = float(pred["P_private"].sum()) / float(dag.replicas.sum())
+    return tuple(float(base * f) for f in fracs)
+
+
+def assert_equivalent(v, d):
+    for fld in FIELDS:
+        a = np.nan_to_num(np.asarray(getattr(v, fld), float), nan=-1.0)
+        b = np.nan_to_num(np.asarray(getattr(d, fld), float), nan=-1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9,
+                                   err_msg=f"field {fld}")
+    assert (v.public_mask == d.public_mask).all(), "offload decisions differ"
+
+
+@pytest.mark.parametrize("dag", [*APPS.values(), serving_dag(), PINNED_DAG],
+                         ids=lambda d: d.name)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_matches_des(dag, seed):
+    pred, act = workload(dag, J, seed)
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"))
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+
+
+@pytest.mark.parametrize("flags", [
+    dict(include_transfers=False, adaptive=False),
+    dict(init_phase=False),
+    dict(adaptive=False),
+])
+def test_engine_matches_des_flag_variants(flags):
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 2)
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"), **flags)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+
+
+def test_latency_draw_batch_axis():
+    """act given as [B, J, M]: one scenario per (draw, order, deadline)."""
+    dag = APPS["image"]
+    rng = np.random.default_rng(5)
+    pred, _ = workload(dag, J, 5)
+    act = {k: v[None] * rng.lognormal(0, 0.1, (3,) + v.shape)
+           for k, v in pred.items()}
+    kw = dict(c_max_grid=grid_for(dag, pred, (0.4, 0.9)), orders=("spt",))
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert v.num_scenarios == 3 * 2
+    assert (v.batch_idx == d.batch_idx).all()
+    assert_equivalent(v, d)
+
+
+def test_scenario_slicing_matches_single_simulate():
+    """VectorSimResult.scenario(s) == the plain DES run of that point, and
+    simulate(engine="vector") routes through the batched engine."""
+    dag = APPS["matrix"]
+    pred, act = workload(dag, J, 3)
+    grid = grid_for(dag, pred)
+    v = simulate_scenarios(dag, pred, act, c_max_grid=grid,
+                           orders=("spt", "hcf"))
+    for s in range(v.num_scenarios):
+        single = simulate(dag, pred, act, c_max=float(v.c_max[s]),
+                          order=v.orders[s])
+        sliced = v.scenario(s)
+        assert np.isclose(sliced.makespan, single.makespan)
+        assert np.isclose(sliced.cost_usd, single.cost_usd)
+        assert (sliced.public_mask == single.public_mask).all()
+    via_simulate = simulate(dag, pred, act, c_max=float(grid[0]),
+                            order="spt", engine="vector")
+    ref = simulate(dag, pred, act, c_max=float(grid[0]), order="spt")
+    assert np.isclose(via_simulate.makespan, ref.makespan)
+    assert np.isclose(via_simulate.cost_usd, ref.cost_usd)
+
+
+def test_sweep_scenarios_multi_app():
+    """A whole heterogeneous figure in one sweep call, vs per-point DES."""
+    tasks = []
+    for seed, dag in enumerate(APPS.values()):
+        pred, act = workload(dag, J, 10 + seed)
+        tasks.append(dict(dag=dag, pred=pred, act=act,
+                          c_max_grid=grid_for(dag, pred, (0.4, 0.8)),
+                          orders=("spt", "hcf")))
+    outs = sweep_scenarios(tasks)
+    for task, v in zip(tasks, outs):
+        d = simulate_scenarios(task["dag"], task["pred"], task["act"],
+                               task["c_max_grid"], task["orders"],
+                               engine="des")
+        assert_equivalent(v, d)
+
+
+def test_vector_engine_rejects_unsupported():
+    dag = APPS["matrix"]
+    pred, act = workload(dag, 4, 0)
+    with pytest.raises(ValueError):
+        simulate(dag, pred, act, engine="vector",
+                 replica_slowdown={(0, 0): 2.0})
+    with pytest.raises(ValueError):
+        simulate_scenarios(dag, pred, act, t0=-1.0)
+    with pytest.raises(ValueError):
+        simulate(dag, pred, act, engine="warp")
