@@ -5,7 +5,9 @@ Each arch also runs an SLA *sweep* — both priority orders across a grid of
 deadlines — through ``HybridServingScheduler.schedule_sweep``; with
 ``--engine vector`` (default) the whole grid is one batched jit-engine
 call, with ``--engine des`` it replays serially through the event-heap
-reference.
+reference. A second sweep runs over a 3-pool elastic *portfolio*
+(``elastic_portfolio``): overflow lands on the cheapest feasible pool per
+request stage, exercising the multi-provider engine path end-to-end.
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.serving import HybridServingScheduler
+from repro.serving.hybrid import elastic_portfolio
 
 from .common import print_rows, row, timed
 
@@ -52,6 +55,23 @@ def run(full: bool = False, engine: str = "vector"):
             f"scenarios={sweep.num_scenarios};met={met};"
             f"cost_spread={sweep.cost_usd.min():.4f}"
             f"..{sweep.cost_usd.max():.4f}"))
+        # same SLA sweep over a 3-pool elastic portfolio: overflow goes to
+        # the cheapest feasible pool per stage (multi-provider engine path)
+        hp = HybridServingScheduler(get_config(arch),
+                                    portfolio=elastic_portfolio(3))
+        hp.perf_model = h.perf_model  # reuse the fitted ridge models
+        if engine == "vector":
+            hp.schedule_sweep(plen, ntok, grid, orders=("spt", "hcf"),
+                              engine=engine)
+        psweep, tp = timed(hp.schedule_sweep, plen, ntok, grid,
+                           orders=("spt", "hcf"), engine=engine)
+        pools = np.unique(psweep.provider[psweep.provider >= 0]).size
+        rows.append(row(
+            f"serve/{arch}/sweep[{engine},3pool]",
+            tp / psweep.num_scenarios / J * 1e6,
+            f"scenarios={psweep.num_scenarios};pools_used={pools};"
+            f"cost_spread={psweep.cost_usd.min():.4f}"
+            f"..{psweep.cost_usd.max():.4f}"))
     return rows
 
 

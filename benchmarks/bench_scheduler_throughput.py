@@ -10,6 +10,12 @@ x a C_max grid — on three engines:
               whole grid per device call, scenario axis sharded across
               host devices.
 
+``--providers N`` adds a multi-provider point (``demo_portfolio(N)``,
+cheapest-feasible placement per offloaded stage) on the des/vector
+engines — the frozen seed DES predates the portfolio and sits that one
+out. The smoke run always includes a 3-provider point so CI tracks
+multi-provider throughput alongside the scalar engines.
+
 Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
 absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
 the seed baseline at each job count. ``--smoke`` runs a tiny instance and
@@ -71,7 +77,8 @@ def fig4_workload(J: int, jitter: float = 0.05):
     return tasks
 
 
-def run_serial(tasks, sim_fn):
+def run_serial(tasks, sim_fn, portfolio=None):
+    kw = {} if portfolio is None else {"portfolio": portfolio}
     t0 = time.perf_counter()
     chk = 0.0
     n = 0
@@ -79,39 +86,43 @@ def run_serial(tasks, sim_fn):
         for order in task["orders"]:
             for c in task["c_max_grid"]:
                 r = sim_fn(task["dag"], task["pred"], task["act"],
-                           c_max=c, order=order)
+                           c_max=c, order=order, **kw)
                 chk += r.makespan + r.cost_usd
                 n += 1
     return time.perf_counter() - t0, chk, n
 
 
-def run_vector(tasks, warm: bool = True):
+def run_vector(tasks, warm: bool = True, portfolio=None):
     calls = [{k: t[k] for k in ("dag", "pred", "act", "c_max_grid", "orders")}
              for t in tasks]
     if warm:  # compile outside the timed region
-        sweep_scenarios(calls)
+        sweep_scenarios(calls, portfolio=portfolio)
     t0 = time.perf_counter()
-    outs = sweep_scenarios(calls)
+    outs = sweep_scenarios(calls, portfolio=portfolio)
     dt = time.perf_counter() - t0
     chk = float(sum(o.makespan.sum() + o.cost_usd.sum() for o in outs))
     return dt, chk, sum(o.num_scenarios for o in outs)
 
 
-def measure_point(J: int, engines, deadlines=N_DEADLINES):
+def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
             t["c_max_grid"] = t["c_max_grid"][:deadlines]
     point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
              "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
+    if portfolio is not None:
+        point["providers"] = portfolio.num_providers
     checks = {}
     for eng in engines:
         if eng == "seed":
+            if portfolio is not None:
+                raise ValueError("the frozen seed DES has no portfolio")
             dt, chk, n = run_serial(tasks, simulate_seed)
         elif eng == "des":
-            dt, chk, n = run_serial(tasks, simulate)
+            dt, chk, n = run_serial(tasks, simulate, portfolio=portfolio)
         else:
-            dt, chk, n = run_vector(tasks)
+            dt, chk, n = run_vector(tasks, portfolio=portfolio)
         checks[eng] = chk
         point["engines"][eng] = {
             "wall_s": round(dt, 4),
@@ -141,9 +152,15 @@ def main(argv=None):
                     help="add the very slow J=32768 point")
     ap.add_argument("--one-device", action="store_true",
                     help="do not shard the vector engine across cores")
+    ap.add_argument("--providers", type=int, default=3, metavar="N",
+                    help="provider count for the multi-provider point "
+                         "(demo_portfolio(N); des/vector engines)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
+
+    from repro.core.cost import demo_portfolio  # noqa: E402
+    pf = demo_portfolio(args.providers)
 
     report = {"bench": "scheduler_throughput",
               "devices": None, "points": []}
@@ -154,10 +171,18 @@ def main(argv=None):
         print("smoke: J=64, full sweep, all engines")
         report["points"].append(
             measure_point(64, ("seed", "des", "vector")))
+        print(f"smoke: J=64, {args.providers}-provider portfolio, "
+              "des+vector")
+        report["points"].append(
+            measure_point(64, ("des", "vector"), portfolio=pf))
     else:
         print("sweep 3 apps x 2 orders x 5 deadlines:")
         report["points"].append(
             measure_point(512, ("seed", "des", "vector")))
+        print(f"multi-provider sweep ({args.providers} providers, "
+              "des/vector only):")
+        report["points"].append(
+            measure_point(512, ("des", "vector"), portfolio=pf))
         # large-J: seed is O(J^2 log J); one deadline keeps it bounded
         print("large-J point (1 deadline per app/order):")
         report["points"].append(

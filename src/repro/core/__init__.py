@@ -1,10 +1,12 @@
 # The paper's primary contribution: hybrid-capacity cost/deadline scheduling
 # of DAG batch workloads (Skedulix, Alg. 1) — vectorized JAX math + a
 # discrete-event hybrid platform, with exact MILP reference solvers.
-from .cost import CostModel, LAMBDA_COST, lambda_cost, stage_costs
+from .cost import (CostModel, LAMBDA_COST, Provider, ProviderPortfolio,
+                   as_portfolio, demo_portfolio, lambda_cost, stage_costs)
 from .dag import APPS, AppDAG, Stage, image_app, matrix_app, video_app
 from .greedy import (acd_sweep, acd_sweep_jax, init_offload, init_offload_jax,
-                     offload_negative_acd, t_max)
+                     offload_negative_acd, select_provider,
+                     select_provider_jax, t_max)
 from .milp import MilpResult, johnson_makespan, knapsack_lower_bound, solve_milp
 from .perfmodel import (AppPerfModel, RidgeModel, StageModels, fit_app_perf_model,
                         fit_ridge, grid_search_ridge, mape)
@@ -17,8 +19,9 @@ from .vectorsim import VectorSimResult, simulate_scenarios, sweep_scenarios
 __all__ = [
     "AppDAG", "Stage", "APPS", "matrix_app", "video_app", "image_app",
     "CostModel", "LAMBDA_COST", "lambda_cost", "stage_costs",
+    "Provider", "ProviderPortfolio", "as_portfolio", "demo_portfolio",
     "init_offload", "init_offload_jax", "acd_sweep", "acd_sweep_jax",
-    "offload_negative_acd", "t_max",
+    "offload_negative_acd", "select_provider", "select_provider_jax", "t_max",
     "MilpResult", "solve_milp", "johnson_makespan", "knapsack_lower_bound",
     "RidgeModel", "fit_ridge", "grid_search_ridge", "mape", "AppPerfModel",
     "StageModels", "fit_app_perf_model",

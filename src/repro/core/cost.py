@@ -1,29 +1,60 @@
-"""Public-cloud cost model (paper Eqn. 1) — vectorized, jit-able.
+"""Public-cloud cost models (paper Eqn. 1), scalar and multi-provider.
+
+The paper's Eqn. 1 is the scalar Lambda shape
 
     h(t) = 100 * ceil(t/100) * (M/1024) * (0.00001667/1000)
 
-t in milliseconds, M the memory configuration in MB. The framework extends
-trivially to any deterministic cost-of-latency model (Sec. II-A); the
-quantum and $/GB-ms rate are parameters so elastic TPU/GPU billing (per
-second, per 100 ms, ...) uses the same code path.
+with t in milliseconds and M the memory configuration in MB; Lambda bills
+a *minimum of one quantum*, so h(0) is one quantum's price, not $0
+(``min_quantums``). :class:`CostModel` reproduces exactly that, with the
+quantum, $/GB-ms rate and minimum-billed quantums as parameters so elastic
+TPU/GPU billing (per second, per 100 ms, ...) uses the same code path.
+
+Portfolio semantics (multi-cloud)
+---------------------------------
+:class:`ProviderPortfolio` generalizes the scalar model to N public
+providers. Each :class:`Provider` carries its own billing quantum, $/GB-ms
+rate, egress price ($/GB on results leaving the provider), a latency
+multiplier applied to the ``P_public``/transfer draws (a slower provider
+both runs longer *and* bills that longer runtime), and an optional memory
+cap (stages whose ``mem_mb`` exceeds it are infeasible there). Placement
+becomes a provider *index*: ``-1`` is the private cloud, ``0..N-1`` a
+public provider. Alg. 1's eviction offloads each (job, stage) to the
+**cheapest feasible provider** — the argmin over the portfolio of the
+*predicted* billed cost (execution + sink egress), a static per-(job,
+stage) choice shared bit-for-bit by the DES, the vector engine and the
+MILP baseline. Egress is charged where the platform pays a download: at
+public sink stages, on the un-multiplied transfer volume
+(``download_s * EGRESS_GB_PER_S``); inter-provider hops inside a forced-
+public cascade are not billed separately. A single-provider portfolio
+built from a :class:`CostModel` reproduces the scalar pipeline exactly.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 USD_PER_GB_MS = 0.00001667 / 1000.0  # AWS Lambda (Feb 2020)
 QUANTUM_MS = 100.0
+MIN_QUANTUMS = 1.0                   # Lambda bills at least one quantum
+EGRESS_GB_PER_S = 0.125              # transfer volume of one link-second (1 Gbps)
 
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """Deterministic execution-cost model: rounded time x memory x rate."""
+    """Deterministic execution-cost model: rounded time x memory x rate.
+
+    ``min_quantums`` floors the billed quantums — zero (or negative, e.g.
+    a ridge model extrapolating below 0) execution-time draws bill one
+    quantum, as Lambda does, instead of $0.
+    """
 
     quantum_ms: float = QUANTUM_MS
     usd_per_gb_ms: float = USD_PER_GB_MS
+    min_quantums: float = MIN_QUANTUMS
 
     def __call__(self, t_ms, mem_mb):
         """Cost (USD) of executing for ``t_ms`` at memory ``mem_mb``.
@@ -31,13 +62,19 @@ class CostModel:
         Works on scalars, numpy arrays and jnp arrays (broadcasting).
         """
         t_ms = jnp.asarray(t_ms)
-        rounded = self.quantum_ms * jnp.ceil(t_ms / self.quantum_ms)
-        return rounded * (jnp.asarray(mem_mb) / 1024.0) * self.usd_per_gb_ms
+        quantums = jnp.maximum(jnp.ceil(t_ms / self.quantum_ms),
+                               self.min_quantums)
+        return (self.quantum_ms * quantums
+                * (jnp.asarray(mem_mb) / 1024.0) * self.usd_per_gb_ms)
 
     def np_cost(self, t_ms, mem_mb):
         """Pure-numpy twin for the discrete-event hot loop."""
-        rounded = self.quantum_ms * np.ceil(np.asarray(t_ms, dtype=np.float64) / self.quantum_ms)
-        return rounded * (np.asarray(mem_mb, dtype=np.float64) / 1024.0) * self.usd_per_gb_ms
+        quantums = np.maximum(
+            np.ceil(np.asarray(t_ms, dtype=np.float64) / self.quantum_ms),
+            self.min_quantums)
+        return (self.quantum_ms * quantums
+                * (np.asarray(mem_mb, dtype=np.float64) / 1024.0)
+                * self.usd_per_gb_ms)
 
 
 LAMBDA_COST = CostModel()
@@ -56,3 +93,180 @@ def stage_costs(P_public_s: np.ndarray, mem_mb: np.ndarray,
     ``mem_mb``: [M].  Returns [J, M] USD.
     """
     return model.np_cost(np.asarray(P_public_s) * 1e3, np.asarray(mem_mb)[None, :])
+
+
+# -- provider portfolio ----------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Provider:
+    """One public provider's billing + latency profile.
+
+    ``latency_mult`` scales the public execution *and* transfer draws (and
+    the billed runtime with them); ``egress_usd_per_gb`` prices results
+    leaving the provider (charged at public sinks); ``max_mem_mb`` caps the
+    memory configurations the provider can host (None = unlimited).
+    """
+
+    name: str
+    quantum_ms: float = QUANTUM_MS
+    usd_per_gb_ms: float = USD_PER_GB_MS
+    egress_usd_per_gb: float = 0.0
+    latency_mult: float = 1.0
+    min_quantums: float = MIN_QUANTUMS
+    max_mem_mb: Optional[float] = None
+
+    def cost_model(self) -> CostModel:
+        """The provider's scalar execution-billing model."""
+        return CostModel(quantum_ms=self.quantum_ms,
+                         usd_per_gb_ms=self.usd_per_gb_ms,
+                         min_quantums=self.min_quantums)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProviderPortfolio:
+    """N public providers; placement generalizes to a provider index.
+
+    All matrix methods use a leading provider axis ``[P, ...]`` and pure
+    float64 numpy so the DES preamble, the vector engine's data arrays and
+    the MILP coefficients are byte-identical.
+    """
+
+    providers: Tuple[Provider, ...]
+
+    def __post_init__(self):
+        if not self.providers:
+            raise ValueError("portfolio needs at least one provider")
+
+    @classmethod
+    def from_cost_model(cls, model: CostModel = LAMBDA_COST,
+                        name: str = "lambda") -> "ProviderPortfolio":
+        """Single-provider portfolio reproducing a scalar :class:`CostModel`."""
+        return cls((Provider(name, quantum_ms=model.quantum_ms,
+                             usd_per_gb_ms=model.usd_per_gb_ms,
+                             min_quantums=model.min_quantums),))
+
+    @property
+    def num_providers(self) -> int:
+        return len(self.providers)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.providers)
+
+    @property
+    def latency_mults(self) -> np.ndarray:
+        return np.array([p.latency_mult for p in self.providers],
+                        dtype=np.float64)
+
+    def feasible_mask(self, mem_mb: np.ndarray,
+                      require: Optional[np.ndarray] = None) -> np.ndarray:
+        """[P, M] bool: provider p can host stage k's memory config.
+
+        Raises when a stage has no feasible provider, except stages where
+        ``require`` is False — privacy-pinned stages never offload, so
+        they don't need one.
+        """
+        mem = np.asarray(mem_mb, dtype=np.float64)
+        rows = [np.ones_like(mem, dtype=bool) if p.max_mem_mb is None
+                else mem <= p.max_mem_mb for p in self.providers]
+        mask = np.stack(rows, axis=0)
+        uncovered = ~mask.any(axis=0)
+        if require is not None:
+            uncovered = uncovered & np.asarray(require, dtype=bool)
+        if uncovered.any():
+            bad = np.flatnonzero(uncovered)
+            raise ValueError(
+                f"no feasible provider for stage(s) {bad.tolist()} "
+                f"(mem_mb={mem[bad].tolist()})")
+        return mask
+
+    def np_stage_costs(self, P_public_s: np.ndarray, mem_mb: np.ndarray,
+                       download_s: Optional[np.ndarray] = None,
+                       sink_mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """[P, J, M] billed USD of each (job, stage) on each provider.
+
+        Billing = execution (provider-multiplied runtime through the
+        provider's quantum/rate/min-quantums) + egress at sink stages on
+        the un-multiplied download volume.
+        """
+        P_pub = np.asarray(P_public_s, dtype=np.float64)
+        mem = np.asarray(mem_mb, dtype=np.float64)[None, :]
+        out = np.empty((self.num_providers,) + P_pub.shape, dtype=np.float64)
+        for i, p in enumerate(self.providers):
+            t_ms = p.latency_mult * P_pub * 1e3
+            out[i] = p.cost_model().np_cost(t_ms, mem)
+            if p.egress_usd_per_gb and download_s is not None \
+                    and sink_mask is not None:
+                gb = np.asarray(download_s, np.float64) * EGRESS_GB_PER_S
+                out[i] += np.where(np.asarray(sink_mask, bool)[None, :],
+                                   p.egress_usd_per_gb * gb, 0.0)
+        return out
+
+    def np_selection_costs(self, P_public_s, mem_mb, download_s=None,
+                           sink_mask=None,
+                           require: Optional[np.ndarray] = None) -> np.ndarray:
+        """[P, J, M] argmin key: billed cost, +inf where mem-infeasible.
+
+        Stages exempted via ``require=False`` (privacy-pinned — they never
+        offload) keep their unmasked prices even when no provider could
+        host them, so the priority keys they feed stay finite.
+        """
+        H = self.np_stage_costs(P_public_s, mem_mb, download_s, sink_mask)
+        feas = self.feasible_mask(mem_mb, require)
+        uncovered = ~feas.any(axis=0)          # only possible where exempt
+        return np.where((feas | uncovered[None, :])[:, None, :], H, np.inf)
+
+    def select(self, selection_costs: np.ndarray) -> np.ndarray:
+        """[J, M] cheapest-feasible provider index (ties -> lowest index)."""
+        from .greedy import select_provider
+        return select_provider(selection_costs)
+
+    def min_cost(self, selection_costs: np.ndarray) -> np.ndarray:
+        """[J, M] the selected provider's cost — the H the priority keys
+        and the scalar pipeline see."""
+        return np.min(selection_costs, axis=0)
+
+
+def demo_portfolio(n: int = 3) -> ProviderPortfolio:
+    """Deterministic N-provider portfolio for benchmarks and tests.
+
+    Profiles are chosen so the argmin genuinely moves with the workload:
+    a coarse-quantum discounter wins long executions, a fine-quantum
+    premium provider wins short ones, and the memory-capped edge provider
+    only bids on small stages.
+    """
+    if n < 1:
+        raise ValueError(f"demo_portfolio needs n >= 1 providers, got {n}")
+    base = [
+        Provider("lambda", quantum_ms=QUANTUM_MS,
+                 usd_per_gb_ms=USD_PER_GB_MS, egress_usd_per_gb=0.09),
+        Provider("faas-coarse", quantum_ms=1000.0,
+                 usd_per_gb_ms=0.62 * USD_PER_GB_MS,
+                 egress_usd_per_gb=0.12, latency_mult=0.85),
+        Provider("faas-fine", quantum_ms=1.0,
+                 usd_per_gb_ms=1.35 * USD_PER_GB_MS,
+                 egress_usd_per_gb=0.05, latency_mult=1.2),
+        Provider("edge", quantum_ms=50.0,
+                 usd_per_gb_ms=2.1 * USD_PER_GB_MS,
+                 egress_usd_per_gb=0.0, latency_mult=0.7,
+                 max_mem_mb=2048.0),
+    ]
+    if n <= len(base):
+        return ProviderPortfolio(tuple(base[:n]))
+    extra = [
+        Provider(f"prov{i}", quantum_ms=QUANTUM_MS * (1 + i % 3),
+                 usd_per_gb_ms=(0.8 + 0.07 * i) * USD_PER_GB_MS,
+                 egress_usd_per_gb=0.01 * (i % 5),
+                 latency_mult=0.8 + 0.05 * (i % 7))
+        for i in range(len(base), n)
+    ]
+    return ProviderPortfolio(tuple(base + extra))
+
+
+def as_portfolio(portfolio: Optional[ProviderPortfolio],
+                 cost_model: CostModel) -> ProviderPortfolio:
+    """Normalize the (portfolio, cost_model) call-site convention: an
+    explicit portfolio wins, else the scalar model wraps as one provider."""
+    if portfolio is not None:
+        return portfolio
+    return ProviderPortfolio.from_cost_model(cost_model)

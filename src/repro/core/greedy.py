@@ -80,14 +80,21 @@ def acd_sweep_jax(queue_P_stage, path_remaining, t, deadline, replicas, mask=Non
     """jnp twin; ``mask`` marks real entries in a fixed-size padded queue.
 
     Padded entries contribute no queue delay and return ACD=+inf.
+
+    The arithmetic dtype follows the inputs (no forced float32): under
+    ``enable_x64`` a float64 queue reproduces the numpy twin bit-for-bit,
+    so near-tie ACD values cannot flip the offload decision between the
+    serving control loop and the DES.
     """
-    P = jnp.asarray(queue_P_stage, dtype=jnp.float32)
+    P = jnp.asarray(queue_P_stage)
+    if not jnp.issubdtype(P.dtype, jnp.floating):
+        P = P.astype(jnp.result_type(float))  # ints promote, floats keep
     if mask is not None:
         P = P * mask
     csum = jnp.cumsum(P)
     excl_prefix = csum - P
     acd = deadline - (t + excl_prefix / jnp.maximum(replicas, 1)
-                      + jnp.asarray(path_remaining, dtype=jnp.float32))
+                      + jnp.asarray(path_remaining, dtype=P.dtype))
     if mask is not None:
         acd = jnp.where(mask.astype(bool), acd, jnp.inf)
     return acd
@@ -96,3 +103,21 @@ def acd_sweep_jax(queue_P_stage, path_remaining, t, deadline, replicas, mask=Non
 def offload_negative_acd(acd: np.ndarray) -> np.ndarray:
     """Alg. 1 line 17: mask of queue positions to dispatch to public."""
     return np.asarray(acd) < 0.0
+
+
+# -- provider selection (multi-cloud eviction target) ----------------------
+
+def select_provider(selection_costs: np.ndarray) -> np.ndarray:
+    """Cheapest feasible provider per (job, stage).
+
+    ``selection_costs``: [P, ...] predicted billed cost per provider, +inf
+    where infeasible (see ``ProviderPortfolio.np_selection_costs``). The
+    eviction target is the argmin along the provider axis, ties broken by
+    the lowest provider index.
+    """
+    return np.argmin(np.asarray(selection_costs), axis=0)
+
+
+def select_provider_jax(selection_costs: jax.Array) -> jax.Array:
+    """jnp twin of :func:`select_provider` (same first-min tie-break)."""
+    return jnp.argmin(selection_costs, axis=0)

@@ -2,7 +2,14 @@
 
 * :func:`solve_milp` — the appendix MILP (Eqns. 2-16) built verbatim and
   handed to scipy's HiGHS branch-and-cut (the paper used Gurobi). Used for
-  the Fig.-3 "optimal vs greedy" comparison at small job counts.
+  the Fig.-3 "optimal vs greedy" comparison at small job counts. Placement
+  is provider-indexed: binary ``g_{j,k,p}`` puts (job, stage) on public
+  provider p (with its own billed cost and latency multiplier), so the
+  optimal baseline stays comparable to the greedy portfolio scheduler; a
+  single-provider portfolio reduces to the paper's e/(1-e) formulation.
+  Provider-dependent *edge* transfer latencies enter the precedence rows
+  through the portfolio's fastest multiplier (a relaxation — the bound
+  stays a true lower bound); sink downloads are provider-exact.
 * :func:`johnson_makespan` — exact F2||Cmax makespan (Johnson's rule) for
   2-stage/1-replica all-private instances; a simulator ground truth.
 * :func:`knapsack_lower_bound` — the appendix "special case": with one
@@ -17,7 +24,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
-from .cost import CostModel, LAMBDA_COST
+from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
 from .dag import AppDAG
 
 
@@ -29,7 +36,8 @@ class MilpResult:
     e: np.ndarray               # [J, M] 1 = private, 0 = public
     s: np.ndarray               # [J, M] start times
     mip_gap: float
-    objective_bound: float      # best provable bound on saved cost
+    objective_bound: float      # best provable lower bound on public cost
+    provider: Optional[np.ndarray] = None  # [J, M] -1 private, else index
 
 
 def solve_milp(
@@ -43,21 +51,38 @@ def solve_milp(
     include_sink_download: bool = True,
     time_limit_s: float = 120.0,
     mip_rel_gap: float = 1e-3,
+    portfolio: Optional[ProviderPortfolio] = None,
 ) -> MilpResult:
-    """Build and solve the appendix MILP.
+    """Build and solve the appendix MILP, provider-indexed.
 
-    Decision vars: start times s_{k,j}; e_{k,j} (1=private); replica
-    assignment x^i_{k,j}; pair orders y^r_{k,j}; transfer indicators
-    u_{k,j}, d_{k,j}. Objective (2): maximize saved cost sum e*H.
+    Decision vars: start times s_{k,j}; e_{k,j} (1=private); provider
+    placement g_{k,j,p} (1 = public on provider p, with e + sum_p g = 1);
+    replica assignment x^i_{k,j}; pair orders y^r_{k,j}; transfer
+    indicators u_{k,j}, d_{k,j}. Objective (2), portfolio form: minimize
+    the billed public cost  sum g_{k,j,p} * H_p[j,k].
     """
     P_priv = np.asarray(P_private, dtype=np.float64)
     P_pub = np.asarray(P_public, dtype=np.float64)
     J, M = P_priv.shape
     U = np.zeros((J, M)) if upload is None else np.asarray(upload, dtype=np.float64)
     D = np.zeros((J, M)) if download is None else np.asarray(download, dtype=np.float64)
-    H = cost_model.np_cost(P_pub * 1e3, dag.mem_mb[None, :])
+    pf = as_portfolio(portfolio, cost_model)
+    nP = pf.num_providers
+    sink_mask = dag.is_sink if include_sink_download else None
+    H_p = pf.np_stage_costs(P_pub, dag.mem_mb,
+                            D if include_sink_download else None,
+                            sink_mask)                         # [P, J, M]
+    feas = pf.feasible_mask(dag.mem_mb,
+                            require=~dag.must_private_mask)    # [P, M]
+    lat = pf.latency_mults                                     # [P]
+    # provider-dependent transfer latency on DAG edges would need
+    # provider-indexed u/d indicators; the fastest multiplier keeps those
+    # rows a relaxation (never over-constrains), so the optimum stays a
+    # valid lower bound for every placement. Exact for one provider.
+    min_lat = float(lat.min())
     I = dag.replicas
-    Q = float(c_max + P_priv.sum() + P_pub.sum() + U.sum() + D.sum() + 1.0)
+    Q = float(c_max + P_priv.sum() + float(lat.max()) * P_pub.sum()
+              + U.sum() + D.sum() + 1.0)
     BIG = float(max(dag.stages[k].replicas for k in range(M)) + M + J + 1)
 
     # ---- variable layout ------------------------------------------------
@@ -69,6 +94,7 @@ def solve_milp(
         return lo
     s0 = _block(J * M)
     e0 = _block(J * M)
+    g0 = _block(J * M * nP)
     x_index: Dict[Tuple[int, int, int], int] = {}
     for k in range(M):
         for j in range(J):
@@ -84,6 +110,7 @@ def solve_milp(
     n_var = idx
     S = lambda j, k: s0 + j * M + k
     E = lambda j, k: e0 + j * M + k
+    G = lambda j, k, p: g0 + (j * M + k) * nP + p
     Uv = lambda j, k: u0 + j * M + k
     Dv = lambda j, k: d0 + j * M + k
 
@@ -99,25 +126,43 @@ def solve_milp(
     sources = set(dag.sources())
     for j in range(J):
         for k in range(M):
-            # (3) deadline: s + Ppriv*e + Ppub*(1-e) [+ Ddl*(1-e) at sinks] <= Cmax
-            ddl = D[j, k] if (include_sink_download and k in sinks) else 0.0
-            _con({S(j, k): 1.0, E(j, k): P_priv[j, k] - P_pub[j, k] - ddl},
-                 -np.inf, c_max - P_pub[j, k] - ddl)
+            # placement partition: e + sum_p g_p = 1
+            coef = {E(j, k): 1.0}
+            for p in range(nP):
+                coef[G(j, k, p)] = 1.0
+            _con(coef, 1.0, 1.0)
+            # (3) deadline: s + Ppriv*e + sum_p (latmult_p*Ppub
+            #     [+ latmult_p*Ddl at sinks]) * g_p <= Cmax
+            is_sink_dl = include_sink_download and k in sinks
+            coef = {S(j, k): 1.0, E(j, k): P_priv[j, k]}
+            for p in range(nP):
+                dur = lat[p] * P_pub[j, k]
+                if is_sink_dl:
+                    dur += lat[p] * D[j, k]
+                coef[G(j, k, p)] = dur
+            _con(coef, -np.inf, c_max)
             # (5) sum_i x = e
             coef = {E(j, k): -1.0}
             for i in range(int(I[k])):
                 coef[x_index[(j, k, i)]] = 1.0
             _con(coef, 0.0, 0.0)
-            # source upload: batch input lives in private storage
+            # source upload: batch input lives in private storage, so a
+            # public source start waits for its provider's upload
             if k in sources:
-                _con({S(j, k): 1.0, E(j, k): U[j, k]}, U[j, k], np.inf)
+                coef = {S(j, k): 1.0}
+                for p in range(nP):
+                    coef[G(j, k, p)] = -lat[p] * U[j, k]
+                _con(coef, 0.0, np.inf)
     # (4) precedence + transfer latencies along edges
     for j in range(J):
         for (p, q) in dag.edges:
-            _con({S(j, q): 1.0, S(j, p): -1.0,
-                  E(j, p): -(P_priv[j, p] - P_pub[j, p]),
-                  Uv(j, p): -U[j, p], Dv(j, p): -D[j, p]},
-                 P_pub[j, p], np.inf)
+            coef = {S(j, q): 1.0, S(j, p): -1.0,
+                    E(j, p): -P_priv[j, p],
+                    Uv(j, p): -min_lat * U[j, p],
+                    Dv(j, p): -min_lat * D[j, p]}
+            for pi in range(nP):
+                coef[G(j, p, pi)] = -lat[pi] * P_pub[j, p]
+            _con(coef, 0.0, np.inf)
     # (6),(7) replica sequencing
     for k in range(M):
         for j in range(J):
@@ -152,10 +197,7 @@ def solve_milp(
             _con(c10, -np.inf, BIG - 0.001)
             c11 = dict(xcoef); c11[Dv(j, p)] = c11.get(Dv(j, p), 0.0) + BIG
             _con(c11, 0.0, np.inf)
-    # (12) privacy pins
-    pins_lo = np.zeros(n_var)
-    pins_hi = np.ones(n_var)
-    pins_lo[:s0 + J * M] = 0.0
+    # (12) privacy pins + provider feasibility (memory caps)
     lb = np.zeros(n_var)
     ub = np.ones(n_var)
     ub[s0:s0 + J * M] = np.inf  # s >= 0 free above
@@ -163,12 +205,17 @@ def solve_milp(
         for k in range(M):
             if dag.stages[k].must_private:
                 lb[E(j, k)] = 1.0
+            for p in range(nP):
+                if not feas[p, k]:
+                    ub[G(j, k, p)] = 0.0
 
-    # objective (2): maximize sum e*H  -> minimize -sum e*H
+    # objective (2), portfolio form: minimize the billed public cost
+    # sum g * H_p (== maximizing the saved cost over any fixed provider)
     c = np.zeros(n_var)
     for j in range(J):
         for k in range(M):
-            c[E(j, k)] = -H[j, k]
+            for p in range(nP):
+                c[G(j, k, p)] = H_p[p, j, k]
 
     A = sp.lil_matrix((len(rows), n_var))
     for r, coef in enumerate(rows):
@@ -189,16 +236,23 @@ def solve_milp(
         return MilpResult(status=int(res.status), feasible=False,
                           cost_usd=float("inf"), e=np.zeros((J, M)),
                           s=np.zeros((J, M)), mip_gap=float("inf"),
-                          objective_bound=0.0)
+                          objective_bound=0.0,
+                          provider=np.full((J, M), -1, dtype=np.int64))
     x = np.asarray(res.x)
     e = np.rint(x[e0:e0 + J * M].reshape(J, M))
     s = x[s0:s0 + J * M].reshape(J, M)
-    saved = float((e * H).sum())
-    total = float(H.sum())
+    g = np.rint(x[g0:g0 + J * M * nP].reshape(J, M, nP))
+    provider = np.where(e > 0.5, -1, np.argmax(g, axis=2)).astype(np.int64)
+    cost = float((g * np.moveaxis(H_p, 0, 2)).sum())
+    # a dual bound of exactly 0.0 is a legitimate proof state (public cost
+    # >= 0 always holds) — only fall back to the incumbent when HiGHS
+    # reports no bound at all
+    bound = getattr(res, "mip_dual_bound", None)
     return MilpResult(
-        status=int(res.status), feasible=True, cost_usd=total - saved,
+        status=int(res.status), feasible=True, cost_usd=cost,
         e=e, s=s, mip_gap=float(getattr(res, "mip_gap", 0.0) or 0.0),
-        objective_bound=float(getattr(res, "mip_dual_bound", -res.fun) or -res.fun))
+        objective_bound=float(res.fun if bound is None else bound),
+        provider=provider)
 
 
 def johnson_makespan(P: np.ndarray) -> float:

@@ -16,7 +16,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from .cost import CostModel, LAMBDA_COST
+from .cost import CostModel, LAMBDA_COST, ProviderPortfolio
 from .dag import AppDAG
 from .perfmodel import AppPerfModel
 from .simulator import SimResult, simulate, simulate_all_private, simulate_all_public
@@ -32,7 +32,7 @@ class BatchReport:
 
     def summary(self) -> Dict[str, float]:
         r = self.result
-        return {
+        out = {
             "makespan_s": r.makespan,
             "c_max": self.c_max,
             "cost_usd": r.cost_usd,
@@ -41,6 +41,14 @@ class BatchReport:
             "n_offloaded_stages": float(r.n_offloaded_stages),
             "n_init_offloaded_jobs": float(r.n_init_offloaded_jobs),
         }
+        if r.provider is not None and r.provider.size:
+            # stages placed per public provider (portfolio runs)
+            used, counts = np.unique(r.provider[r.provider >= 0],
+                                     return_counts=True)
+            out["n_providers_used"] = float(len(used))
+            for p, c in zip(used.tolist(), counts.tolist()):
+                out[f"stages_on_provider_{p}"] = float(c)
+        return out
 
 
 class SkedulixScheduler:
@@ -52,10 +60,13 @@ class SkedulixScheduler:
     """
 
     def __init__(self, dag: AppDAG, perf_model: Optional[AppPerfModel] = None,
-                 cost_model: CostModel = LAMBDA_COST):
+                 cost_model: CostModel = LAMBDA_COST,
+                 portfolio: Optional[ProviderPortfolio] = None):
         self.dag = dag
         self.perf_model = perf_model
         self.cost_model = cost_model
+        # multi-cloud: offloaded stages go to the cheapest feasible provider
+        self.portfolio = portfolio
 
     def predict(self, base_features: np.ndarray) -> Dict[str, np.ndarray]:
         if self.perf_model is None:
@@ -74,7 +85,8 @@ class SkedulixScheduler:
         if pred is None:
             pred = self.predict(base_features)
         res = simulate(self.dag, pred, act, c_max=c_max, order=order,
-                       cost_model=self.cost_model, **sim_kwargs)
+                       cost_model=self.cost_model, portfolio=self.portfolio,
+                       **sim_kwargs)
         return BatchReport(result=res, pred=pred, order=order, c_max=c_max)
 
     def schedule_sweep(
@@ -97,11 +109,15 @@ class SkedulixScheduler:
             pred = self.predict(base_features)
         return simulate_scenarios(
             self.dag, pred, act, c_max_grid=c_max_grid, orders=orders,
-            cost_model=self.cost_model, engine=engine, **sim_kwargs)
+            cost_model=self.cost_model, portfolio=self.portfolio,
+            engine=engine, **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None) -> SimResult:
-        return simulate_all_public(self.dag, pred, act, cost_model=self.cost_model)
+        return simulate_all_public(self.dag, pred, act,
+                                   cost_model=self.cost_model,
+                                   portfolio=self.portfolio)
 
     def baseline_all_private(self, pred, act=None, order="spt") -> SimResult:
         return simulate_all_private(self.dag, pred, act, order=order,
-                                    cost_model=self.cost_model)
+                                    cost_model=self.cost_model,
+                                    portfolio=self.portfolio)

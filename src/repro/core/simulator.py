@@ -11,6 +11,12 @@ Semantics of one ACD sweep follow Alg. 1 lines 14-20 with the dispatched
 jobs removed as the loop progresses (offloading a job frees queue capacity
 for those behind it): a sequential kept-prefix scan.
 
+The public cloud is a provider *portfolio* (:mod:`.cost`): each offloaded
+(job, stage) runs on its cheapest feasible provider — a static argmin of
+predicted billed cost, precomputed in the constructor — so the event loop
+itself only ever reads pre-gathered per-provider durations and prices.
+``loc`` holds the provider index (-1 = private replica).
+
 Engine selection: this module is the ``engine="des"`` reference
 implementation — an event heap driving per-stage sorted queues. The
 ``engine="vector"`` twin (:mod:`.vectorsim`) runs the same algorithm as
@@ -37,13 +43,15 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .cost import CostModel, LAMBDA_COST
+from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
 from .dag import AppDAG
 from .greedy import init_offload, t_max
 from .priority import ORDERS
 
 WAITING, QUEUED, RUNNING, DONE = 0, 1, 2, 3
-PRIVATE, PUBLIC = 0, 1
+# Placement is a provider index: PRIVATE (-1) is the private cloud, values
+# >= 0 index the portfolio's public providers (0 for the scalar model).
+PRIVATE = -1
 
 
 @dataclasses.dataclass
@@ -58,6 +66,7 @@ class SimResult:
     n_init_offloaded_jobs: int
     per_stage_offloads: np.ndarray  # [M]
     deadline: float
+    provider: Optional[np.ndarray] = None  # [J, M] int: -1 private, else index
 
     @property
     def offload_fraction(self) -> float:
@@ -73,7 +82,8 @@ class _Sim:
                  act: Dict[str, np.ndarray], c_max: float, order: str,
                  cost_model: CostModel, include_transfers: bool,
                  init_phase: bool, adaptive: bool, t0: float,
-                 replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None):
+                 replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
+                 portfolio: Optional[ProviderPortfolio] = None):
         self.dag = dag
         self.J, self.M = pred["P_private"].shape
         self.pred = pred
@@ -83,15 +93,30 @@ class _Sim:
         self.t0 = t0
         self.order = order
         self.cost_model = cost_model
+        self.portfolio = as_portfolio(portfolio, cost_model)
         self.include_transfers = include_transfers
         self.adaptive = adaptive
         self.init_phase = init_phase
         # (stage, replica_idx) -> multiplicative slowdown (straggler injection)
         self.replica_slowdown = replica_slowdown or {}
 
-        # priority keys: per-stage and whole-job, from *predicted* quantities
+        # provider selection: each (job, stage), if offloaded, runs on the
+        # cheapest feasible provider by *predicted* billed cost (static
+        # argmin shared with the vector engine and the MILP baseline)
         mem = dag.mem_mb
-        H_pred = cost_model.np_cost(pred["P_public"] * 1e3, mem[None, :])
+        pf = self.portfolio
+        down_pred = pred["download"] if include_transfers else None
+        down_act = act["download"] if include_transfers else None
+        sinkm = dag.is_sink if include_transfers else None
+        H_pred_sel = pf.np_selection_costs(pred["P_public"], mem,
+                                           down_pred, sinkm,
+                                           require=~dag.must_private_mask)
+        self.prov = pf.select(H_pred_sel)                      # [J, M]
+        lat = pf.latency_mults[self.prov]                      # [J, M]
+
+        # priority keys: per-stage and whole-job, from *predicted* quantities
+        # (H seen by the keys = the selected provider's predicted price)
+        H_pred = pf.min_cost(H_pred_sel)
         key_fn = ORDERS[order]
         self.stage_keys = np.stack(
             [key_fn(pred["P_private"], H_pred, k) for k in range(self.M)], axis=1)
@@ -102,14 +127,18 @@ class _Sim:
 
         # hot-path precomputation ------------------------------------------
         self.P_pred = np.ascontiguousarray(pred["P_private"], dtype=np.float64)
-        # Eqn.-1 cost of every (job, stage) if it runs public (actual time)
-        self.H_act = cost_model.np_cost(act["P_public"] * 1e3, mem[None, :])
+        # billed cost of every (job, stage) on its selected provider
+        # (actual runtime; includes sink egress when transfers are modeled)
+        H_act_sel = pf.np_stage_costs(act["P_public"], mem, down_act, sinkm)
+        self.H_act = np.take_along_axis(H_act_sel, self.prov[None], axis=0)[0]
         # plain-float nested lists: scalar reads off numpy arrays dominate
-        # the event loop otherwise
+        # the event loop otherwise; public/transfer draws carry the selected
+        # provider's latency multiplier
         self._act_priv = act["P_private"].tolist()
-        self._act_pub = act["P_public"].tolist()
-        self._act_up = act["upload"].tolist()
-        self._act_down = act["download"].tolist()
+        self._act_pub = (act["P_public"] * lat).tolist()
+        self._act_up = (act["upload"] * lat).tolist()
+        self._act_down = (act["download"] * lat).tolist()
+        self._prov_l = self.prov.tolist()
         self._cost_l = self.H_act.tolist()
         self._keys_l = self.stage_keys.tolist()
         # cached DAG structure
@@ -122,7 +151,7 @@ class _Sim:
 
         # runtime state
         self.status = np.full((self.J, self.M), WAITING, dtype=np.int8)
-        self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int8)
+        self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int16)
         self.forced_public = np.zeros((self.J, self.M), dtype=bool)
         self.start = np.full((self.J, self.M), np.nan)
         self.end = np.full((self.J, self.M), np.nan)
@@ -152,10 +181,11 @@ class _Sim:
         makespan = float(np.max(self.completion) - self.t0) if self.J else 0.0
         return SimResult(
             makespan=makespan, cost_usd=self.cost,
-            public_mask=self.loc == PUBLIC, start=self.start, end=self.end,
+            public_mask=self.loc != PRIVATE, start=self.start, end=self.end,
             completion=self.completion, n_offloaded_stages=self.n_offloaded,
             n_init_offloaded_jobs=self.n_init_off,
-            per_stage_offloads=self.per_stage_offloads, deadline=self.c_max)
+            per_stage_offloads=self.per_stage_offloads, deadline=self.c_max,
+            provider=self.loc.astype(np.int64))
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
@@ -246,7 +276,7 @@ class _Sim:
 
     def _start_public(self, t: float, j: int, k: int):
         self.status[j, k] = RUNNING
-        self.loc[j, k] = PUBLIC
+        self.loc[j, k] = self._prov_l[j][k]
         self.n_offloaded += 1
         self.per_stage_offloads[k] += 1
         up = 0.0
@@ -278,7 +308,7 @@ class _Sim:
                     self._on_queue_change(t, q)
         if k in self._is_sink:
             down = 0.0
-            if self.include_transfers and self.loc[j, k] == PUBLIC:
+            if self.include_transfers and self.loc[j, k] != PRIVATE:
                 down = self._act_down[j][k]
             if t + down > self.completion[j]:
                 self.completion[j] = t + down
@@ -312,6 +342,7 @@ def simulate(
     t0: float = 0.0,
     replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
     engine: str = "des",
+    portfolio: Optional[ProviderPortfolio] = None,
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
@@ -320,7 +351,9 @@ def simulate(
     ``replica_slowdown`` injects stragglers: {(stage, replica): factor}.
     ``engine``: ``"des"`` (event-heap reference) or ``"vector"`` (the
     jit-compiled batched engine in :mod:`.vectorsim`; no straggler
-    injection).
+    injection). ``portfolio``: a :class:`ProviderPortfolio` — offloaded
+    stages run on their cheapest feasible provider; defaults to a single
+    provider shaped like ``cost_model``.
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
@@ -332,31 +365,37 @@ def simulate(
         batched = simulate_scenarios(
             dag, pred, act, c_max_grid=(c_max,), orders=(order,),
             cost_model=cost_model, include_transfers=include_transfers,
-            init_phase=init_phase, adaptive=adaptive, t0=t0)
+            init_phase=init_phase, adaptive=adaptive, t0=t0,
+            portfolio=portfolio)
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")
     sim = _Sim(dag, pred, act, c_max, order, cost_model, include_transfers,
-               init_phase, adaptive, t0, replica_slowdown)
+               init_phase, adaptive, t0, replica_slowdown, portfolio)
     return sim.run()
 
 
 def simulate_all_public(dag, pred, act=None, cost_model=LAMBDA_COST,
-                        include_transfers=True) -> SimResult:
+                        include_transfers=True,
+                        portfolio: Optional[ProviderPortfolio] = None
+                        ) -> SimResult:
     """Baseline: everything offloaded at t0 (capacity prefix = 0)."""
     act = act if act is not None else pred
     pred2 = dict(pred)
     pred2["P_private"] = np.full_like(pred["P_private"], 1e12)  # nothing fits
     res = simulate(dag, pred2, act, c_max=0.0, order="spt",
                    cost_model=cost_model, include_transfers=include_transfers,
-                   adaptive=False)
+                   adaptive=False, portfolio=portfolio)
     return dataclasses.replace(res, deadline=res.makespan)
 
 
 def simulate_all_private(dag, pred, act=None, order: str = "spt",
-                         cost_model=LAMBDA_COST) -> SimResult:
+                         cost_model=LAMBDA_COST,
+                         portfolio: Optional[ProviderPortfolio] = None
+                         ) -> SimResult:
     """Baseline: C_max large enough that nothing offloads (Sec. V-C)."""
     act = act if act is not None else pred
     big = float(np.sum((act or pred)["P_private"])) + 1e6
     return simulate(dag, pred, act, c_max=big, order=order,
-                    cost_model=cost_model, init_phase=True, adaptive=True)
+                    cost_model=cost_model, init_phase=True, adaptive=True,
+                    portfolio=portfolio)

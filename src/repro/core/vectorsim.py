@@ -38,7 +38,10 @@ DAG structure as data
 Adjacency, descendant masks, sink/pinned flags and per-stage replica
 counts enter the engine as *arrays*, not trace-time constants: one
 compiled executable serves every DAG with the same (padded) stage count,
-job count and replica bound. Heterogeneous applications batch into a
+job count and replica bound. The provider portfolio is data too — per-
+provider billed-cost / latency / selection matrices ``[P, J, M]``, with
+the cheapest-feasible-provider argmin evaluated inside the per-stage
+loop — so the shape family is (M_pad, I_max, J, P, flags). Heterogeneous applications batch into a
 single call — stages are topologically relabelled, short DAGs are padded
 with inert stages (no jobs eligible, so their event loops run zero
 iterations) — and the whole figure's scenario axis shards across host
@@ -62,9 +65,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from .cost import CostModel, LAMBDA_COST
+from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
 from .dag import AppDAG
-from .greedy import init_offload_jax
+from .greedy import init_offload_jax, select_provider_jax
 from .priority import ORDERS
 
 
@@ -86,6 +89,7 @@ class VectorSimResult:
     n_offloaded_stages: np.ndarray  # [S]
     n_init_offloaded_jobs: np.ndarray  # [S]
     per_stage_offloads: np.ndarray  # [S, M]
+    provider: np.ndarray            # [S, J, M] int: -1 private, else index
     deadline: np.ndarray            # [S]
     orders: Tuple[str, ...]         # [S]
     c_max: np.ndarray               # [S]
@@ -111,19 +115,25 @@ class VectorSimResult:
             n_offloaded_stages=int(self.n_offloaded_stages[s]),
             n_init_offloaded_jobs=int(self.n_init_offloaded_jobs[s]),
             per_stage_offloads=self.per_stage_offloads[s],
-            deadline=float(self.deadline[s]))
+            deadline=float(self.deadline[s]),
+            provider=self.provider[s])
 
 
 @functools.lru_cache(maxsize=None)
-def _build_engine(M: int, I_max: int, J: int, include_transfers: bool,
-                  init_phase: bool, adaptive: bool):
+def _build_engine(M: int, I_max: int, J: int, P: int,
+                  include_transfers: bool, init_phase: bool, adaptive: bool):
     """Trace the stage-decomposed event loop for one (stage count, replica
-    bound, job count, flags) shape family. DAG structure arrives as data:
-    ``A``/``desc`` are [M, M] adjacency / strict-descendant masks over
-    topologically-ordered stage indices (edges go low -> high), ``sink``/
-    ``pinned``/``inert`` are [M] stage flags, ``I_vec`` the replica counts.
+    bound, job count, provider count, flags) shape family. DAG structure
+    arrives as data: ``A``/``desc`` are [M, M] adjacency / strict-descendant
+    masks over topologically-ordered stage indices (edges go low -> high),
+    ``sink``/``pinned``/``inert`` are [M] stage flags, ``I_vec`` the replica
+    counts. The provider portfolio arrives as data too: per-provider billed
+    cost / latency / selection-key matrices ``[P, J, M]``; the cheapest
+    feasible provider is an argmin inside the per-stage loop, so one
+    executable serves any portfolio of the same size.
     """
     iota_I = jnp.arange(I_max)
+    iota_J = jnp.arange(J)
 
     def run_stage(k, a, forced_k, elig, upk, I_k, acd_k, P_k, rem_k, dur_k,
                   pub_k, keys_k, deadline, t0):
@@ -226,7 +236,7 @@ def _build_engine(M: int, I_max: int, J: int, include_transfers: bool,
         end = start + jnp.where(locpub, pub_k, dur_k)
         return start, end, locpub, evicted
 
-    def run_one(P_pred, act_priv, act_pub, act_up, act_down, cost_pub,
+    def run_one(P_pred, act_priv, pub_p, up_p, down_p, cost_p, sel_p,
                 stage_keys, job_keys, deadline, capacity, t0,
                 A, desc, sink, pinned, inert, I_vec):
         # per-stage critical-path remainder (reverse index order = reverse
@@ -247,6 +257,9 @@ def _build_engine(M: int, I_max: int, J: int, include_transfers: bool,
         end_l: List[Optional[jax.Array]] = [None] * M
         loc_l: List[Optional[jax.Array]] = [None] * M
         evict_l: List[Optional[jax.Array]] = [None] * M
+        prov_l: List[Optional[jax.Array]] = [None] * M
+        down_l: List[Optional[jax.Array]] = [None] * M
+        cost_l: List[Optional[jax.Array]] = [None] * M
         neg = jnp.full(J, -jnp.inf)
         for k in range(M):
             a = neg
@@ -260,6 +273,15 @@ def _build_engine(M: int, I_max: int, J: int, include_transfers: bool,
                 forced_k = forced_k | (desc[u, k] & evict_l[u])
             forced_k = forced_k & ~pinned[k]
             elig = ~forced_k & ~inert[k]
+            # cheapest feasible provider for this stage's jobs: argmin of
+            # the predicted-billing selection key over the provider axis
+            # (infeasible providers carry +inf)
+            pidx_k = select_provider_jax(sel_p[:, :, k])     # [J]
+            pub_k = pub_p[pidx_k, iota_J, k]
+            up_raw = up_p[pidx_k, iota_J, k]
+            down_l[k] = down_p[pidx_k, iota_J, k]
+            cost_l[k] = cost_p[pidx_k, iota_J, k]
+            prov_l[k] = pidx_k
             # upload needed iff some input of stage k lives in private
             # storage (or the stage reads the original private input)
             if include_transfers:
@@ -268,41 +290,44 @@ def _build_engine(M: int, I_max: int, J: int, include_transfers: bool,
                     needs_up = needs_up | (A[u, k] & ~loc_l[u])
                 has_pred = A[:k, k].any() if k else jnp.asarray(False)
                 needs_up = jnp.where(has_pred, needs_up, True)
-                upk = jnp.where(needs_up, act_up[:, k], 0.0)
+                upk = jnp.where(needs_up, up_raw, 0.0)
             else:
                 upk = jnp.zeros(J)
             acd_k = ~pinned[k]
             start_l[k], end_l[k], loc_l[k], evict_l[k] = run_stage(
                 k, a, forced_k, elig, upk, I_vec[k], acd_k, P_pred[:, k],
-                rem_l[k], act_priv[:, k], act_pub[:, k], stage_keys[:, k],
+                rem_l[k], act_priv[:, k], pub_k, stage_keys[:, k],
                 deadline, t0)
 
         start = jnp.stack(start_l, axis=1)
         end = jnp.stack(end_l, axis=1)
         locpub = jnp.stack(loc_l, axis=1)
+        cost_m = jnp.stack(cost_l, axis=1)
+        prov_m = jnp.stack(prov_l, axis=1)
         # job completion: results back in private storage (sink download)
         fin = end
         if include_transfers:
-            fin = fin + jnp.where(locpub, act_down, 0.0)
+            fin = fin + jnp.where(locpub, jnp.stack(down_l, axis=1), 0.0)
         completion = jnp.max(
             jnp.where(sink[None, :], fin, -jnp.inf), axis=1)
         return dict(makespan=completion.max() - t0,
-                    cost_usd=jnp.sum(jnp.where(locpub, cost_pub, 0.0)),
+                    cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0)),
                     public_mask=locpub, start=start, end=end,
                     completion=completion,
                     n_offloaded_stages=locpub.sum(),
                     n_init_offloaded_jobs=off.sum(),
-                    per_stage_offloads=locpub.sum(axis=0))
+                    per_stage_offloads=locpub.sum(axis=0),
+                    provider=jnp.where(locpub, prov_m, -1))
 
     return run_one
 
 
 @functools.lru_cache(maxsize=None)
-def _engine_fn(M: int, I_max: int, J: int, include_transfers: bool,
+def _engine_fn(M: int, I_max: int, J: int, P: int, include_transfers: bool,
                init_phase: bool, adaptive: bool, n_dev: int):
     """jit(vmap) on one device; pmap(vmap) sharding the scenario axis
     across host devices when more are available."""
-    run_one = _build_engine(M, I_max, J, include_transfers, init_phase,
+    run_one = _build_engine(M, I_max, J, P, include_transfers, init_phase,
                             adaptive)
     if n_dev > 1:
         return jax.pmap(jax.vmap(run_one))
@@ -327,7 +352,9 @@ class _Task:
     to the sweep's common (M_pad, I_max) shape family."""
 
     def __init__(self, dag: AppDAG, pred, act, c_max_grid, orders,
-                 cost_model, t0, M_pad: int):
+                 cost_model, t0, M_pad: int,
+                 portfolio: Optional[ProviderPortfolio] = None,
+                 include_transfers: bool = True):
         from .simulator import _with_transfer_defaults
 
         act = act if act is not None else pred
@@ -363,11 +390,25 @@ class _Task:
             out[..., :M] = v[..., topo]
             return out
 
-        # priority keys + public cost: identical numpy math to the DES
-        # preamble; keys depend only on (draw, order)
+        # priority keys + provider selection/billing: identical numpy math
+        # to the DES preamble; keys depend only on (draw, order), the
+        # selection key and billing matrices only on the draw
+        pf = as_portfolio(portfolio, cost_model)
+        self.n_providers = pf.num_providers
+        lat4 = pf.latency_mults[None, :, None, None]          # [1, P, 1, 1]
+        sinkm = dag.is_sink if include_transfers else None
         uniq: Dict[Tuple[int, str], Tuple[np.ndarray, np.ndarray]] = {}
+        sel_by_b: Dict[int, np.ndarray] = {}
+        cost_by_b: Dict[int, np.ndarray] = {}
         for b in sorted({b for (b, _, _) in self.grid}):
-            H = cost_model.np_cost(pred["P_public"][b] * 1e3, mem[None, :])
+            down_pred = pred["download"][b] if include_transfers else None
+            down_act = act["download"][b] if include_transfers else None
+            sel_by_b[b] = pf.np_selection_costs(
+                pred["P_public"][b], mem, down_pred, sinkm,
+                require=~dag.must_private_mask)                # [P, J, M]
+            cost_by_b[b] = pf.np_stage_costs(
+                act["P_public"][b], mem, down_act, sinkm)      # [P, J, M]
+            H = pf.min_cost(sel_by_b[b])
             for o in dict.fromkeys(orders):
                 key_fn = ORDERS[o]
                 uniq[(b, o)] = (
@@ -377,8 +418,12 @@ class _Task:
         stage_keys = np.stack([uniq[(b, o)][0] for (b, o, _) in self.grid])
         job_keys = np.stack([uniq[(b, o)][1] for (b, o, _) in self.grid])
         bsel = self.batch_out
-        cost_pub = cost_model.np_cost(act["P_public"] * 1e3,
-                                      mem[None, :])[bsel]
+        sel_p = np.stack([sel_by_b[b] for b in bsel])          # [S, P, J, M]
+        cost_p = np.stack([cost_by_b[b] for b in bsel])        # [S, P, J, M]
+        # per-provider actual draws: latency multiplier on public/transfers
+        pub_p = act["P_public"][bsel][:, None] * lat4
+        up_p = act["upload"][bsel][:, None] * lat4
+        down_p = act["download"][bsel][:, None] * lat4
 
         # structure as data, in relabelled indices, padded with inert stages
         A = np.zeros((M_pad, M_pad), dtype=bool)
@@ -407,10 +452,11 @@ class _Task:
             for x in (
                 pad_cols(pred["P_private"][bsel]),
                 pad_cols(act["P_private"][bsel]),
-                pad_cols(act["P_public"][bsel]),
-                pad_cols(act["upload"][bsel]),
-                pad_cols(act["download"][bsel]),
-                pad_cols(cost_pub),
+                pad_cols(pub_p),
+                pad_cols(up_p),
+                pad_cols(down_p),
+                pad_cols(cost_p),
+                pad_cols(sel_p),
                 pad_cols(stage_keys), job_keys,
                 self.t0 + self.c_max_out,
                 float(dag.replicas.sum()) * self.c_max_out,
@@ -435,6 +481,7 @@ class _Task:
             n_offloaded_stages=out["n_offloaded_stages"],
             n_init_offloaded_jobs=out["n_init_offloaded_jobs"],
             per_stage_offloads=out["per_stage_offloads"][:, inv],
+            provider=out["provider"][:, :, inv],
             deadline=self.c_max_out.copy(), orders=self.orders_out,
             c_max=self.c_max_out, batch_idx=self.batch_out)
 
@@ -445,8 +492,8 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
     scenario axis over host devices when available."""
     S = task.S
     n_dev = jax.local_device_count() if S > 1 else 1
-    fn = _engine_fn(task.M_pad, I_max, task.J, include_transfers,
-                    init_phase, adaptive, n_dev)
+    fn = _engine_fn(task.M_pad, I_max, task.J, task.n_providers,
+                    include_transfers, init_phase, adaptive, n_dev)
     with enable_x64():
         if n_dev > 1:
             # strided scenario->device interleave balances heterogeneous
@@ -485,6 +532,7 @@ def simulate_scenarios(
     adaptive: bool = True,
     t0: float = 0.0,
     engine: str = "vector",
+    portfolio: Optional[ProviderPortfolio] = None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
@@ -492,7 +540,9 @@ def simulate_scenarios(
     latency draws, e.g. one per seed); the scenario axis enumerates
     ``batch x orders x c_max_grid`` in C order. ``engine="des"`` replays
     the same grid serially through the reference simulator — same result
-    layout, used by the equivalence suite and benchmarks.
+    layout, used by the equivalence suite and benchmarks. ``portfolio``
+    generalizes the public cloud to N providers (cheapest-feasible
+    placement per offloaded stage); default is the scalar ``cost_model``.
     """
     from .simulator import _with_transfer_defaults, simulate
 
@@ -511,7 +561,8 @@ def simulate_scenarios(
                          {k: v[b] for k, v in act_d.items()},
                          c_max=c, order=o, cost_model=cost_model,
                          include_transfers=include_transfers,
-                         init_phase=init_phase, adaptive=adaptive, t0=t0)
+                         init_phase=init_phase, adaptive=adaptive, t0=t0,
+                         portfolio=portfolio)
                 for (b, o, c) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
@@ -524,6 +575,7 @@ def simulate_scenarios(
             n_init_offloaded_jobs=np.array(
                 [r.n_init_offloaded_jobs for r in sims]),
             per_stage_offloads=np.stack([r.per_stage_offloads for r in sims]),
+            provider=np.stack([r.provider for r in sims]),
             deadline=np.array([r.deadline for r in sims]),
             orders=tuple(o for (_, o, _) in grid),
             c_max=np.array([c for (_, _, c) in grid]),
@@ -534,7 +586,8 @@ def simulate_scenarios(
         [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
               orders=orders)],
         cost_model=cost_model, include_transfers=include_transfers,
-        init_phase=init_phase, adaptive=adaptive, t0=t0)[0]
+        init_phase=init_phase, adaptive=adaptive, t0=t0,
+        portfolio=portfolio)[0]
 
 
 def sweep_scenarios(
@@ -545,6 +598,7 @@ def sweep_scenarios(
     adaptive: bool = True,
     t0: float = 0.0,
     engine: str = "vector",
+    portfolio: Optional[ProviderPortfolio] = None,
 ) -> List[VectorSimResult]:
     """Run several scenario grids — e.g. a whole Fig.-4 figure, one task per
     application — as one batched, device-parallel sweep.
@@ -560,7 +614,8 @@ def sweep_scenarios(
             t["dag"], t["pred"], t.get("act"),
             t.get("c_max_grid", (60.0,)), t.get("orders", ("spt",)),
             cost_model=cost_model, include_transfers=include_transfers,
-            init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des")
+            init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des",
+            portfolio=portfolio)
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -574,7 +629,9 @@ def sweep_scenarios(
                        for t in tasks))
     prepped = [_Task(t["dag"], t["pred"], t.get("act"),
                      t.get("c_max_grid", (60.0,)),
-                     t.get("orders", ("spt",)), cost_model, t0, M_pad)
+                     t.get("orders", ("spt",)), cost_model, t0, M_pad,
+                     portfolio=portfolio,
+                     include_transfers=bool(include_transfers))
                for t in tasks]
 
     # One engine call per task, each sharding its own scenario axis across
@@ -593,6 +650,7 @@ def sweep_scenarios(
                 n_offloaded_stages=np.zeros(p.S, dtype=np.int64),
                 n_init_offloaded_jobs=np.zeros(p.S, dtype=np.int64),
                 per_stage_offloads=np.zeros((p.S, p.M), dtype=np.int64),
+                provider=np.full((p.S, 0, p.M), -1, dtype=np.int64),
                 deadline=p.c_max_out.copy(), orders=p.orders_out,
                 c_max=p.c_max_out, batch_idx=p.batch_out))
         else:

@@ -2,8 +2,8 @@
 # LLM request batches (private pod replicas + costed elastic overflow).
 from .engine import Completion, InferenceEngine, Request
 from .hybrid import (HybridServingScheduler, ServingLatencyModel,
-                     plan_batch_jax, serving_dag)
+                     elastic_portfolio, plan_batch_jax, serving_dag)
 
 __all__ = ["InferenceEngine", "Request", "Completion",
            "HybridServingScheduler", "ServingLatencyModel", "serving_dag",
-           "plan_batch_jax"]
+           "plan_batch_jax", "elastic_portfolio"]

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cost import CostModel
+from ..core.cost import (USD_PER_GB_MS, CostModel, Provider,
+                         ProviderPortfolio)
 from ..core.dag import AppDAG, Stage
 from ..core.greedy import init_offload_jax, t_max
 from ..core.perfmodel import fit_app_perf_model, AppPerfModel
@@ -122,6 +123,31 @@ class ServingLatencyModel:
                 "upload": up, "download": down}
 
 
+def elastic_portfolio(n: int = 3) -> ProviderPortfolio:
+    """N elastic accelerator pools for overflow serving.
+
+    All Lambda-shaped, but with non-dominated reservation terms: a
+    committed-use discounter trades a deep rate cut for coarse billing
+    and slow attach, a premium pool bills fine quanta and attaches fast.
+    The cheapest pool therefore depends on each request's stage runtime —
+    long decodes land on the discounter, short ones on the premium pool.
+    """
+    profiles = [
+        # (quantum_ms, rate mult, egress $/GB, latency mult)
+        (1000.0, 1.00, 0.02, 1.00),   # on-demand baseline
+        (4000.0, 0.55, 0.04, 1.25),   # committed-use: cheap, coarse, slow
+        (100.0, 1.20, 0.00, 0.90),    # premium: fine quanta, fast attach
+    ]
+    pools = []
+    for i in range(n):
+        q, r, e, lm = profiles[i % len(profiles)]
+        r *= 1.0 + 0.05 * (i // len(profiles))  # keep clones distinct
+        pools.append(Provider(
+            f"elastic{i}", quantum_ms=q, usd_per_gb_ms=r * USD_PER_GB_MS,
+            egress_usd_per_gb=e, latency_mult=lm))
+    return ProviderPortfolio(tuple(pools))
+
+
 @jax.jit
 def plan_batch_jax(P_private: jax.Array, keys: jax.Array, capacity: float
                    ) -> jax.Array:
@@ -135,14 +161,20 @@ class HybridServingScheduler:
 
     def __init__(self, cfg: ModelConfig, dag: Optional[AppDAG] = None,
                  latency_model: Optional[ServingLatencyModel] = None,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 portfolio: Optional[ProviderPortfolio] = None):
         self.cfg = cfg
         self.dag = dag or serving_dag()
         self.lat = latency_model or ServingLatencyModel(cfg)
-        # elastic accelerator pricing, Lambda-shaped: 1s quantum
+        # elastic accelerator pricing, Lambda-shaped: 1s quantum, the same
+        # $/GB-ms rate as the batch pipeline (one constant, one source)
         self.cost_model = cost_model or CostModel(
-            quantum_ms=1000.0, usd_per_gb_ms=0.00001667 / 1000.0)
-        self.sched = SkedulixScheduler(self.dag, cost_model=self.cost_model)
+            quantum_ms=1000.0, usd_per_gb_ms=USD_PER_GB_MS)
+        # optional multi-cloud portfolio: overflow picks the cheapest
+        # feasible elastic provider per offloaded stage
+        self.portfolio = portfolio
+        self.sched = SkedulixScheduler(self.dag, cost_model=self.cost_model,
+                                       portfolio=portfolio)
         self.perf_model: Optional[AppPerfModel] = None
 
     # -- the paper's pipeline: traces -> ridge models -> schedule --

@@ -1,0 +1,285 @@
+"""Multi-provider cost portfolio: selection, billing, engine parity.
+
+Covers the ISSUE-2 acceptance rails: a single-provider portfolio
+reproduces the scalar pipeline bit-for-bit on both engines; a multi-
+provider portfolio makes the ACD eviction place stages on *different*
+providers by cost, identically in the DES, the vector engine and (as a
+lower bound) the MILP; and the cost-model correctness fixes
+(min-quantums billing floor, float64 ACD twin) hold in both twins.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from repro.core import (APPS, LAMBDA_COST, CostModel, Provider,
+                        ProviderPortfolio, acd_sweep, acd_sweep_jax,
+                        demo_portfolio, select_provider, select_provider_jax,
+                        simulate, solve_milp)
+from repro.core.cost import EGRESS_GB_PER_S, USD_PER_GB_MS, as_portfolio
+from repro.core.vectorsim import simulate_scenarios
+
+from .test_vectorsim import (FIELDS, J, assert_equivalent, grid_for,
+                             workload)
+
+
+# -- min-quantums billing floor (Lambda bills at least one quantum) --------
+
+class TestMinQuantums:
+    @pytest.mark.parametrize("t_ms", [0.0, 1e-12, 1e-9, -0.5, -1e6])
+    def test_zero_and_negative_draws_bill_one_quantum(self, t_ms):
+        one_quantum = 100.0 * (1024.0 / 1024.0) * USD_PER_GB_MS
+        assert float(LAMBDA_COST.np_cost(t_ms, 1024.0)) == pytest.approx(
+            one_quantum)
+        assert float(LAMBDA_COST(t_ms, 1024.0)) == pytest.approx(one_quantum)
+
+    def test_near_zero_rounds_up_not_down(self):
+        # anything in (0, quantum] bills exactly one quantum
+        for t in (1e-6, 0.1, 99.999, 100.0):
+            assert float(LAMBDA_COST.np_cost(t, 1024.0)) == pytest.approx(
+                100.0 * USD_PER_GB_MS)
+
+    def test_twins_agree_on_edge_draws(self):
+        t = np.array([-10.0, 0.0, 1e-9, 50.0, 100.0, 100.1, 1e5])
+        with enable_x64():
+            a = np.asarray(LAMBDA_COST(jnp.asarray(t), 1024.0))
+        b = LAMBDA_COST.np_cost(t, 1024.0)
+        np.testing.assert_array_equal(a, b)
+
+    def test_positive_draws_unchanged_by_floor(self):
+        # the floor only lifts t <= 0: the historical Eqn.-1 values hold
+        legacy = lambda t, m: (100.0 * np.ceil(t / 100.0)
+                               * (m / 1024.0) * USD_PER_GB_MS)
+        for t in (0.5, 99.0, 101.0, 5432.1):
+            assert float(LAMBDA_COST.np_cost(t, 2048.0)) == legacy(t, 2048.0)
+
+    def test_custom_floor(self):
+        cm = CostModel(quantum_ms=1000.0, min_quantums=2.0)
+        assert float(cm.np_cost(1.0, 1024.0)) == pytest.approx(
+            2000.0 * USD_PER_GB_MS)
+
+
+# -- float64 ACD twin (near-tie decisions must not flip) -------------------
+
+class TestAcdDtype:
+    def test_jnp_twin_follows_input_dtype(self):
+        with enable_x64():
+            out = acd_sweep_jax(jnp.asarray(np.ones(4)),
+                                jnp.asarray(np.ones(4)), 0.0, 10.0, 1)
+            assert out.dtype == jnp.float64
+
+    def test_near_tie_offload_decision_matches_numpy(self):
+        # ACD = D - (t + prefix/I + path). At |values| ~ 1e6 a 1e-4 margin
+        # is below float32 resolution (eps ~ 0.0625): the old float32 twin
+        # rounded the violation away and kept the job the DES evicts.
+        P_q = np.array([1.0, 1.0])
+        path = np.array([1.0, 999999.0 + 1e-4])
+        D = 1000000.0
+        ref = acd_sweep(P_q, path, t=0.0, deadline=D, replicas=1)
+        assert ref[1] < 0.0  # numpy DES: evict
+        with enable_x64():
+            out = np.asarray(acd_sweep_jax(jnp.asarray(P_q),
+                                           jnp.asarray(path), 0.0, D, 1))
+        np.testing.assert_array_equal(out, ref)
+        # the legacy behavior (forced float32) loses the violation
+        f32 = np.asarray(acd_sweep_jax(jnp.asarray(P_q, jnp.float32),
+                                       jnp.asarray(path, jnp.float32),
+                                       0.0, D, 1))
+        assert f32[1] >= 0.0
+
+
+# -- portfolio selection ---------------------------------------------------
+
+def _mixed_portfolio():
+    """Coarse discounter vs fine premium: argmin moves with runtime."""
+    return ProviderPortfolio((
+        Provider("coarse", quantum_ms=1000.0,
+                 usd_per_gb_ms=0.5 * USD_PER_GB_MS),
+        Provider("fine", quantum_ms=1.0, usd_per_gb_ms=1.1 * USD_PER_GB_MS),
+    ))
+
+
+class TestSelection:
+    def test_argmin_moves_with_runtime(self):
+        pf = _mixed_portfolio()
+        # short job: fine-quantum premium wins; long job: coarse discounter
+        P_pub = np.array([[0.05], [10.0]])  # seconds
+        sel = pf.np_selection_costs(P_pub, np.array([1024.0]))
+        prov = pf.select(sel)
+        assert prov[0, 0] == 1 and prov[1, 0] == 0
+
+    def test_select_twins_agree(self, rng):
+        pf = demo_portfolio(4)
+        P_pub = rng.uniform(0.01, 20.0, (12, 3))
+        sel = pf.np_selection_costs(P_pub, np.array([512.0, 1024.0, 2048.0]))
+        a = select_provider(sel)
+        with enable_x64():
+            b = np.asarray(select_provider_jax(jnp.asarray(sel)))
+        np.testing.assert_array_equal(a, b)
+
+    def test_memory_cap_excludes_provider(self):
+        pf = demo_portfolio(4)  # "edge" capped at 2048 MB
+        mem = np.array([1024.0, 3008.0])
+        feas = pf.feasible_mask(mem)
+        assert feas[3, 0] and not feas[3, 1]
+        sel = pf.np_selection_costs(np.full((5, 2), 1.0), mem)
+        assert np.isinf(sel[3, :, 1]).all()
+        assert (pf.select(sel)[:, 1] != 3).all()
+
+    def test_no_feasible_provider_raises(self):
+        pf = ProviderPortfolio((Provider("tiny", max_mem_mb=256.0),))
+        with pytest.raises(ValueError, match="no feasible provider"):
+            pf.feasible_mask(np.array([512.0]))
+
+    def test_permutation_invariance(self, rng):
+        pf = demo_portfolio(3)
+        perm = [2, 0, 1]
+        pf2 = ProviderPortfolio(tuple(pf.providers[i] for i in perm))
+        P_pub = rng.uniform(0.01, 20.0, (10, 2))
+        down = rng.uniform(0.01, 0.5, (10, 2))
+        sink = np.array([False, True])
+        mem = np.array([1024.0, 2048.0])
+        s1 = pf.np_selection_costs(P_pub, mem, down, sink)
+        s2 = pf2.np_selection_costs(P_pub, mem, down, sink)
+        # same minimum price and the same *provider* behind the argmin
+        np.testing.assert_array_equal(pf.min_cost(s1), pf2.min_cost(s2))
+        np.testing.assert_array_equal(np.asarray(perm)[pf2.select(s2)],
+                                      pf.select(s1))
+
+    def test_egress_billed_at_sinks_only(self):
+        p = Provider("x", egress_usd_per_gb=0.1)
+        pf = ProviderPortfolio((p,))
+        P_pub = np.full((3, 2), 0.05)
+        down = np.full((3, 2), 2.0)
+        sink = np.array([False, True])
+        H = pf.np_stage_costs(P_pub, np.full(2, 1024.0), down, sink)
+        base = LAMBDA_COST.np_cost(P_pub * 1e3, 1024.0)
+        np.testing.assert_allclose(H[0, :, 0], base[:, 0])
+        np.testing.assert_allclose(
+            H[0, :, 1], base[:, 1] + 0.1 * 2.0 * EGRESS_GB_PER_S)
+
+
+# -- engine parity + eviction target --------------------------------------
+
+PF3 = demo_portfolio(3)
+PF4 = demo_portfolio(4)  # adds the mem-capped edge provider
+
+
+def test_single_provider_portfolio_bit_exact():
+    """ProviderPortfolio.from_cost_model(LAMBDA_COST) is byte-identical to
+    the scalar path on both engines (the refactor's safety rail)."""
+    pf = ProviderPortfolio.from_cost_model(LAMBDA_COST)
+    for dag in APPS.values():
+        pred, act = workload(dag, J, 0)
+        kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"))
+        for engine in ("des", "vector"):
+            a = simulate_scenarios(dag, pred, act, **kw, engine=engine)
+            b = simulate_scenarios(dag, pred, act, **kw, engine=engine,
+                                   portfolio=pf)
+            for fld in FIELDS + ("provider",):
+                av = np.nan_to_num(np.asarray(getattr(a, fld), float), nan=-1)
+                bv = np.nan_to_num(np.asarray(getattr(b, fld), float), nan=-1)
+                np.testing.assert_array_equal(av, bv, err_msg=fld)
+
+
+@pytest.mark.parametrize("pf", [PF3, PF4], ids=["3prov", "4prov-memcap"])
+@pytest.mark.parametrize("dag", [APPS["video"], APPS["image"]],
+                         ids=lambda d: d.name)
+def test_multi_provider_engine_matches_des(dag, pf):
+    pred, act = workload(dag, J, 1)
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"),
+              portfolio=pf)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+    np.testing.assert_array_equal(v.provider, d.provider)
+
+
+def test_acd_eviction_picks_provider_by_cost():
+    """>= 2 providers actually win stages in one schedule, and every
+    placement is the argmin of the predicted selection cost."""
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 0)
+    c_tight = grid_for(dag, pred, (0.3,))[0]
+    res = simulate(dag, pred, act, c_max=c_tight, order="spt", portfolio=PF3)
+    used = np.unique(res.provider[res.provider >= 0])
+    assert len(used) >= 2, f"expected >=2 providers in play, got {used}"
+    sel = PF3.np_selection_costs(pred["P_public"], dag.mem_mb,
+                                 pred["download"], dag.is_sink)
+    expect = PF3.select(sel)
+    np.testing.assert_array_equal(res.provider[res.provider >= 0],
+                                  expect[res.provider >= 0])
+    # and the portfolio is strictly cheaper than forcing provider 0 alone
+    solo = ProviderPortfolio((PF3.providers[0],))
+    res0 = simulate(dag, pred, act, c_max=c_tight, order="spt", portfolio=solo)
+    assert res.cost_usd < res0.cost_usd
+
+
+def test_pinned_stage_needs_no_feasible_provider():
+    """A must_private stage never offloads, so it must not trip the
+    no-feasible-provider guard even when no provider could host it —
+    and its (hypothetical) price keeps the HCF keys finite."""
+    from repro.core import AppDAG, Stage
+    dag = AppDAG("pinned_big",
+                 (Stage("a", 2, mem_mb=1024.0),
+                  Stage("b", 2, mem_mb=4096.0, must_private=True),
+                  Stage("c", 2, mem_mb=1024.0)),
+                 ((0, 1), (1, 2)))
+    pf = ProviderPortfolio((
+        Provider("small", max_mem_mb=2048.0),
+        Provider("small2", quantum_ms=1000.0, max_mem_mb=2048.0),
+    ))
+    pred, act = workload(dag, J, 4)
+    kw = dict(c_max_grid=grid_for(dag, pred, (0.3, 0.8)),
+              orders=("spt", "hcf"), portfolio=pf)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+    assert (d.provider[:, :, 1] == -1).all()   # pinned stage stays private
+    assert np.isfinite(d.cost_usd).all()
+    # MILP accepts the same instance
+    m = solve_milp(dag, pred["P_private"][:4], pred["P_public"][:4],
+                   c_max=float(pred["P_private"][:4].sum()), portfolio=pf,
+                   time_limit_s=20)
+    assert m.feasible and (m.provider[:, 1] == -1).all()
+    # an *offloadable* uncovered stage still raises
+    with pytest.raises(ValueError, match="no feasible provider"):
+        simulate(APPS["video"], *workload(APPS["video"], 4, 0), c_max=1.0,
+                 portfolio=ProviderPortfolio(
+                     (Provider("small", max_mem_mb=2048.0),)))
+
+
+def test_memory_capped_provider_never_hosts_big_stage():
+    dag = APPS["video"]  # stage DO needs 3008 MB; "edge" caps at 2048
+    pred, act = workload(dag, J, 2)
+    res = simulate(dag, pred, act, c_max=grid_for(dag, pred, (0.3,))[0],
+                   order="spt", portfolio=PF4)
+    big = np.flatnonzero(dag.mem_mb > 2048.0)
+    assert (res.provider[:, big] != 3).all()
+
+
+def test_milp_lower_bounds_greedy_portfolio(rng):
+    from repro.core import matrix_app
+    dag = matrix_app(replicas=2)
+    Jm = 6
+    P_priv = rng.uniform(1.0, 4.0, (Jm, 2))
+    P_pub = P_priv * rng.uniform(0.4, 0.8, (Jm, 2))
+    U = np.full_like(P_priv, 0.1)
+    D = np.full_like(P_priv, 0.1)
+    c_max = float(P_priv.sum() / 6.0)
+    m = solve_milp(dag, P_priv, P_pub, c_max, U, D, time_limit_s=30,
+                   portfolio=PF3)
+    assert m.feasible
+    assert set(np.unique(m.provider)) <= {-1, 0, 1, 2}
+    pred = dict(P_private=P_priv, P_public=P_pub, upload=U, download=D)
+    for order in ("spt", "hcf"):
+        g = simulate(dag, pred, c_max=c_max, order=order, portfolio=PF3)
+        assert m.cost_usd <= g.cost_usd + 1e-9
+        assert g.met_deadline
+
+
+def test_as_portfolio_normalization():
+    pf = as_portfolio(None, LAMBDA_COST)
+    assert pf.num_providers == 1
+    assert pf.providers[0].quantum_ms == LAMBDA_COST.quantum_ms
+    assert as_portfolio(PF3, LAMBDA_COST) is PF3

@@ -5,8 +5,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (LAMBDA_COST, init_offload, johnson_makespan,
-                        lambda_cost, matrix_app, simulate)
+from repro.core import (LAMBDA_COST, Provider, ProviderPortfolio,
+                        init_offload, johnson_makespan, lambda_cost,
+                        matrix_app, simulate)
+from repro.core.cost import USD_PER_GB_MS
 from repro.training.optimizer import (dequantize_q8, dequantize_q8_log,
                                       quantize_q8, quantize_q8_log)
 import jax.numpy as jnp
@@ -28,6 +30,73 @@ class TestCostProperties:
     def test_cost_monotone(self, t1, dt):
         assert float(LAMBDA_COST.np_cost(t1 + dt, 1024.0)) >= float(
             LAMBDA_COST.np_cost(t1, 1024.0)) - 1e-15
+
+    @given(t=st.floats(min_value=-100.0, max_value=0.0),
+           m=st.sampled_from([128.0, 1024.0, 3008.0]))
+    def test_min_quantums_floor(self, t, m):
+        """Zero/negative draws bill exactly one quantum, never $0."""
+        one = 100.0 * (m / 1024.0) * USD_PER_GB_MS
+        assert float(LAMBDA_COST.np_cost(t, m)) == pytest.approx(one)
+
+
+_provider = st.builds(
+    Provider,
+    name=st.just("p"),
+    quantum_ms=st.sampled_from([1.0, 50.0, 100.0, 1000.0]),
+    usd_per_gb_ms=st.floats(min_value=0.2, max_value=3.0).map(
+        lambda f: f * USD_PER_GB_MS),
+    egress_usd_per_gb=st.floats(min_value=0.0, max_value=0.2),
+    latency_mult=st.floats(min_value=0.5, max_value=2.0),
+)
+
+
+class TestPortfolioProperties:
+    @given(p=_provider,
+           t=st.floats(min_value=0.01, max_value=1e4),
+           dt=st.floats(min_value=0.0, max_value=1e4),
+           m=st.sampled_from([512.0, 1024.0, 3008.0]))
+    @settings(max_examples=60, deadline=None)
+    def test_cost_monotone_in_time_mem_rate_per_provider(self, p, t, dt, m):
+        pf = ProviderPortfolio((p,))
+        mem = np.array([m])
+        h = pf.np_stage_costs(np.array([[t]]), mem)[0, 0, 0]
+        assert pf.np_stage_costs(np.array([[t + dt]]), mem)[0, 0, 0] \
+            >= h - 1e-15
+        assert pf.np_stage_costs(np.array([[t]]), mem * 2)[0, 0, 0] \
+            >= h - 1e-15
+        p2 = Provider(p.name, p.quantum_ms, p.usd_per_gb_ms * 1.5,
+                      p.egress_usd_per_gb, p.latency_mult)
+        assert ProviderPortfolio((p2,)).np_stage_costs(
+            np.array([[t]]), mem)[0, 0, 0] >= h - 1e-15
+
+    @given(ps=st.lists(_provider, min_size=2, max_size=5),
+           seed=st.integers(min_value=0, max_value=10**6))
+    @settings(max_examples=40, deadline=None)
+    def test_argmin_invariant_under_provider_permutation(self, ps, seed):
+        r = np.random.default_rng(seed)
+        pf = ProviderPortfolio(tuple(ps))
+        perm = r.permutation(len(ps))
+        pf2 = ProviderPortfolio(tuple(ps[i] for i in perm))
+        P_pub = r.uniform(0.01, 30.0, (6, 2))
+        down = r.uniform(0.0, 1.0, (6, 2))
+        sink = np.array([False, True])
+        mem = np.array([512.0, 2048.0])
+        s1 = pf.np_selection_costs(P_pub, mem, down, sink)
+        s2 = pf2.np_selection_costs(P_pub, mem, down, sink)
+        np.testing.assert_array_equal(pf.min_cost(s1), pf2.min_cost(s2))
+        # the winning *provider object* is price-equivalent either way
+        c1 = np.take_along_axis(s1, pf.select(s1)[None], 0)[0]
+        c2 = np.take_along_axis(s2, pf2.select(s2)[None], 0)[0]
+        np.testing.assert_array_equal(c1, c2)
+
+    @given(t_s=st.floats(min_value=1e-6, max_value=1e3),
+           m=st.sampled_from([128.0, 1024.0, 3008.0]))
+    @settings(max_examples=60, deadline=None)
+    def test_single_provider_equals_lambda_cost_bit_exact(self, t_s, m):
+        """Same seconds-domain input -> byte-identical USD on both paths."""
+        pf = ProviderPortfolio.from_cost_model(LAMBDA_COST)
+        h = pf.np_stage_costs(np.array([[t_s]]), np.array([m]))[0, 0, 0]
+        assert h == float(LAMBDA_COST.np_cost(t_s * 1e3, m))
 
 
 class TestInitOffloadProperties:
