@@ -16,6 +16,14 @@ engines — the frozen seed DES predates the portfolio and sits that one
 out. The smoke run always includes a 3-provider point so CI tracks
 multi-provider throughput alongside the scalar engines.
 
+``--arrivals SPEC`` (e.g. ``poisson:4.0``, ``mmpp:1,10:10,2``; see
+``repro.core.arrivals.parse_arrivals``) adds an online-arrival point:
+the same Fig.-4 sweep with jobs released by an exogenous stream instead
+of a batch at t0, on the des/vector engines (the frozen seed DES is
+batch-only). Stochastic streams are re-seeded per application so the
+apps see distinct traces; the des/vector agreement assertion covers the
+arrival path too. CI's smoke run passes ``--arrivals poisson:4.0``.
+
 Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
 absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
 the seed baseline at each job count. ``--smoke`` runs a tiny instance and
@@ -78,11 +86,14 @@ def fig4_workload(J: int, jitter: float = 0.05):
 
 
 def run_serial(tasks, sim_fn, portfolio=None):
-    kw = {} if portfolio is None else {"portfolio": portfolio}
+    base = {} if portfolio is None else {"portfolio": portfolio}
     t0 = time.perf_counter()
     chk = 0.0
     n = 0
     for task in tasks:
+        kw = dict(base)
+        if task.get("arrivals") is not None:
+            kw["arrivals"] = task["arrivals"]
         for order in task["orders"]:
             for c in task["c_max_grid"]:
                 r = sim_fn(task["dag"], task["pred"], task["act"],
@@ -93,8 +104,8 @@ def run_serial(tasks, sim_fn, portfolio=None):
 
 
 def run_vector(tasks, warm: bool = True, portfolio=None):
-    calls = [{k: t[k] for k in ("dag", "pred", "act", "c_max_grid", "orders")}
-             for t in tasks]
+    keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals")
+    calls = [{k: t[k] for k in keys if t.get(k) is not None} for t in tasks]
     if warm:  # compile outside the timed region
         sweep_scenarios(calls, portfolio=portfolio)
     t0 = time.perf_counter()
@@ -104,20 +115,43 @@ def run_vector(tasks, warm: bool = True, portfolio=None):
     return dt, chk, sum(o.num_scenarios for o in outs)
 
 
-def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None):
+def attach_arrivals(tasks, spec: str):
+    """Resolve ``spec`` to one release-time vector per task, re-seeding
+    stochastic processes per application so traces are distinct."""
+    import dataclasses
+
+    from repro.core.arrivals import parse_arrivals, resolve_release
+
+    proc = parse_arrivals(spec)
+    J = tasks[0]["pred"]["P_private"].shape[0]
+    for ai, t in enumerate(tasks):
+        p = dataclasses.replace(proc, seed=proc.seed + ai) \
+            if hasattr(proc, "seed") else proc
+        t["arrivals"] = resolve_release(p, J)
+    return tasks
+
+
+def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
+                  arrivals=None):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
             t["c_max_grid"] = t["c_max_grid"][:deadlines]
+    if arrivals is not None:
+        tasks = attach_arrivals(tasks, arrivals)
     point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
              "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
     if portfolio is not None:
         point["providers"] = portfolio.num_providers
+    if arrivals is not None:
+        point["arrivals"] = arrivals
     checks = {}
     for eng in engines:
         if eng == "seed":
             if portfolio is not None:
                 raise ValueError("the frozen seed DES has no portfolio")
+            if arrivals is not None:
+                raise ValueError("the frozen seed DES is batch-only")
             dt, chk, n = run_serial(tasks, simulate_seed)
         elif eng == "des":
             dt, chk, n = run_serial(tasks, simulate, portfolio=portfolio)
@@ -155,6 +189,9 @@ def main(argv=None):
     ap.add_argument("--providers", type=int, default=3, metavar="N",
                     help="provider count for the multi-provider point "
                          "(demo_portfolio(N); des/vector engines)")
+    ap.add_argument("--arrivals", default=None, metavar="SPEC",
+                    help="add an online-arrival point with this stream "
+                         "(e.g. poisson:4.0; des/vector engines)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
@@ -175,6 +212,12 @@ def main(argv=None):
               "des+vector")
         report["points"].append(
             measure_point(64, ("des", "vector"), portfolio=pf))
+        if args.arrivals:
+            print(f"smoke: J=64, online arrivals ({args.arrivals}), "
+                  "des+vector")
+            report["points"].append(
+                measure_point(64, ("des", "vector"),
+                              arrivals=args.arrivals))
     else:
         print("sweep 3 apps x 2 orders x 5 deadlines:")
         report["points"].append(
@@ -183,6 +226,12 @@ def main(argv=None):
               "des/vector only):")
         report["points"].append(
             measure_point(512, ("des", "vector"), portfolio=pf))
+        if args.arrivals:
+            print(f"online-arrival sweep ({args.arrivals}, "
+                  "des/vector only):")
+            report["points"].append(
+                measure_point(512, ("des", "vector"),
+                              arrivals=args.arrivals))
         # large-J: seed is O(J^2 log J); one deadline keeps it bounded
         print("large-J point (1 deadline per app/order):")
         report["points"].append(

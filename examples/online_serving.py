@@ -1,0 +1,67 @@
+"""Online serving demo: cost vs SLA attainment under continuous traffic.
+
+The paper's Fig. 4 compares scheduling policies on a *batch* released at
+t0. This demo replays the same comparison in the online regime the
+ROADMAP targets: LLM inference requests arrive as a bursty MMPP stream,
+each carrying a relative SLA, and the rolling-horizon controller
+(re-plan every Δ, in-flight work pinned) schedules them across the
+reserved pod and costed elastic overflow.
+
+Three policies over the identical stream:
+
+* private-only — requests queue on the pod; $0, but bursts blow the SLA;
+* public-only  — every request to elastic capacity; best latency, max $;
+* hybrid       — Alg. 1 with per-request deadlines: the ACD sweep evicts
+  exactly the requests whose queue delay endangers their SLA.
+
+    PYTHONPATH=src python examples/online_serving.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.arrivals import MMPPArrivals
+from repro.serving import HybridServingScheduler, elastic_portfolio
+
+
+def main():
+    print("== Skedulix online serving: llama3-8b pod + elastic overflow ==")
+    cfg = get_config("llama3-8b")
+    sched = HybridServingScheduler(cfg, portfolio=elastic_portfolio(3))
+
+    rng = np.random.default_rng(0)
+    J = 96
+    prompt_len = rng.integers(128, 4096, J)
+    new_tokens = rng.integers(32, 384, J)
+    # bursty traffic: a calm phase (~2 req/s) and a burst phase (~24 req/s)
+    arrivals = MMPPArrivals(rates=(2.0, 24.0), dwell=(6.0, 3.0), seed=11)
+    sla_s = 2.5          # per-request relative deadline
+    replan_s = 0.25      # rolling-horizon replan interval
+
+    print(f"{J} requests, MMPP({arrivals.rates[0]:g}/s calm, "
+          f"{arrivals.rates[1]:g}/s burst), SLA {sla_s:g}s, "
+          f"re-plan every {replan_s:g}s\n")
+    header = (f"{'policy':>12} {'SLA attain':>10} {'cost $':>9} "
+              f"{'$/1k req':>9} {'p95 lat s':>9} {'offload %':>9}")
+    print(header)
+    print("-" * len(header))
+    for mode in ("private", "public", "hybrid"):
+        rep = sched.serve_online(prompt_len, new_tokens, arrivals,
+                                 sla_s=sla_s, replan_every_s=replan_s,
+                                 use_ridge=False, engine="vector",
+                                 mode=mode)
+        s = rep.summary()
+        print(f"{mode:>12} {s['sla_attainment']:10.3f} "
+              f"{s['cost_usd']:9.5f} {s['cost_per_1k_req_usd']:9.4f} "
+              f"{s['p95_latency_s']:9.3f} {100 * s['offload_frac']:9.1f}")
+    print("\nhybrid keeps (nearly) public-level SLA attainment at a "
+          "fraction of public-only cost: the ACD evicts only the "
+          "requests whose queue delay endangers their own deadline.")
+
+
+if __name__ == "__main__":
+    main()

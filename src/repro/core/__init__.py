@@ -1,6 +1,49 @@
-# The paper's primary contribution: hybrid-capacity cost/deadline scheduling
-# of DAG batch workloads (Skedulix, Alg. 1) — vectorized JAX math + a
-# discrete-event hybrid platform, with exact MILP reference solvers.
+"""Skedulix core: cost/deadline scheduling of DAG workloads on a hybrid cloud.
+
+Reproduces the paper's primary contribution — greedy scheduling (Alg. 1)
+of multi-stage serverless applications across a fixed-capacity private
+cloud and pay-per-use public clouds, minimizing public-cloud cost subject
+to a deadline — and grows it toward continuous serving.
+
+Layout (one module per concern):
+
+``dag``
+    :class:`AppDAG`/:class:`Stage` — the application model (Sec. II-A):
+    stages with private replica counts and memory configs, precedence
+    edges, cached structure queries. ``APPS`` holds the paper's three
+    canonical applications.
+``cost``
+    Public-cloud billing (Eqn. 1): scalar :class:`CostModel` and the
+    multi-provider :class:`ProviderPortfolio` (per-provider quantum, rate,
+    egress, latency multiplier, memory cap; cheapest-feasible placement).
+``arrivals``
+    Exogenous release streams (:class:`PoissonArrivals`,
+    :class:`MMPPArrivals`, :class:`TraceArrivals`) generalizing the
+    paper's batch-at-``t0`` to continuous serving.
+``greedy``
+    The vectorized Alg.-1 math: capacity-prefix initialization offload,
+    ACD sweeps, provider selection — numpy and jit twins.
+``priority``
+    SPT / HCF priority orders (Sec. III-C).
+``perfmodel``
+    Ridge latency/size models fitted on execution traces (Sec. IV).
+``simulator``
+    ``engine="des"``: the discrete-event reference of the hybrid
+    platform + Alg. 1 event loop (:func:`simulate`).
+``vectorsim``
+    ``engine="vector"``: the batched jit twin — whole scenario grids per
+    device call (:func:`simulate_scenarios`, :func:`sweep_scenarios`),
+    exactly equivalent to the DES on tie-free workloads.
+``milp``
+    Provider-indexed MILP reference bound (:func:`solve_milp`) and
+    combinatorial lower bounds.
+``scheduler``
+    :class:`SkedulixScheduler` — the user-facing service tying
+    predictions, scheduling and execution together.
+"""
+from .arrivals import (ArrivalProcess, BatchArrivals, MMPPArrivals,
+                       PoissonArrivals, TraceArrivals, parse_arrivals,
+                       resolve_release)
 from .cost import (CostModel, LAMBDA_COST, Provider, ProviderPortfolio,
                    as_portfolio, demo_portfolio, lambda_cost, stage_costs)
 from .dag import APPS, AppDAG, Stage, image_app, matrix_app, video_app
@@ -20,6 +63,8 @@ __all__ = [
     "AppDAG", "Stage", "APPS", "matrix_app", "video_app", "image_app",
     "CostModel", "LAMBDA_COST", "lambda_cost", "stage_costs",
     "Provider", "ProviderPortfolio", "as_portfolio", "demo_portfolio",
+    "ArrivalProcess", "BatchArrivals", "TraceArrivals", "PoissonArrivals",
+    "MMPPArrivals", "parse_arrivals", "resolve_release",
     "init_offload", "init_offload_jax", "acd_sweep", "acd_sweep_jax",
     "offload_negative_acd", "select_provider", "select_provider_jax", "t_max",
     "MilpResult", "solve_milp", "johnson_makespan", "knapsack_lower_bound",

@@ -101,6 +101,9 @@ def stage_costs(P_public_s: np.ndarray, mem_mb: np.ndarray,
 class Provider:
     """One public provider's billing + latency profile.
 
+    ``quantum_ms``/``usd_per_gb_ms``/``min_quantums`` are the provider's
+    Eqn.-1 execution billing (duration rounded up to the quantum, at
+    least ``min_quantums`` of it, times memory times rate);
     ``latency_mult`` scales the public execution *and* transfer draws (and
     the billed runtime with them); ``egress_usd_per_gb`` prices results
     leaving the provider (charged at public sinks); ``max_mem_mb`` caps the

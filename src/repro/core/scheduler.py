@@ -3,11 +3,14 @@
 Ties together: perf models (predictions) -> Alg. 1 greedy scheduling ->
 hybrid execution (discrete-event sim standing in for the live platform).
 
-Two execution engines back the service: ``schedule_batch`` accepts
-``engine="des"`` (the event-heap reference) or ``engine="vector"`` (the
-batched jit engine in :mod:`.vectorsim`); ``schedule_sweep`` evaluates a
-whole (order x C_max) scenario grid in one batched call — the unit of work
-behind every deadline-sweep figure.
+Two execution engines back the service: :meth:`SkedulixScheduler.schedule`
+accepts ``engine="des"`` (the event-heap reference) or ``engine="vector"``
+(the batched jit engine in :mod:`.vectorsim`);
+:meth:`SkedulixScheduler.schedule_sweep` evaluates a whole (order x C_max)
+scenario grid in one batched call — the unit of work behind every
+deadline-sweep figure. Both accept ``arrivals=`` to schedule an exogenous
+release stream (:mod:`.arrivals`) instead of the paper's batch at ``t0``;
+deadlines then become per-job relative SLAs (``release + C_max``).
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from .arrivals import ArrivalsLike
 from .cost import CostModel, LAMBDA_COST, ProviderPortfolio
 from .dag import AppDAG
 from .perfmodel import AppPerfModel
@@ -25,18 +29,27 @@ from .vectorsim import VectorSimResult, simulate_scenarios
 
 @dataclasses.dataclass
 class BatchReport:
+    """One scheduled batch: the executed :class:`SimResult` plus the
+    inputs that produced it (predictions, priority order, deadline)."""
+
     result: SimResult
     pred: Dict[str, np.ndarray]
     order: str
     c_max: float
 
     def summary(self) -> Dict[str, float]:
+        """Flat metric dict: makespan, cost, deadline/SLA attainment,
+        offload counters, and per-provider placement counts (portfolio
+        runs). ``sla_attainment`` is the fraction of jobs finishing
+        within ``c_max`` of their release (= ``met_deadline`` for a
+        batch with every release at ``t0``)."""
         r = self.result
         out = {
             "makespan_s": r.makespan,
             "c_max": self.c_max,
             "cost_usd": r.cost_usd,
             "met_deadline": float(r.met_deadline),
+            "sla_attainment": r.sla_attainment(),
             "offload_frac": r.offload_fraction,
             "n_offloaded_stages": float(r.n_offloaded_stages),
             "n_init_offloaded_jobs": float(r.n_init_offloaded_jobs),
@@ -55,8 +68,12 @@ class SkedulixScheduler:
     """Long-running scheduler service for one application.
 
     ``perf_model`` provides P^private / P^public / transfer predictions;
-    ``schedule_batch`` runs Alg. 1 with the chosen priority order against
-    actual latencies (if given) to produce the executed schedule.
+    :meth:`schedule` runs Alg. 1 with the chosen priority order against
+    actual latencies (if given) to produce the executed schedule —
+    for the paper's batch released at ``t0``, or, with ``arrivals=``, for
+    an exogenous release stream. ``portfolio`` generalizes the public
+    cloud to N providers: every offloaded (job, stage) runs on the
+    cheapest feasible one.
     """
 
     def __init__(self, dag: AppDAG, perf_model: Optional[AppPerfModel] = None,
@@ -69,25 +86,42 @@ class SkedulixScheduler:
         self.portfolio = portfolio
 
     def predict(self, base_features: np.ndarray) -> Dict[str, np.ndarray]:
+        """Per-stage latency/transfer predictions from the attached
+        perf model (:class:`.perfmodel.AppPerfModel`)."""
         if self.perf_model is None:
             raise ValueError("no perf model attached")
         return self.perf_model.predict(base_features)
 
-    def schedule_batch(
+    def schedule(
         self,
         c_max: float,
         base_features: Optional[np.ndarray] = None,
         pred: Optional[Dict[str, np.ndarray]] = None,
         act: Optional[Dict[str, np.ndarray]] = None,
         order: str = "spt",
+        arrivals: ArrivalsLike = None,
         **sim_kwargs,
     ) -> BatchReport:
+        """Schedule one workload at one (order, C_max) point.
+
+        ``pred`` (or ``base_features`` through the perf model) drives the
+        decisions; ``act`` drives the clock. ``arrivals`` switches from
+        the batch-at-``t0`` regime to an exogenous release stream — an
+        :class:`.arrivals.ArrivalProcess`, a spec string like
+        ``"poisson:4.0"``, or an explicit ``[J]`` release-time vector;
+        each job then has its own deadline ``release + c_max``. Extra
+        keyword arguments (``engine=``, ``t0=``, flags) forward to
+        :func:`.simulator.simulate`.
+        """
         if pred is None:
             pred = self.predict(base_features)
         res = simulate(self.dag, pred, act, c_max=c_max, order=order,
                        cost_model=self.cost_model, portfolio=self.portfolio,
-                       **sim_kwargs)
+                       arrivals=arrivals, **sim_kwargs)
         return BatchReport(result=res, pred=pred, order=order, c_max=c_max)
+
+    # the pre-arrivals name; `schedule` is the same method
+    schedule_batch = schedule
 
     def schedule_sweep(
         self,
@@ -97,6 +131,7 @@ class SkedulixScheduler:
         act: Optional[Dict[str, np.ndarray]] = None,
         orders: Sequence[str] = ("spt",),
         engine: str = "vector",
+        arrivals: ArrivalsLike = None,
         **sim_kwargs,
     ) -> VectorSimResult:
         """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
@@ -104,20 +139,28 @@ class SkedulixScheduler:
         One batched engine call with ``engine="vector"`` (a Fig.-4-style
         deadline sweep is a single dispatch); ``engine="des"`` replays the
         grid serially through the reference simulator for parity checks.
+        ``arrivals`` applies one exogenous release stream across every
+        scenario of the grid (per-job deadlines ``release + c_max``).
         """
         if pred is None:
             pred = self.predict(base_features)
         return simulate_scenarios(
             self.dag, pred, act, c_max_grid=c_max_grid, orders=orders,
             cost_model=self.cost_model, portfolio=self.portfolio,
-            engine=engine, **sim_kwargs)
+            engine=engine, arrivals=arrivals, **sim_kwargs)
 
-    def baseline_all_public(self, pred, act=None) -> SimResult:
+    def baseline_all_public(self, pred, act=None,
+                            arrivals: ArrivalsLike = None) -> SimResult:
+        """Everything offloaded on release (paper Sec. V-C baseline)."""
         return simulate_all_public(self.dag, pred, act,
                                    cost_model=self.cost_model,
-                                   portfolio=self.portfolio)
+                                   portfolio=self.portfolio,
+                                   arrivals=arrivals)
 
-    def baseline_all_private(self, pred, act=None, order="spt") -> SimResult:
+    def baseline_all_private(self, pred, act=None, order="spt",
+                             arrivals: ArrivalsLike = None) -> SimResult:
+        """Nothing offloaded: C_max loose enough that all jobs fit."""
         return simulate_all_private(self.dag, pred, act, order=order,
                                     cost_model=self.cost_model,
-                                    portfolio=self.portfolio)
+                                    portfolio=self.portfolio,
+                                    arrivals=arrivals)

@@ -11,6 +11,15 @@ Semantics of one ACD sweep follow Alg. 1 lines 14-20 with the dispatched
 jobs removed as the loop progresses (offloading a job frees queue capacity
 for those behind it): a sequential kept-prefix scan.
 
+Workloads are either the paper's batch (every job released at ``t0``) or
+an exogenous arrival stream (:mod:`.arrivals`): ``simulate(arrivals=...)``
+injects per-job release times as heap events. Each release epoch enqueues
+the arriving jobs at their source stages (or sends them straight public if
+the initialization phase marked them) and re-runs the ACD sweep; deadlines
+are per-job, ``release[j] + C_max``, which degenerates to the single batch
+deadline ``t0 + C_max`` when every release is ``t0`` — the batch path is
+bit-exact pre/post this generalization (``tests/test_arrivals.py``).
+
 The public cloud is a provider *portfolio* (:mod:`.cost`): each offloaded
 (job, stage) runs on its cheapest feasible provider — a static argmin of
 predicted billed cost, precomputed in the constructor — so the event loop
@@ -43,6 +52,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .arrivals import ArrivalsLike, resolve_release
 from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
 from .dag import AppDAG
 from .greedy import init_offload, t_max
@@ -56,6 +66,14 @@ PRIVATE = -1
 
 @dataclasses.dataclass
 class SimResult:
+    """One executed schedule: times, placement, and billed cost.
+
+    ``deadline`` is the *relative* deadline C_max; for batch runs the
+    absolute deadline is ``t0 + C_max``, under an arrival stream each job
+    has its own, ``release[j] + C_max``. ``release`` records the stream
+    (``None`` for the batch path, where every release is ``t0``).
+    """
+
     makespan: float
     cost_usd: float
     public_mask: np.ndarray      # [J, M] bool: ran in the public cloud
@@ -67,6 +85,7 @@ class SimResult:
     per_stage_offloads: np.ndarray  # [M]
     deadline: float
     provider: Optional[np.ndarray] = None  # [J, M] int: -1 private, else index
+    release: Optional[np.ndarray] = None   # [J] job release times (None=batch)
 
     @property
     def offload_fraction(self) -> float:
@@ -76,6 +95,28 @@ class SimResult:
     def met_deadline(self) -> bool:
         return bool(self.makespan <= self.deadline + 1e-9)
 
+    @property
+    def flow_time(self) -> np.ndarray:
+        """[J] per-job latency: completion minus release (release=t0 batch)."""
+        if self.release is None:
+            if not self.completion.size:
+                return self.completion
+            t0 = float(self.completion.max()) - self.makespan
+            return self.completion - t0
+        return self.completion - self.release
+
+    def sla_attainment(self, sla_s: Optional[float] = None) -> float:
+        """Fraction of jobs finishing within ``sla_s`` of their release.
+
+        Defaults to the schedule's own relative deadline C_max. For batch
+        runs every release is the common ``t0``, so this is the fraction of
+        jobs completing by the batch deadline.
+        """
+        if not self.completion.size:
+            return 1.0
+        sla = self.deadline if sla_s is None else float(sla_s)
+        return float((self.flow_time <= sla + 1e-9).mean())
+
 
 class _Sim:
     def __init__(self, dag: AppDAG, pred: Dict[str, np.ndarray],
@@ -83,14 +124,23 @@ class _Sim:
                  cost_model: CostModel, include_transfers: bool,
                  init_phase: bool, adaptive: bool, t0: float,
                  replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
-                 portfolio: Optional[ProviderPortfolio] = None):
+                 portfolio: Optional[ProviderPortfolio] = None,
+                 release: Optional[np.ndarray] = None):
         self.dag = dag
         self.J, self.M = pred["P_private"].shape
         self.pred = pred
         self.act = act
         self.c_max = c_max
-        self.deadline = t0 + c_max
         self.t0 = t0
+        # per-job absolute deadlines: release + C_max (relative SLA). For a
+        # batch every release is t0, so deadline_j is the constant t0+C_max
+        # and the arithmetic below is bit-identical to the scalar-deadline
+        # code it replaced.
+        self.release = release
+        rel = np.full(self.J, t0) if release is None \
+            else np.asarray(release, dtype=np.float64)
+        self._rel = rel
+        self.deadline_j = rel + c_max
         self.order = order
         self.cost_model = cost_model
         self.portfolio = as_portfolio(portfolio, cost_model)
@@ -185,7 +235,8 @@ class _Sim:
             completion=self.completion, n_offloaded_stages=self.n_offloaded,
             n_init_offloaded_jobs=self.n_init_off,
             per_stage_offloads=self.per_stage_offloads, deadline=self.c_max,
-            provider=self.loc.astype(np.int64))
+            provider=self.loc.astype(np.int64),
+            release=None if self.release is None else self._rel.copy())
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
@@ -198,11 +249,38 @@ class _Sim:
         self.n_init_off = int(off.sum())
         pinned = self.dag.must_private_mask
         self.forced_public[off[:, None] & ~pinned[None, :]] = True
+        # the t0 batch keeps the seed's direct path (enqueue all, then one
+        # sweep per stage); later release epochs become heap events
+        at_t0 = self._rel <= self.t0
         for j in range(self.J):
-            for k in self.dag.source_ids:
-                self._stage_ready(self.t0, j, k)
+            if at_t0[j]:
+                for k in self.dag.source_ids:
+                    self._stage_ready(self.t0, j, k)
         for k in range(self.M):
             self._sweep_and_dispatch(self.t0, k)
+        later = np.flatnonzero(~at_t0)
+        if later.size:
+            times = self._rel[later]
+            for t_r in np.unique(times):
+                jobs = tuple(int(j) for j in later[times == t_r])
+                self._at(float(t_r), self._arrival_epoch, jobs)
+
+    def _arrival_epoch(self, t: float, jobs: Tuple[int, ...]):
+        """Release epoch: arriving jobs enqueue at their source stages (or
+        go straight public if the initialization phase marked them), then
+        the ACD sweep re-runs over each source queue. Jobs sharing a
+        release time enqueue together before any dispatch, mirroring the
+        t0 batch path. An arrival that goes straight public is not a queue
+        change and triggers no sweep — the same convention
+        :meth:`_propagate_done` uses for forced-public downstream stages
+        (and the one the vector engine's eligibility-filtered arrival
+        stream encodes)."""
+        for j in jobs:
+            for k in self.dag.source_ids:
+                self._stage_ready(t, j, k)
+        for k in self.dag.source_ids:
+            if any(not self.forced_public[j, k] for j in jobs):
+                self._sweep_and_dispatch(t, k)
 
     # -- readiness / queueing -------------------------------------------
     def _stage_ready(self, t: float, j: int, k: int):
@@ -223,12 +301,14 @@ class _Sim:
             I_k = self._repl[k]
             jobs = np.fromiter((jj for (_, jj) in q), dtype=np.int64, count=len(q))
             P = self.P_pred[jobs, k]
-            # slack_i = I_k * (D - t - path_rem_i); job i is offloaded iff the
-            # kept-prefix of P ahead of it exceeds slack_i (ACD < 0). The
-            # first violator under the *full* prefix equals the first under
-            # the kept-prefix (everything ahead of it is kept), so removing
+            # slack_i = I_k * (D_i - t - path_rem_i); job i is offloaded iff
+            # the kept-prefix of P ahead of it exceeds slack_i (ACD < 0).
+            # D_i is the job's own deadline (release_i + C_max; the common
+            # batch deadline when every release is t0). The first violator
+            # under the *full* prefix equals the first under the
+            # kept-prefix (everything ahead of it is kept), so removing
             # first violators one at a time reproduces the sequential scan.
-            slack = I_k * (self.deadline - t - self.path_rem[jobs, k])
+            slack = I_k * (self.deadline_j[jobs] - t - self.path_rem[jobs, k])
             while jobs.size:
                 prefix_excl = np.cumsum(P) - P
                 viol = np.flatnonzero(prefix_excl > slack)
@@ -343,6 +423,7 @@ def simulate(
     replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
     engine: str = "des",
     portfolio: Optional[ProviderPortfolio] = None,
+    arrivals: ArrivalsLike = None,
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
@@ -353,11 +434,15 @@ def simulate(
     jit-compiled batched engine in :mod:`.vectorsim`; no straggler
     injection). ``portfolio``: a :class:`ProviderPortfolio` — offloaded
     stages run on their cheapest feasible provider; defaults to a single
-    provider shaped like ``cost_model``.
+    provider shaped like ``cost_model``. ``arrivals``: an exogenous
+    release stream (:mod:`.arrivals` process, spec string, or explicit
+    [J] release times); ``None`` is the paper's batch at ``t0``. Under a
+    stream, deadlines are per-job ``release + c_max``.
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
     act = _with_transfer_defaults(act)
+    release = resolve_release(arrivals, pred["P_private"].shape[0], t0)
     if engine == "vector":
         if replica_slowdown:
             raise ValueError("engine='vector' does not support replica_slowdown")
@@ -366,36 +451,37 @@ def simulate(
             dag, pred, act, c_max_grid=(c_max,), orders=(order,),
             cost_model=cost_model, include_transfers=include_transfers,
             init_phase=init_phase, adaptive=adaptive, t0=t0,
-            portfolio=portfolio)
+            portfolio=portfolio, arrivals=release)
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")
     sim = _Sim(dag, pred, act, c_max, order, cost_model, include_transfers,
-               init_phase, adaptive, t0, replica_slowdown, portfolio)
+               init_phase, adaptive, t0, replica_slowdown, portfolio,
+               release=release)
     return sim.run()
 
 
 def simulate_all_public(dag, pred, act=None, cost_model=LAMBDA_COST,
                         include_transfers=True,
-                        portfolio: Optional[ProviderPortfolio] = None
-                        ) -> SimResult:
-    """Baseline: everything offloaded at t0 (capacity prefix = 0)."""
+                        portfolio: Optional[ProviderPortfolio] = None,
+                        arrivals: ArrivalsLike = None) -> SimResult:
+    """Baseline: everything offloaded on release (capacity prefix = 0)."""
     act = act if act is not None else pred
     pred2 = dict(pred)
     pred2["P_private"] = np.full_like(pred["P_private"], 1e12)  # nothing fits
     res = simulate(dag, pred2, act, c_max=0.0, order="spt",
                    cost_model=cost_model, include_transfers=include_transfers,
-                   adaptive=False, portfolio=portfolio)
+                   adaptive=False, portfolio=portfolio, arrivals=arrivals)
     return dataclasses.replace(res, deadline=res.makespan)
 
 
 def simulate_all_private(dag, pred, act=None, order: str = "spt",
                          cost_model=LAMBDA_COST,
-                         portfolio: Optional[ProviderPortfolio] = None
-                         ) -> SimResult:
+                         portfolio: Optional[ProviderPortfolio] = None,
+                         arrivals: ArrivalsLike = None) -> SimResult:
     """Baseline: C_max large enough that nothing offloads (Sec. V-C)."""
     act = act if act is not None else pred
     big = float(np.sum((act or pred)["P_private"])) + 1e6
     return simulate(dag, pred, act, c_max=big, order=order,
                     cost_model=cost_model, init_phase=True, adaptive=True,
-                    portfolio=portfolio)
+                    portfolio=portfolio, arrivals=arrivals)

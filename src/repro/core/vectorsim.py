@@ -49,6 +49,15 @@ devices (``XLA_FLAGS=--xla_force_host_platform_device_count=<cores>`` on
 CPU). Lockstep vmap iteration then amortizes the small applications
 inside the largest one's event budget.
 
+Exogenous arrivals are data too: the per-stage loop already consumes a
+general per-job arrival vector (feed-forward stages arrive whenever their
+predecessors finish), so an external release stream (:mod:`.arrivals`)
+simply replaces the constant ``t0`` at source stages — release times enter
+as one more ``[J]`` input, and per-job deadlines (``release + C_max``)
+replace the scalar deadline in the ACD. No new executables: the shape
+family stays (M_pad, I_max, J, P, flags), and a batch (all releases at
+``t0``) reproduces the pre-arrivals path bit-exactly.
+
 All arithmetic runs in float64 (via ``jax.experimental.enable_x64``) so
 keep/offload decisions agree bit-for-bit with the numpy DES; equivalence
 is exact for tie-free (continuous) latency draws, where the DES heap order
@@ -65,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from .arrivals import ArrivalsLike, resolve_release
 from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
 from .dag import AppDAG
 from .greedy import init_offload_jax, select_provider_jax
@@ -94,6 +104,7 @@ class VectorSimResult:
     orders: Tuple[str, ...]         # [S]
     c_max: np.ndarray               # [S]
     batch_idx: np.ndarray           # [S]
+    release: Optional[np.ndarray] = None  # [S, J] job release times (None=batch)
 
     @property
     def num_scenarios(self) -> int:
@@ -116,7 +127,8 @@ class VectorSimResult:
             n_init_offloaded_jobs=int(self.n_init_offloaded_jobs[s]),
             per_stage_offloads=self.per_stage_offloads[s],
             deadline=float(self.deadline[s]),
-            provider=self.provider[s])
+            provider=self.provider[s],
+            release=None if self.release is None else self.release[s])
 
 
 @functools.lru_cache(maxsize=None)
@@ -139,7 +151,9 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
                   pub_k, keys_k, deadline, t0):
         """Simulate stage k given per-job arrival times ``a`` [J].
 
-        Returns (start, end, locpub, evicted) for the stage, job coords.
+        ``deadline`` is the per-job absolute deadline [J] (release + C_max;
+        a constant vector for batch workloads). Returns (start, end,
+        locpub, evicted) for the stage, job coords.
         """
         # queue coordinates: stable sort by stage key, ties by job id
         perm = jnp.argsort(keys_k, stable=True)
@@ -149,6 +163,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         dur_q = dur_k[perm]
         a_q = a[perm]
         elig_q = elig[perm]
+        dl_q = deadline[perm]
         # arrival stream, time order; ineligible jobs never arrive.
         # arr_rank[p] = arrival index of queue position p, so the queue is
         # *derived* each iteration as (arr_rank < ap) & ~exited — arrivals
@@ -159,7 +174,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         arr_rank = jnp.argsort(arr_order, stable=True)
         n_arr = elig_q.sum()
         ap0 = (elig_q & (a_q <= t0)).sum()  # t0 batch (source stages)
-        slack_c = I_k * deadline  # hoisted constant of the ACD slack
+        slack_c = I_k * dl_q  # hoisted per-job term of the ACD slack
 
         def cond(c):
             t, ap, exited, svr, times, clean, it = c
@@ -195,7 +210,14 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
             advance = clean & ~done
             is_arr = advance & (t_arr <= td)
             t_new = jnp.where(advance, jnp.minimum(t_arr, td), t)
-            ap = ap + is_arr.astype(ap.dtype)
+            # admit every arrival tied at t_new in one step: an epoch's
+            # jobs enqueue together *before* the ACD sweep, matching the
+            # DES arrival-epoch semantics (rolling-horizon serving
+            # quantizes releases onto a replan grid, so tied groups are
+            # the norm there; for tie-free streams this is ap + 1). The
+            # +inf sentinel and ineligible-job entries never compare <=.
+            ap = jnp.where(is_arr, (arr_t <= t_new).sum().astype(ap.dtype),
+                           ap)
             q1 = (arr_rank < ap) & ~exited
             # ACD sweep step at t_new; a single priority-encoded argmax
             # yields the first violator if any, else the queue head
@@ -237,7 +259,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         return start, end, locpub, evicted
 
     def run_one(P_pred, act_priv, pub_p, up_p, down_p, cost_p, sel_p,
-                stage_keys, job_keys, deadline, capacity, t0,
+                stage_keys, job_keys, deadline, capacity, t0, release,
                 A, desc, sink, pinned, inert, I_vec):
         # per-stage critical-path remainder (reverse index order = reverse
         # topological order; edges go low -> high)
@@ -262,10 +284,12 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         cost_l: List[Optional[jax.Array]] = [None] * M
         neg = jnp.full(J, -jnp.inf)
         for k in range(M):
+            # source stages arrive at the job's release time (t0 for a
+            # batch); downstream stages whenever their predecessors finish
             a = neg
             for u in range(k):
                 a = jnp.maximum(a, jnp.where(A[u, k], end_l[u], -jnp.inf))
-            a = jnp.where(A[:k, k].any() if k else False, a, t0)
+            a = jnp.where(A[:k, k].any() if k else False, a, release)
             # forced public at entry: init offload + upstream eviction
             # cascades (constraint (12)); privacy-pinned stages never leave
             forced_k = off
@@ -354,7 +378,8 @@ class _Task:
     def __init__(self, dag: AppDAG, pred, act, c_max_grid, orders,
                  cost_model, t0, M_pad: int,
                  portfolio: Optional[ProviderPortfolio] = None,
-                 include_transfers: bool = True):
+                 include_transfers: bool = True,
+                 arrivals: ArrivalsLike = None):
         from .simulator import _with_transfer_defaults
 
         act = act if act is not None else pred
@@ -378,6 +403,11 @@ class _Task:
         self.c_max_out = np.array([c for (_, _, c) in self.grid])
         self.batch_out = np.array([b for (b, _, _) in self.grid])
         self.t0 = float(t0)
+        # exogenous release stream (None = batch at t0); per-job absolute
+        # deadlines are release + C_max, the batch deadline when no stream
+        self.release = resolve_release(arrivals, self.J, self.t0)
+        rel = (np.full(self.J, self.t0) if self.release is None
+               else self.release)
 
         # topological stage relabelling: edges go low -> high afterwards
         topo = list(dag.topo_order())
@@ -458,9 +488,10 @@ class _Task:
                 pad_cols(cost_p),
                 pad_cols(sel_p),
                 pad_cols(stage_keys), job_keys,
-                self.t0 + self.c_max_out,
+                rel[None, :] + self.c_max_out[:, None],
                 float(dag.replicas.sum()) * self.c_max_out,
                 np.full(S, self.t0),
+                np.broadcast_to(rel, (S, self.J)),
                 np.broadcast_to(A, (S,) + A.shape),
                 np.broadcast_to(desc, (S,) + desc.shape),
                 np.broadcast_to(sink, (S,) + sink.shape),
@@ -483,7 +514,9 @@ class _Task:
             per_stage_offloads=out["per_stage_offloads"][:, inv],
             provider=out["provider"][:, :, inv],
             deadline=self.c_max_out.copy(), orders=self.orders_out,
-            c_max=self.c_max_out, batch_idx=self.batch_out)
+            c_max=self.c_max_out, batch_idx=self.batch_out,
+            release=None if self.release is None
+            else np.broadcast_to(self.release, (self.S, self.J)).copy())
 
 
 def _run_task(task: _Task, I_max: int, include_transfers: bool,
@@ -533,6 +566,7 @@ def simulate_scenarios(
     t0: float = 0.0,
     engine: str = "vector",
     portfolio: Optional[ProviderPortfolio] = None,
+    arrivals: ArrivalsLike = None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
@@ -543,6 +577,8 @@ def simulate_scenarios(
     layout, used by the equivalence suite and benchmarks. ``portfolio``
     generalizes the public cloud to N providers (cheapest-feasible
     placement per offloaded stage); default is the scalar ``cost_model``.
+    ``arrivals`` injects an exogenous release stream (:mod:`.arrivals`),
+    shared by every scenario of the grid; ``None`` is the batch at ``t0``.
     """
     from .simulator import _with_transfer_defaults, simulate
 
@@ -555,6 +591,8 @@ def simulate_scenarios(
                 or [1])
         pred_d = _norm_batch(pred_d, B)
         act_d = _norm_batch(act_d, B)
+        J = pred_d["P_private"].shape[1]
+        release = resolve_release(arrivals, J, t0)
         grid = [(b, o, float(c)) for b in range(B) for o in orders
                 for c in c_max_grid]
         sims = [simulate(dag, {k: v[b] for k, v in pred_d.items()},
@@ -562,7 +600,7 @@ def simulate_scenarios(
                          c_max=c, order=o, cost_model=cost_model,
                          include_transfers=include_transfers,
                          init_phase=init_phase, adaptive=adaptive, t0=t0,
-                         portfolio=portfolio)
+                         portfolio=portfolio, arrivals=release)
                 for (b, o, c) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
@@ -579,12 +617,14 @@ def simulate_scenarios(
             deadline=np.array([r.deadline for r in sims]),
             orders=tuple(o for (_, o, _) in grid),
             c_max=np.array([c for (_, _, c) in grid]),
-            batch_idx=np.array([b for (b, _, _) in grid]))
+            batch_idx=np.array([b for (b, _, _) in grid]),
+            release=None if release is None
+            else np.broadcast_to(release, (len(grid), J)).copy())
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
     return sweep_scenarios(
         [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
-              orders=orders)],
+              orders=orders, arrivals=arrivals)],
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
         portfolio=portfolio)[0]
@@ -604,10 +644,12 @@ def sweep_scenarios(
     application — as one batched, device-parallel sweep.
 
     Each task is a dict with keys ``dag``, ``pred``, optional ``act``,
-    ``c_max_grid`` and ``orders``; results come back in task order. Tasks
-    with a common job count batch into a single engine call (stages padded
-    to the largest DAG; the scenario axis shards across host devices);
-    differing job counts fall back to one call per group.
+    ``c_max_grid``, ``orders`` and ``arrivals`` (an exogenous release
+    stream for that task's jobs; omitted = batch at ``t0``); results come
+    back in task order. Tasks with a common job count batch into a single
+    engine call (stages padded to the largest DAG; the scenario axis
+    shards across host devices); differing job counts fall back to one
+    call per group.
     """
     if engine == "des":
         return [simulate_scenarios(
@@ -615,7 +657,7 @@ def sweep_scenarios(
             t.get("c_max_grid", (60.0,)), t.get("orders", ("spt",)),
             cost_model=cost_model, include_transfers=include_transfers,
             init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des",
-            portfolio=portfolio)
+            portfolio=portfolio, arrivals=t.get("arrivals"))
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -631,7 +673,8 @@ def sweep_scenarios(
                      t.get("c_max_grid", (60.0,)),
                      t.get("orders", ("spt",)), cost_model, t0, M_pad,
                      portfolio=portfolio,
-                     include_transfers=bool(include_transfers))
+                     include_transfers=bool(include_transfers),
+                     arrivals=t.get("arrivals"))
                for t in tasks]
 
     # One engine call per task, each sharding its own scenario axis across
@@ -652,7 +695,9 @@ def sweep_scenarios(
                 per_stage_offloads=np.zeros((p.S, p.M), dtype=np.int64),
                 provider=np.full((p.S, 0, p.M), -1, dtype=np.int64),
                 deadline=p.c_max_out.copy(), orders=p.orders_out,
-                c_max=p.c_max_out, batch_idx=p.batch_out))
+                c_max=p.c_max_out, batch_idx=p.batch_out,
+                release=None if p.release is None
+                else np.zeros((p.S, 0))))
         else:
             results.append(_run_task(p, I_max, bool(include_transfers),
                                      bool(init_phase), bool(adaptive)))

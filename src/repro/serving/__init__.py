@@ -1,9 +1,11 @@
 # Serving: prefill/decode engine + the paper's hybrid scheduler applied to
-# LLM request batches (private pod replicas + costed elastic overflow).
+# LLM request batches and continuous request streams (private pod replicas
+# + costed elastic overflow; rolling-horizon online mode).
 from .engine import Completion, InferenceEngine, Request
-from .hybrid import (HybridServingScheduler, ServingLatencyModel,
-                     elastic_portfolio, plan_batch_jax, serving_dag)
+from .hybrid import (HybridServingScheduler, OnlineReport,
+                     ServingLatencyModel, elastic_portfolio, plan_batch_jax,
+                     serving_dag)
 
 __all__ = ["InferenceEngine", "Request", "Completion",
            "HybridServingScheduler", "ServingLatencyModel", "serving_dag",
-           "plan_batch_jax", "elastic_portfolio"]
+           "plan_batch_jax", "elastic_portfolio", "OnlineReport"]

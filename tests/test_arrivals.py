@@ -1,0 +1,367 @@
+"""Online arrival streams: engine equivalence, batch bit-exactness,
+process API, rolling-horizon serving, and scheduling-theory properties.
+
+The load-bearing guarantees (ISSUE 3 acceptance criteria):
+
+* DES == vector on tie-free exogenous arrival workloads, field for field;
+* a degenerate trace (every release at t0) is *bit-exact* against the
+  batch path on both engines — the arrivals generalization cannot move
+  a single float of the paper-reproduction results;
+* epoch-quantized (tied) arrival groups — the rolling-horizon serving
+  regime — also agree across engines: both admit an epoch's jobs
+  together before the ACD sweep re-runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import APPS, AppDAG, Stage, simulate
+from repro.core.arrivals import (BatchArrivals, MMPPArrivals,
+                                 PoissonArrivals, TraceArrivals,
+                                 parse_arrivals, resolve_release)
+from repro.core.vectorsim import simulate_scenarios
+from repro.serving.hybrid import serving_dag
+
+J = 17
+FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
+          "n_offloaded_stages", "n_init_offloaded_jobs",
+          "per_stage_offloads", "provider", "release")
+
+PINNED_DAG = AppDAG(
+    "pinned",
+    (Stage("a", 2), Stage("b", 2, must_private=True), Stage("c", 2)),
+    ((0, 1), (1, 2)))
+
+
+def workload(dag, J, seed, jitter=0.1):
+    rng = np.random.default_rng(seed)
+    M = dag.num_stages
+    P_priv = rng.lognormal(0.0, 0.5, (J, M)) * 2.0
+    pred = dict(P_private=P_priv,
+                P_public=P_priv * rng.uniform(0.8, 1.6, (J, M)),
+                upload=rng.uniform(0.05, 0.3, (J, M)),
+                download=rng.uniform(0.05, 0.3, (J, M)))
+    act = {k: v * rng.lognormal(0, jitter, v.shape) for k, v in pred.items()}
+    return pred, act
+
+
+def grid_for(dag, pred, fracs=(0.3, 0.6, 1.2)):
+    base = float(pred["P_private"].sum()) / float(dag.replicas.sum())
+    return tuple(float(base * f) for f in fracs)
+
+
+def assert_equivalent(v, d):
+    for fld in FIELDS:
+        a = np.nan_to_num(np.asarray(getattr(v, fld), float), nan=-1.0)
+        b = np.nan_to_num(np.asarray(getattr(d, fld), float), nan=-1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9,
+                                   err_msg=f"field {fld}")
+    assert (v.public_mask == d.public_mask).all(), "offload decisions differ"
+
+
+# -- DES == vector under exogenous arrivals -------------------------------
+
+@pytest.mark.parametrize("dag", [*APPS.values(), serving_dag(), PINNED_DAG],
+                         ids=lambda d: d.name)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_matches_des_poisson(dag, seed):
+    pred, act = workload(dag, J, seed)
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"),
+              arrivals=PoissonArrivals(rate=2.0, seed=seed + 10))
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+
+
+@pytest.mark.parametrize("dag", [APPS["video"], APPS["image"]],
+                         ids=lambda d: d.name)
+def test_engine_matches_des_deterministic_trace(dag):
+    """Explicit (tie-free) release vector, both engines."""
+    pred, act = workload(dag, J, 3)
+    rng = np.random.default_rng(42)
+    rel = np.sort(rng.uniform(0.0, 12.0, J))
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"),
+              arrivals=rel)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+    np.testing.assert_array_equal(v.release[0], rel)
+
+
+def test_engine_matches_des_tied_epochs():
+    """Epoch-quantized releases (the rolling-horizon regime): whole
+    arrival groups share a release instant, and both engines must admit
+    the group before re-running the ACD sweep."""
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 4)
+    rng = np.random.default_rng(7)
+    rel = np.ceil(np.sort(rng.uniform(0.0, 6.0, J)) / 1.5) * 1.5
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"),
+              arrivals=rel)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+
+
+def test_engine_matches_des_mmpp_flag_variants():
+    dag = APPS["matrix"]
+    pred, act = workload(dag, J, 5)
+    arr = MMPPArrivals(rates=(0.5, 6.0), dwell=(5.0, 2.0), seed=2)
+    for flags in (dict(init_phase=False), dict(adaptive=False),
+                  dict(include_transfers=False, adaptive=False)):
+        kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt",),
+                  arrivals=arr, **flags)
+        v = simulate_scenarios(dag, pred, act, **kw)
+        d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+        assert_equivalent(v, d)
+
+
+# -- batch degenerate trace: bit-exact vs the batch path ------------------
+
+@pytest.mark.parametrize("engine", ["des", "vector"])
+@pytest.mark.parametrize("dag", [*APPS.values()], ids=lambda d: d.name)
+def test_batch_degenerate_trace_bit_exact(dag, engine):
+    """An all-at-t0 trace must reproduce the batch path *bit-exactly*:
+    same event order, same floats, on both engines."""
+    pred, act = workload(dag, J, 6)
+    c = grid_for(dag, pred)[1]
+    batch = simulate(dag, pred, act, c_max=c, engine=engine)
+    trace = simulate(dag, pred, act, c_max=c, engine=engine,
+                     arrivals=np.zeros(J))
+    assert batch.makespan == trace.makespan
+    assert batch.cost_usd == trace.cost_usd
+    for fld in ("start", "end", "completion", "per_stage_offloads",
+                "provider"):
+        a, b = getattr(batch, fld), getattr(trace, fld)
+        assert np.array_equal(np.asarray(a), np.asarray(b),
+                              equal_nan=True), fld
+    assert (batch.public_mask == trace.public_mask).all()
+    # the trace run records the stream; the batch run records None
+    assert batch.release is None
+    np.testing.assert_array_equal(trace.release, np.zeros(J))
+
+
+def test_batch_arrivals_process_is_degenerate():
+    dag = APPS["image"]
+    pred, act = workload(dag, J, 8)
+    c = grid_for(dag, pred)[0]
+    batch = simulate(dag, pred, act, c_max=c)
+    proc = simulate(dag, pred, act, c_max=c, arrivals=BatchArrivals())
+    assert batch.makespan == proc.makespan
+    assert batch.cost_usd == proc.cost_usd
+
+
+# -- arrival process / parsing API ----------------------------------------
+
+class TestArrivalProcesses:
+    def test_poisson_deterministic_and_sorted(self):
+        a = PoissonArrivals(rate=3.0, seed=5).release_times(50, t0=1.0)
+        b = PoissonArrivals(rate=3.0, seed=5).release_times(50, t0=1.0)
+        np.testing.assert_array_equal(a, b)
+        assert (np.diff(a) > 0).all() and (a > 1.0).all()
+
+    def test_poisson_rate_scales_span(self):
+        slow = PoissonArrivals(rate=1.0, seed=0).release_times(200)
+        fast = PoissonArrivals(rate=10.0, seed=0).release_times(200)
+        assert fast[-1] < slow[-1]
+
+    def test_mmpp_deterministic(self):
+        a = MMPPArrivals(seed=3).release_times(64)
+        b = MMPPArrivals(seed=3).release_times(64)
+        np.testing.assert_array_equal(a, b)
+        assert (np.diff(a) > 0).all() and (a >= 0).all()
+
+    def test_trace_offsets(self):
+        t = TraceArrivals((0.0, 2.5, 1.0))
+        np.testing.assert_array_equal(t.release_times(3, t0=10.0),
+                                      [10.0, 12.5, 11.0])
+        with pytest.raises(ValueError):
+            t.release_times(4)
+        with pytest.raises(ValueError):
+            TraceArrivals((-1.0,))
+
+    def test_parse_specs(self):
+        assert isinstance(parse_arrivals("batch"), BatchArrivals)
+        p = parse_arrivals("poisson:4.5:7")
+        assert (p.rate, p.seed) == (4.5, 7)
+        m = parse_arrivals("mmpp:1,8:5,2:3")
+        assert m.rates == (1.0, 8.0) and m.dwell == (5.0, 2.0) and m.seed == 3
+        t = parse_arrivals("trace:0,0.5,2")
+        assert t.offsets == (0.0, 0.5, 2.0)
+        for bad in ("warp:1", "poisson", "poisson:1:2:3", "mmpp:1,2",
+                    "batch:1", "trace:"):
+            with pytest.raises(ValueError):
+                parse_arrivals(bad)
+
+    def test_resolve_release_validation(self):
+        assert resolve_release(None, 5) is None
+        np.testing.assert_array_equal(resolve_release("batch", 3, t0=2.0),
+                                      [2.0, 2.0, 2.0])
+        with pytest.raises(ValueError):
+            resolve_release(np.zeros((2, 2)), 4)
+        with pytest.raises(ValueError):
+            resolve_release([0.0, -1.0], 2)          # before t0
+        with pytest.raises(ValueError):
+            resolve_release([0.0, np.inf], 2)
+        with pytest.raises(ValueError):
+            PoissonArrivals(rate=0.0)
+
+
+# -- per-job deadlines / SLA metrics --------------------------------------
+
+def test_per_job_deadline_relaxes_late_arrivals():
+    """Under a stream, a job's ACD budget is release+C_max: the same
+    workload that must offload when crammed at t0 can stay private when
+    arrivals are spread (each job's own deadline is further out)."""
+    dag = APPS["matrix"]
+    rng = np.random.default_rng(9)
+    P = rng.uniform(2.0, 4.0, (24, 2))
+    pred = dict(P_private=P, P_public=P * 0.5)
+    c = float(P.sum()) / float(dag.replicas.sum()) * 0.35
+    batch = simulate(dag, pred, c_max=c, include_transfers=False)
+    spread = simulate(dag, pred, c_max=c, include_transfers=False,
+                      arrivals=np.linspace(0.0, 3.0 * c, 24))
+    assert spread.n_offloaded_stages < batch.n_offloaded_stages
+    assert spread.cost_usd < batch.cost_usd
+
+
+def test_sla_attainment_metric():
+    dag = APPS["matrix"]
+    rng = np.random.default_rng(10)
+    P = rng.uniform(1.0, 2.0, (10, 2))
+    pred = dict(P_private=P, P_public=P * 0.5)
+    rel = np.linspace(0.0, 5.0, 10)
+    res = simulate(dag, pred, c_max=50.0, include_transfers=False,
+                   arrivals=rel)
+    assert res.sla_attainment(1e9) == 1.0
+    assert res.sla_attainment(0.0) == 0.0
+    flow = res.flow_time
+    assert (flow >= 0).all()
+    np.testing.assert_allclose(flow, res.completion - rel)
+
+
+# -- scheduling-theory properties (deterministic sweeps; the hypothesis
+# -- generalizations live in tests/test_property.py) ----------------------
+
+_SINGLE = AppDAG("single", (Stage("s", replicas=1),), ())
+
+
+class TestArrivalProperties:
+    def test_delaying_any_arrival_never_decreases_makespan(self):
+        """Delaying one arrival never decreases makespan — on a single
+        work-conserving server (one stage, one replica, no offloading),
+        where it is a theorem: the emptying time of the workload process
+        is order-independent and monotone in release times.
+
+        The property is *false* for the general hybrid platform — with
+        multiple replicas (or multiple stages) a delayed arrival can
+        re-order the priority queue into a better packing, and with ACD
+        offloading a delayed job can be evicted to the infinitely
+        parallel public cloud and finish sooner (Graham-style
+        anomalies; see docs/architecture.md).
+        """
+        kw = dict(c_max=1e6, include_transfers=False, init_phase=False,
+                  adaptive=False)
+        for seed in range(20):
+            rng = np.random.default_rng(seed)
+            n = int(rng.integers(2, 16))
+            rel = np.sort(rng.uniform(0.0, 10.0, n))
+            P = rng.uniform(0.1, 5.0, (n, 1))
+            pred = dict(P_private=P, P_public=P)
+            base = simulate(_SINGLE, pred, arrivals=rel, **kw)
+            j = int(rng.integers(0, n))
+            rel2 = rel.copy()
+            rel2[j] += float(rng.uniform(0.01, 20.0))
+            later = simulate(_SINGLE, pred, arrivals=rel2, **kw)
+            assert later.makespan >= base.makespan - 1e-9, seed
+
+    def test_translation_equivariance(self):
+        """Shifting every release and t0 by the same delta translates
+        the whole schedule: completions shift by delta, makespan, cost
+        and placement are invariant (per-job deadlines shift with the
+        releases). Holds for the full hybrid platform."""
+        dag = APPS["matrix"]
+        for seed, shift in ((0, 3.5), (1, 17.0), (2, 0.0)):
+            rng = np.random.default_rng(seed)
+            n = 12
+            P = rng.uniform(0.2, 5.0, (n, 2))
+            pred = dict(P_private=P, P_public=P * 0.6)
+            rel = np.sort(rng.uniform(0.0, 8.0, n))
+            c = float(P.sum()) * 0.3
+            a = simulate(dag, pred, c_max=c, include_transfers=False,
+                         arrivals=rel, t0=0.0)
+            b = simulate(dag, pred, c_max=c, include_transfers=False,
+                         arrivals=rel + shift, t0=shift)
+            assert b.makespan == pytest.approx(a.makespan, abs=1e-6)
+            assert b.cost_usd == pytest.approx(a.cost_usd, abs=1e-12)
+            assert (a.public_mask == b.public_mask).all()
+            np.testing.assert_allclose(b.completion, a.completion + shift,
+                                       rtol=1e-9, atol=1e-6)
+
+
+# -- rolling-horizon serving ----------------------------------------------
+
+class TestServeOnline:
+    @pytest.fixture(scope="class")
+    def sched(self):
+        from repro.configs.registry import get_config
+        from repro.serving import HybridServingScheduler
+        return HybridServingScheduler(get_config("llama3-8b"))
+
+    @pytest.fixture(scope="class")
+    def stream(self):
+        rng = np.random.default_rng(0)
+        J = 48
+        return (rng.integers(64, 2048, J), rng.integers(16, 256, J),
+                PoissonArrivals(rate=8.0, seed=7))
+
+    def test_modes_and_metrics(self, sched, stream):
+        plen, ntok, arr = stream
+        reports = {m: sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                                         replan_every_s=0.5, use_ridge=False,
+                                         engine="des", mode=m)
+                   for m in ("private", "public", "hybrid")}
+        assert reports["private"].result.cost_usd == 0.0
+        assert reports["public"].result.offload_fraction == 1.0
+        assert reports["public"].result.cost_usd > 0.0
+        hyb = reports["hybrid"]
+        assert 0.0 <= hyb.sla_attainment <= 1.0
+        assert hyb.result.cost_usd <= reports["public"].result.cost_usd
+        s = hyb.summary()
+        assert s["requests"] == len(plen)
+        assert s["p95_latency_s"] >= s["mean_latency_s"] * 0.5
+
+    def test_engines_agree_online(self, sched, stream):
+        plen, ntok, arr = stream
+        a = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                               replan_every_s=0.5, use_ridge=False,
+                               engine="vector")
+        b = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                               replan_every_s=0.5, use_ridge=False,
+                               engine="des")
+        assert a.result.makespan == pytest.approx(b.result.makespan)
+        assert a.result.cost_usd == pytest.approx(b.result.cost_usd)
+        assert a.sla_attainment == b.sla_attainment
+
+    def test_admission_quantization(self, sched, stream):
+        plen, ntok, arr = stream
+        rep = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                                 replan_every_s=1.0, use_ridge=False,
+                                 engine="des")
+        # admitted on the replan grid, never before the true arrival
+        assert (rep.admitted >= rep.release - 1e-12).all()
+        np.testing.assert_allclose(rep.admitted % 1.0, 0.0, atol=1e-9)
+        # event-driven limit: no quantization at all
+        rep0 = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                                  replan_every_s=0.0, use_ridge=False,
+                                  engine="des")
+        np.testing.assert_array_equal(rep0.admitted, rep0.release)
+
+    def test_coarser_replan_never_improves_admission(self, sched, stream):
+        plen, ntok, arr = stream
+        fine = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                                  replan_every_s=0.25, use_ridge=False,
+                                  engine="des")
+        coarse = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                                    replan_every_s=2.0, use_ridge=False,
+                                    engine="des")
+        assert (coarse.admitted >= fine.admitted - 1e-12).all()

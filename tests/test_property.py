@@ -5,8 +5,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (LAMBDA_COST, Provider, ProviderPortfolio,
-                        init_offload, johnson_makespan, lambda_cost,
+from repro.core import (AppDAG, LAMBDA_COST, Provider, ProviderPortfolio,
+                        Stage, init_offload, johnson_makespan, lambda_cost,
                         matrix_app, simulate)
 from repro.core.cost import USD_PER_GB_MS
 from repro.training.optimizer import (dequantize_q8, dequantize_q8_log,
@@ -169,6 +169,63 @@ class TestSimulatorProperties:
         res = simulate(dag, pred, c_max=1e12, order="spt",
                        include_transfers=False)
         assert res.makespan >= johnson_makespan(P) - 1e-9
+
+
+_SINGLE_SERVER = AppDAG("single", (Stage("s", replicas=1),), ())
+
+
+class TestArrivalStreamProperties:
+    """Invariants of the exogenous-arrival extension (core/arrivals.py)."""
+
+    @given(st.lists(f_lat, min_size=2, max_size=16),
+           st.integers(min_value=0, max_value=10**6),
+           st.floats(min_value=0.01, max_value=20.0))
+    @settings(max_examples=60, deadline=None)
+    def test_delaying_any_arrival_never_decreases_makespan(
+            self, works, seed, delay):
+        """On a single work-conserving server (one stage, one replica,
+        no offloading) the makespan is the emptying time of the workload
+        process — order-independent and monotone in release times, so
+        delaying any one arrival can never decrease it. (The general
+        hybrid platform admits Graham-style anomalies; the deterministic
+        regression in tests/test_arrivals.py documents the restriction.)
+        """
+        J = len(works)
+        rng = np.random.default_rng(seed)
+        rel = np.sort(rng.uniform(0.0, 10.0, J))
+        P = np.array(works)[:, None]
+        pred = dict(P_private=P, P_public=P)
+        kw = dict(c_max=1e6, include_transfers=False, init_phase=False,
+                  adaptive=False)
+        base = simulate(_SINGLE_SERVER, pred, arrivals=rel, **kw)
+        rel2 = rel.copy()
+        rel2[int(rng.integers(0, J))] += delay
+        later = simulate(_SINGLE_SERVER, pred, arrivals=rel2, **kw)
+        assert later.makespan >= base.makespan - 1e-9
+
+    @given(st.lists(f_lat, min_size=2, max_size=14),
+           st.integers(min_value=0, max_value=10**6),
+           st.floats(min_value=0.0, max_value=50.0))
+    @settings(max_examples=40, deadline=None)
+    def test_translation_equivariance(self, works, seed, shift):
+        """Shifting every release and t0 by the same delta translates the
+        schedule: completions shift by delta; makespan, cost and placement
+        are invariant (per-job deadlines move with the releases)."""
+        J = len(works)
+        rng = np.random.default_rng(seed)
+        dag = matrix_app(replicas=2)
+        P = np.array(works)[:, None] * np.array([[1.0, 0.8]])
+        pred = dict(P_private=P, P_public=P * 0.6)
+        rel = np.sort(rng.uniform(0.0, 8.0, J))
+        c = float(P.sum()) * 0.3
+        a = simulate(dag, pred, c_max=c, include_transfers=False,
+                     arrivals=rel, t0=0.0)
+        b = simulate(dag, pred, c_max=c, include_transfers=False,
+                     arrivals=rel + shift, t0=shift)
+        assert b.makespan == pytest.approx(a.makespan, abs=1e-6)
+        assert (a.public_mask == b.public_mask).all()
+        np.testing.assert_allclose(b.completion, a.completion + shift,
+                                   rtol=1e-9, atol=1e-6)
 
 
 class TestQuantizationProperties:

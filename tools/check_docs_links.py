@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Markdown link checker for the CI docs job (stdlib only, no network).
+
+Verifies that every *local* link target in the given markdown files
+exists, resolved relative to the file containing the link. External
+``http(s)``/``mailto`` links and pure ``#anchor`` links are skipped so
+the job never depends on network access.
+
+    python tools/check_docs_links.py README.md docs/architecture.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and [text](target "title"); stops at whitespace/paren
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    if not path.exists():
+        return [f"{path}: file not found"]
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        local = target.split("#", 1)[0]
+        if not local:
+            continue
+        if not (path.parent / local).resolve().exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_docs_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    for arg in argv:
+        errors.extend(check_file(Path(arg)))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"checked {len(argv)} file(s): {len(errors)} broken link(s)")
+    else:
+        print(f"checked {len(argv)} file(s): all local links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
