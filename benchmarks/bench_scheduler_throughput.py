@@ -24,6 +24,16 @@ batch-only). Stochastic streams are re-seeded per application so the
 apps see distinct traces; the des/vector agreement assertion covers the
 arrival path too. CI's smoke run passes ``--arrivals poisson:4.0``.
 
+``--replica-sweep N`` adds a replica-autoscaling point: each app's sweep
+grows a ``replicas=`` scenario axis of N per-stage pool sizings
+(deterministic per-app draws in 1..4), multiplying the grid N-fold —
+the batched pod-sizing workload behind ``autoscale_frontier``. Replica
+counts are scenario *data* in the vector engine (one executable per
+(M, I_max, J, P, flags) shape family), so the N-fold grid is still one
+device call per app; the DES replays it serially. des/vector
+checksum-checked; the frozen seed DES predates replica-as-data and sits
+it out. CI's smoke run passes ``--replica-sweep 8``.
+
 Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
 absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
 the seed baseline at each job count. ``--smoke`` runs a tiny instance and
@@ -103,13 +113,17 @@ def run_serial(tasks, sim_fn, portfolio=None):
     return time.perf_counter() - t0, chk, n
 
 
-def run_vector(tasks, warm: bool = True, portfolio=None):
-    keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals")
+def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector"):
+    """Whole-sweep runner: one batched call per app on ``vector``, a
+    serial scenario-grid replay on ``des`` (the path that understands the
+    ``replicas=`` axis)."""
+    keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals",
+            "replicas")
     calls = [{k: t[k] for k in keys if t.get(k) is not None} for t in tasks]
-    if warm:  # compile outside the timed region
+    if warm and engine == "vector":  # compile outside the timed region
         sweep_scenarios(calls, portfolio=portfolio)
     t0 = time.perf_counter()
-    outs = sweep_scenarios(calls, portfolio=portfolio)
+    outs = sweep_scenarios(calls, portfolio=portfolio, engine=engine)
     dt = time.perf_counter() - t0
     chk = float(sum(o.makespan.sum() + o.cost_usd.sum() for o in outs))
     return dt, chk, sum(o.num_scenarios for o in outs)
@@ -131,20 +145,34 @@ def attach_arrivals(tasks, spec: str):
     return tasks
 
 
+def attach_replicas(tasks, n_cfgs: int):
+    """Give each app a ``replicas=`` axis of ``n_cfgs`` per-stage pool
+    sizings (deterministic draws in 1..4, re-seeded per application)."""
+    for ai, t in enumerate(tasks):
+        rng = np.random.default_rng(100 + ai)
+        M = t["dag"].num_stages
+        t["replicas"] = list(rng.integers(1, 5, size=(n_cfgs, M)))
+    return tasks
+
+
 def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
-                  arrivals=None):
+                  arrivals=None, replica_sweep=None):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
             t["c_max_grid"] = t["c_max_grid"][:deadlines]
     if arrivals is not None:
         tasks = attach_arrivals(tasks, arrivals)
+    if replica_sweep is not None:
+        tasks = attach_replicas(tasks, replica_sweep)
     point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
              "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
     if portfolio is not None:
         point["providers"] = portfolio.num_providers
     if arrivals is not None:
         point["arrivals"] = arrivals
+    if replica_sweep is not None:
+        point["replica_configs"] = replica_sweep
     checks = {}
     for eng in engines:
         if eng == "seed":
@@ -152,9 +180,15 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                 raise ValueError("the frozen seed DES has no portfolio")
             if arrivals is not None:
                 raise ValueError("the frozen seed DES is batch-only")
+            if replica_sweep is not None:
+                raise ValueError("the frozen seed DES has no replica axis")
             dt, chk, n = run_serial(tasks, simulate_seed)
         elif eng == "des":
-            dt, chk, n = run_serial(tasks, simulate, portfolio=portfolio)
+            if replica_sweep is not None:
+                dt, chk, n = run_vector(tasks, portfolio=portfolio,
+                                        engine="des")
+            else:
+                dt, chk, n = run_serial(tasks, simulate, portfolio=portfolio)
         else:
             dt, chk, n = run_vector(tasks, portfolio=portfolio)
         checks[eng] = chk
@@ -192,6 +226,10 @@ def main(argv=None):
     ap.add_argument("--arrivals", default=None, metavar="SPEC",
                     help="add an online-arrival point with this stream "
                          "(e.g. poisson:4.0; des/vector engines)")
+    ap.add_argument("--replica-sweep", type=int, default=None, metavar="N",
+                    help="add a replica-autoscaling point: N pool sizings "
+                         "per app batched on the scenario axis "
+                         "(des/vector engines)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
@@ -218,6 +256,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(64, ("des", "vector"),
                               arrivals=args.arrivals))
+        if args.replica_sweep:
+            print(f"smoke: J=64, {args.replica_sweep}-config replica "
+                  "sweep, des+vector")
+            report["points"].append(
+                measure_point(64, ("des", "vector"),
+                              replica_sweep=args.replica_sweep))
     else:
         print("sweep 3 apps x 2 orders x 5 deadlines:")
         report["points"].append(
@@ -232,6 +276,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(512, ("des", "vector"),
                               arrivals=args.arrivals))
+        if args.replica_sweep:
+            print(f"replica-autoscaling sweep ({args.replica_sweep} "
+                  "configs/app, des/vector only):")
+            report["points"].append(
+                measure_point(512, ("des", "vector"),
+                              replica_sweep=args.replica_sweep))
         # large-J: seed is O(J^2 log J); one deadline keeps it bounded
         print("large-J point (1 deadline per app/order):")
         report["points"].append(

@@ -209,6 +209,25 @@ class AppDAG:
         """All stages reachable from k (excluding k)."""
         return list(self.descendant_lists[k])
 
+    def with_replicas(self, counts: Sequence[int]) -> "AppDAG":
+        """Same application with per-stage replica counts ``counts`` [M].
+
+        The unit of a replica autoscaling sweep: structure, memory
+        configs and privacy pins are shared, only the private pool sizes
+        differ. Used by the DES replay of a ``replicas=`` scenario axis
+        (the vector engine consumes the counts directly as data).
+        """
+        counts = [int(c) for c in counts]
+        if len(counts) != self.num_stages:
+            raise ValueError(
+                f"replicas: expected {self.num_stages} per-stage counts "
+                f"(M={self.num_stages}), got {len(counts)}")
+        if any(c < 1 for c in counts):
+            raise ValueError(f"replicas: counts must be >= 1, got {counts}")
+        stages = tuple(dataclasses.replace(s, replicas=c)
+                       for s, c in zip(self.stages, counts))
+        return AppDAG(self.name, stages, self.edges)
+
     # -- ACD support (Sec. III-B) ---------------------------------------
     def longest_path_latency(self, latencies: np.ndarray) -> np.ndarray:
         """Per-stage critical-path remainder  sum_{k in Gamma(l)} P_k.

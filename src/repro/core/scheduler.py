@@ -132,6 +132,8 @@ class SkedulixScheduler:
         orders: Sequence[str] = ("spt",),
         engine: str = "vector",
         arrivals: ArrivalsLike = None,
+        replicas=None,
+        replica_speeds=None,
         **sim_kwargs,
     ) -> VectorSimResult:
         """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
@@ -141,13 +143,23 @@ class SkedulixScheduler:
         grid serially through the reference simulator for parity checks.
         ``arrivals`` applies one exogenous release stream across every
         scenario of the grid (per-job deadlines ``release + c_max``).
+
+        ``replicas`` adds an autoscaling axis — a list of per-stage
+        replica count vectors [M], each a private-pool sizing swept
+        against every deadline of the grid; ``replica_speeds`` adds a
+        straggler axis — ``{(stage, replica): factor}`` dicts or [M, I]
+        slowdown arrays (Fig.-5-style robustness grids). Both are
+        scenario data in the vector engine: the full
+        ``orders x c_max x replicas x speeds`` grid is still one batched
+        call on one compiled executable.
         """
         if pred is None:
             pred = self.predict(base_features)
         return simulate_scenarios(
             self.dag, pred, act, c_max_grid=c_max_grid, orders=orders,
             cost_model=self.cost_model, portfolio=self.portfolio,
-            engine=engine, arrivals=arrivals, **sim_kwargs)
+            engine=engine, arrivals=arrivals, replicas=replicas,
+            replica_speeds=replica_speeds, **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None,
                             arrivals: ArrivalsLike = None) -> SimResult:

@@ -86,6 +86,7 @@ class SimResult:
     deadline: float
     provider: Optional[np.ndarray] = None  # [J, M] int: -1 private, else index
     release: Optional[np.ndarray] = None   # [J] job release times (None=batch)
+    replica: Optional[np.ndarray] = None   # [J, M] int: private replica, -1 = public
 
     @property
     def offload_fraction(self) -> float:
@@ -202,6 +203,8 @@ class _Sim:
         # runtime state
         self.status = np.full((self.J, self.M), WAITING, dtype=np.int8)
         self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int16)
+        # which private replica ran each (job, stage); -1 = ran public
+        self.replica = np.full((self.J, self.M), -1, dtype=np.int32)
         self.forced_public = np.zeros((self.J, self.M), dtype=bool)
         self.start = np.full((self.J, self.M), np.nan)
         self.end = np.full((self.J, self.M), np.nan)
@@ -236,7 +239,8 @@ class _Sim:
             n_init_offloaded_jobs=self.n_init_off,
             per_stage_offloads=self.per_stage_offloads, deadline=self.c_max,
             provider=self.loc.astype(np.int64),
-            release=None if self.release is None else self._rel.copy())
+            release=None if self.release is None else self._rel.copy(),
+            replica=self.replica.astype(np.int64))
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
@@ -320,7 +324,10 @@ class _Sim:
                 jobs = np.delete(jobs, i)
                 P = np.delete(P, i)
                 slack = np.delete(slack, i)
-        # dispatch to free replicas (head of queue first)
+        # dispatch to free replicas: head of queue takes the lowest-index
+        # free replica (the pool is kept sorted, so pop(0) is the min) —
+        # the deterministic tie-break shared with the vector engine, which
+        # makes the replica *assignment* (not just timings) engine-exact
         free = self.free_replicas[k]
         while free and q:
             _, j = q.pop(0)
@@ -331,6 +338,7 @@ class _Sim:
     def _start_private(self, t: float, j: int, k: int, r: int):
         self.status[j, k] = RUNNING
         self.loc[j, k] = PRIVATE
+        self.replica[j, k] = r
         self.start[j, k] = t
         dur = self._act_priv[j][k]
         if self.replica_slowdown:
@@ -340,7 +348,8 @@ class _Sim:
     def _private_done(self, t: float, j: int, k: int, r: int):
         self.status[j, k] = DONE
         self.end[j, k] = t
-        self.free_replicas[k].append(r)
+        # sorted re-insert keeps the lowest-index-free dispatch rule exact
+        bisect.insort(self.free_replicas[k], r)
         self._propagate_done(t, j, k)
         self._on_queue_change(t, k)
 
@@ -429,29 +438,45 @@ def simulate(
 
     ``pred``/``act``: dicts with P_private, P_public [J,M] (s) and upload,
     download [J,M] (s). ``act`` defaults to ``pred`` (perfect models).
-    ``replica_slowdown`` injects stragglers: {(stage, replica): factor}.
+    ``replica_slowdown`` injects stragglers: {(stage, replica): factor},
+    a multiplicative slowdown on the private duration of everything that
+    replica runs — supported by both engines (the vector engine carries
+    per-replica speeds as a masked [M, I_max] matrix of scenario data).
     ``engine``: ``"des"`` (event-heap reference) or ``"vector"`` (the
-    jit-compiled batched engine in :mod:`.vectorsim`; no straggler
-    injection). ``portfolio``: a :class:`ProviderPortfolio` — offloaded
-    stages run on their cheapest feasible provider; defaults to a single
-    provider shaped like ``cost_model``. ``arrivals``: an exogenous
-    release stream (:mod:`.arrivals` process, spec string, or explicit
-    [J] release times); ``None`` is the paper's batch at ``t0``. Under a
-    stream, deadlines are per-job ``release + c_max``.
+    jit-compiled batched engine in :mod:`.vectorsim`). ``portfolio``: a
+    :class:`ProviderPortfolio` — offloaded stages run on their cheapest
+    feasible provider; defaults to a single provider shaped like
+    ``cost_model``. ``arrivals``: an exogenous release stream
+    (:mod:`.arrivals` process, spec string, or explicit [J] release
+    times); ``None`` is the paper's batch at ``t0``. Under a stream,
+    deadlines are per-job ``release + c_max``.
+
+    Replica dispatch is deterministic in both engines: the head of a
+    stage queue takes the **lowest-indexed free replica** of that
+    stage's pool. The tie-break makes straggler injection well-defined
+    (the slowdown of replica ``r`` binds to exactly the jobs dispatched
+    to slot ``r``) and the per-(job, stage) replica assignment reported
+    in ``SimResult.replica`` engine-exact, not just the timings.
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
     act = _with_transfer_defaults(act)
     release = resolve_release(arrivals, pred["P_private"].shape[0], t0)
+    if replica_slowdown:
+        # shared validator (same errors as the vector engine's speeds
+        # axis): both engines reject bad factors/stages identically
+        from .vectorsim import _max_replica_bound, _norm_speed_axis
+        _norm_speed_axis([replica_slowdown], dag.num_stages,
+                         _max_replica_bound(dag, None))
     if engine == "vector":
-        if replica_slowdown:
-            raise ValueError("engine='vector' does not support replica_slowdown")
         from .vectorsim import simulate_scenarios
         batched = simulate_scenarios(
             dag, pred, act, c_max_grid=(c_max,), orders=(order,),
             cost_model=cost_model, include_transfers=include_transfers,
             init_phase=init_phase, adaptive=adaptive, t0=t0,
-            portfolio=portfolio, arrivals=release)
+            portfolio=portfolio, arrivals=release,
+            replica_speeds=None if not replica_slowdown
+            else [replica_slowdown])
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")

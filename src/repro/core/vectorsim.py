@@ -25,9 +25,15 @@ coordinates* (the static ``(stage_key, job)`` priority permutation):
   first-violator semantics of Alg. 1 lines 14-20 are reproduced by
   evicting one first violator per iteration (everything ahead of the
   first violator is kept in both formulations);
-* replica occupancy is a vector of completion clocks — a replica is free
-  iff its clock is ``<= t``; replica *identity* is erased, which is why
-  ``replica_slowdown`` is not supported here;
+* replica occupancy is an ``[I_max]`` vector of *per-replica completion
+  clocks* — replica ``i`` is free iff ``clock[i] <= t``; a dispatch
+  takes the **lowest-indexed free replica** (the deterministic tie-break
+  the DES shares) and runs for the stage duration scaled by that
+  replica's entry in a per-stage speed vector (1.0 = healthy, > 1 =
+  straggler, ``inf`` = slot absent). Replica *identity* is therefore
+  data, not an erased aggregate: ``replica_slowdown`` straggler
+  injection runs batched, and the chosen replica index is reported per
+  (job, stage);
 * forced-public jobs (initialization offload and eviction cascades,
   constraint (12)) never enter a queue: their start/end times are closed
   forms of their arrival times, computed outside the loop, as are cost,
@@ -35,13 +41,20 @@ coordinates* (the static ``(stage_key, job)`` priority permutation):
 
 DAG structure as data
 ---------------------
-Adjacency, descendant masks, sink/pinned flags and per-stage replica
-counts enter the engine as *arrays*, not trace-time constants: one
-compiled executable serves every DAG with the same (padded) stage count,
-job count and replica bound. The provider portfolio is data too — per-
-provider billed-cost / latency / selection matrices ``[P, J, M]``, with
-the cheapest-feasible-provider argmin evaluated inside the per-stage
-loop — so the shape family is (M_pad, I_max, J, P, flags). Heterogeneous applications batch into a
+Adjacency, descendant masks, sink/pinned flags and the per-stage
+replica pools enter the engine as *arrays*, not trace-time constants:
+one compiled executable serves every DAG with the same (padded) stage
+count, job count and replica bound. Replica pools are a masked
+``[M, I_max]`` *speed matrix* (finite entry = present replica with that
+slowdown factor, ``inf`` = absent slot), so the replica counts ``I_k``
+are scenario **data** too: ``sweep_scenarios`` takes a ``replicas=``
+axis (a list of per-stage replica-count vectors) and a
+``replica_speeds=`` axis (straggler grids), and a whole replica
+autoscaling or robustness sweep batches into the same executable. The
+provider portfolio is data as well — per-provider billed-cost / latency
+/ selection matrices ``[P, J, M]``, with the cheapest-feasible-provider
+argmin evaluated inside the per-stage loop — so the shape family is
+(M_pad, I_max, J, P, flags). Heterogeneous applications batch into a
 single call — stages are topologically relabelled, short DAGs are padded
 with inert stages (no jobs eligible, so their event loops run zero
 iterations) — and the whole figure's scenario axis shards across host
@@ -105,6 +118,8 @@ class VectorSimResult:
     c_max: np.ndarray               # [S]
     batch_idx: np.ndarray           # [S]
     release: Optional[np.ndarray] = None  # [S, J] job release times (None=batch)
+    replica: Optional[np.ndarray] = None  # [S, J, M] int: private replica, -1 = public
+    replicas: Optional[np.ndarray] = None  # [S, M] per-scenario replica counts
 
     @property
     def num_scenarios(self) -> int:
@@ -128,7 +143,8 @@ class VectorSimResult:
             per_stage_offloads=self.per_stage_offloads[s],
             deadline=float(self.deadline[s]),
             provider=self.provider[s],
-            release=None if self.release is None else self.release[s])
+            release=None if self.release is None else self.release[s],
+            replica=None if self.replica is None else self.replica[s])
 
 
 @functools.lru_cache(maxsize=None)
@@ -138,22 +154,25 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
     bound, job count, provider count, flags) shape family. DAG structure
     arrives as data: ``A``/``desc`` are [M, M] adjacency / strict-descendant
     masks over topologically-ordered stage indices (edges go low -> high),
-    ``sink``/``pinned``/``inert`` are [M] stage flags, ``I_vec`` the replica
-    counts. The provider portfolio arrives as data too: per-provider billed
-    cost / latency / selection-key matrices ``[P, J, M]``; the cheapest
-    feasible provider is an argmin inside the per-stage loop, so one
-    executable serves any portfolio of the same size.
+    ``sink``/``pinned``/``inert`` are [M] stage flags, ``speed`` the
+    [M, I_max] per-replica speed matrix (finite = present replica with
+    that multiplicative slowdown, ``inf`` = absent slot) — replica counts
+    and straggler factors are both scenario data. The provider portfolio
+    arrives as data too: per-provider billed cost / latency /
+    selection-key matrices ``[P, J, M]``; the cheapest feasible provider
+    is an argmin inside the per-stage loop, so one executable serves any
+    portfolio of the same size.
     """
-    iota_I = jnp.arange(I_max)
     iota_J = jnp.arange(J)
 
-    def run_stage(k, a, forced_k, elig, upk, I_k, acd_k, P_k, rem_k, dur_k,
-                  pub_k, keys_k, deadline, t0):
+    def run_stage(k, a, forced_k, elig, upk, speed_k, acd_k, P_k, rem_k,
+                  dur_k, pub_k, keys_k, deadline, t0):
         """Simulate stage k given per-job arrival times ``a`` [J].
 
         ``deadline`` is the per-job absolute deadline [J] (release + C_max;
-        a constant vector for batch workloads). Returns (start, end,
-        locpub, evicted) for the stage, job coords.
+        a constant vector for batch workloads). ``speed_k`` [I_max] holds
+        the stage's replica pool. Returns (start, end, locpub, evicted,
+        replica) for the stage, job coords.
         """
         # queue coordinates: stable sort by stage key, ties by job id
         perm = jnp.argsort(keys_k, stable=True)
@@ -174,10 +193,12 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         arr_rank = jnp.argsort(arr_order, stable=True)
         n_arr = elig_q.sum()
         ap0 = (elig_q & (a_q <= t0)).sum()  # t0 batch (source stages)
+        # I_k is derived from the pool: count of present (finite) slots
+        I_k = jnp.isfinite(speed_k).sum().astype(jnp.float64)
         slack_c = I_k * dl_q  # hoisted per-job term of the ACD slack
 
         def cond(c):
-            t, ap, exited, svr, times, clean, it = c
+            t, ap, exited, svr, times, rep, clean, it = c
             return ((ap < n_arr) | ((arr_rank < ap) & ~exited).any()) \
                 & (it < 4 * J + 16)
 
@@ -195,7 +216,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
             # -t - 1; run_stage requires t0 >= 0) and a sentinel-index
             # scatter (J + mode="drop" = no-op) commits the conditional
             # write without a full-width select.
-            t, ap, exited, svr, times, clean, it = c
+            t, ap, exited, svr, times, rep, clean, it = c
             arrived = arr_rank < ap
             q = arrived & ~exited
             nq = q.any()
@@ -203,8 +224,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
             # next event: arrival vs dispatch opportunity (free replica now,
             # else the earliest completion)
             t_arr = arr_t[ap]
-            sidx = jnp.argmin(svr)
-            mins = svr[sidx]
+            mins = jnp.min(svr)
             next_comp = jnp.min(jnp.where(svr > t, svr, jnp.inf))
             td = jnp.where(nq, jnp.where(mins <= t, t, next_comp), jnp.inf)
             advance = clean & ~done
@@ -232,35 +252,48 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
                 has_viol = jnp.asarray(False)
                 pos_x = jnp.argmax(q1)
             # evict the first violator, else dispatch head-of-queue to the
-            # earliest-free replica (mutually exclusive: one queue exit)
+            # lowest-indexed free replica (the deterministic tie-break the
+            # DES shares; mutually exclusive with eviction: one queue exit).
+            # A dispatched stage runs dur * speed of the chosen replica —
+            # straggler factors bind at dispatch, exactly as in the DES.
             do_disp = ~has_viol & ~done & (nq | is_arr) & (mins <= t_new)
+            sidx = jnp.argmax(svr <= t_new)  # absent slots are never free
             exit_idx = jnp.where(has_viol | do_disp, pos_x, J)
             exited = exited.at[exit_idx].set(True, mode="drop")
             times = times.at[exit_idx].set(
                 jnp.where(has_viol, -t_new - 1.0, t_new), mode="drop")
+            rep = rep.at[jnp.where(do_disp, pos_x, J)].set(
+                sidx.astype(rep.dtype), mode="drop")
             svr = jnp.where(do_disp,
-                            svr.at[sidx].set(t_new + dur_q[pos_x]), svr)
-            return (t_new, ap, exited, svr, times, ~has_viol, it + 1)
+                            svr.at[sidx].set(
+                                t_new + dur_q[pos_x] * speed_k[sidx]), svr)
+            return (t_new, ap, exited, svr, times, rep, ~has_viol, it + 1)
 
-        svr0 = jnp.where(iota_I < I_k, t0, jnp.inf)  # excess replica slots
+        svr0 = jnp.where(jnp.isfinite(speed_k), t0, jnp.inf)  # absent slots
         carry = (jnp.asarray(t0, jnp.float64), ap0, jnp.zeros((J,), bool),
                  svr0, jnp.full((J,), jnp.nan),
+                 jnp.full((J,), -1, jnp.int32),
                  jnp.zeros((), bool), jnp.zeros((), jnp.int32))
         carry = jax.lax.while_loop(cond, body, carry)
-        _, _, _, _, times, _, _ = carry
+        _, _, _, _, times, rep, _, _ = carry
         # back to job coordinates; `times` holds the dispatch instant of
         # private jobs and -(eviction instant) - 1 of evicted ones
         times_j = times[inv]
+        rep_j = rep[inv]
         evicted = times_j < -0.5  # NaN (never exited) compares False
         locpub = forced_k | evicted
         pub_event = jnp.where(forced_k, a, -times_j - 1.0)
         start = jnp.where(locpub, pub_event + upk, times_j)
-        end = start + jnp.where(locpub, pub_k, dur_k)
-        return start, end, locpub, evicted
+        # private durations run on the *assigned* replica's speed (the
+        # body already advanced the clock by the scaled duration)
+        priv_dur = dur_k * speed_k[jnp.maximum(rep_j, 0)]
+        end = start + jnp.where(locpub, pub_k, priv_dur)
+        replica = jnp.where(locpub, -1, rep_j)
+        return start, end, locpub, evicted, replica
 
     def run_one(P_pred, act_priv, pub_p, up_p, down_p, cost_p, sel_p,
                 stage_keys, job_keys, deadline, capacity, t0, release,
-                A, desc, sink, pinned, inert, I_vec):
+                A, desc, sink, pinned, inert, speed):
         # per-stage critical-path remainder (reverse index order = reverse
         # topological order; edges go low -> high)
         rem_l: List[Optional[jax.Array]] = [None] * M
@@ -280,6 +313,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         loc_l: List[Optional[jax.Array]] = [None] * M
         evict_l: List[Optional[jax.Array]] = [None] * M
         prov_l: List[Optional[jax.Array]] = [None] * M
+        rep_l: List[Optional[jax.Array]] = [None] * M
         down_l: List[Optional[jax.Array]] = [None] * M
         cost_l: List[Optional[jax.Array]] = [None] * M
         neg = jnp.full(J, -jnp.inf)
@@ -318,8 +352,9 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
             else:
                 upk = jnp.zeros(J)
             acd_k = ~pinned[k]
-            start_l[k], end_l[k], loc_l[k], evict_l[k] = run_stage(
-                k, a, forced_k, elig, upk, I_vec[k], acd_k, P_pred[:, k],
+            (start_l[k], end_l[k], loc_l[k], evict_l[k],
+             rep_l[k]) = run_stage(
+                k, a, forced_k, elig, upk, speed[k], acd_k, P_pred[:, k],
                 rem_l[k], act_priv[:, k], pub_k, stage_keys[:, k],
                 deadline, t0)
 
@@ -328,6 +363,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         locpub = jnp.stack(loc_l, axis=1)
         cost_m = jnp.stack(cost_l, axis=1)
         prov_m = jnp.stack(prov_l, axis=1)
+        rep_m = jnp.stack(rep_l, axis=1)
         # job completion: results back in private storage (sink download)
         fin = end
         if include_transfers:
@@ -341,7 +377,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
                     n_offloaded_stages=locpub.sum(),
                     n_init_offloaded_jobs=off.sum(),
                     per_stage_offloads=locpub.sum(axis=0),
-                    provider=jnp.where(locpub, prov_m, -1))
+                    provider=jnp.where(locpub, prov_m, -1),
+                    replica=rep_m)
 
     return run_one
 
@@ -371,18 +408,173 @@ def _norm_batch(d: Dict[str, np.ndarray], B: int) -> Dict[str, np.ndarray]:
     return out
 
 
+def _validate_workload_axes(pred: Dict[str, np.ndarray],
+                            act: Dict[str, np.ndarray],
+                            where: str = "") -> None:
+    """Check every pred/act matrix against pred['P_private'] up front.
+
+    Mismatched job/stage/batch axes raise a :class:`ValueError` that names
+    the offending entry (e.g. ``act['P_public']``) and the axis that
+    disagrees, instead of a shape error surfacing from deep inside the
+    batched engine.
+    """
+    pre = f"{where}: " if where else ""
+    if "P_private" not in pred:
+        raise ValueError(f"{pre}pred is missing 'P_private'")
+    ref = np.asarray(pred["P_private"])
+    if ref.ndim not in (2, 3):
+        raise ValueError(
+            f"{pre}pred['P_private']: expected [J, M] or [B, J, M], "
+            f"got shape {ref.shape}")
+    jm = ref.shape[-2:]
+    batch_owner, batch = ("pred['P_private']", ref.shape[0]) \
+        if ref.ndim == 3 else (None, None)
+    for dname, d in (("pred", pred), ("act", act)):
+        for key, v in d.items():
+            v = np.asarray(v)
+            name = f"{dname}['{key}']"
+            if v.ndim not in (2, 3):
+                raise ValueError(f"{pre}{name}: expected [J, M] or "
+                                 f"[B, J, M], got shape {v.shape}")
+            if v.shape[-2:] != jm:
+                raise ValueError(
+                    f"{pre}{name}: job/stage axes {v.shape[-2:]} do not "
+                    f"match pred['P_private'] {jm}")
+            if v.ndim == 3:
+                if batch is None:
+                    batch_owner, batch = name, v.shape[0]
+                elif v.shape[0] != batch:
+                    raise ValueError(
+                        f"{pre}{name}: latency-draw batch axis "
+                        f"{v.shape[0]} does not match {batch_owner} "
+                        f"batch axis {batch}")
+
+
+def _norm_replica_axis(replicas, dag: AppDAG,
+                       where: str = "") -> List[np.ndarray]:
+    """``replicas=`` axis -> list of per-stage count vectors [M] (ints).
+
+    ``None`` is the one-point axis at the DAG's own replica counts — the
+    degenerate sweep, bit-exact vs the pre-axis path.
+    """
+    pre = f"{where}: " if where else ""
+    if replicas is None:
+        return [np.asarray(dag.replicas, dtype=np.int64)]
+    replicas = list(replicas)  # materialize one-shot iterators
+    if not replicas:
+        raise ValueError(f"{pre}replicas axis is empty")
+    out = []
+    for i, cfg in enumerate(replicas):
+        v = np.asarray(cfg)
+        if v.ndim != 1 or v.shape[0] != dag.num_stages:
+            raise ValueError(
+                f"{pre}replicas[{i}]: expected {dag.num_stages} per-stage "
+                f"counts (M={dag.num_stages}), got shape {v.shape}")
+        vf = v.astype(np.float64)
+        if (vf % 1 != 0).any() or (vf < 1).any():
+            raise ValueError(
+                f"{pre}replicas[{i}]: counts must be integers >= 1, "
+                f"got {v.tolist()}")
+        out.append(vf.astype(np.int64))
+    return out
+
+
+def _norm_speed_axis(replica_speeds, M: int, I_max: int,
+                     where: str = "") -> List[np.ndarray]:
+    """``replica_speeds=`` axis -> list of [M, I_max] slowdown matrices.
+
+    Each config is either a ``{(stage, replica): factor}`` dict (the DES's
+    ``replica_slowdown`` format) or an array ``[M, I]``; entries are
+    multiplicative slowdowns (1.0 = healthy), missing entries default to
+    healthy, and entries for absent replica slots are ignored exactly as
+    the DES ignores them. ``None`` is the one-point healthy axis.
+    """
+    pre = f"{where}: " if where else ""
+    if replica_speeds is None:
+        return [np.ones((M, I_max))]
+    cfgs = list(replica_speeds)
+    if not cfgs:
+        raise ValueError(f"{pre}replica_speeds axis is empty")
+    out = []
+    for g, cfg in enumerate(cfgs):
+        sp = np.ones((M, I_max))
+        if cfg is None:
+            pass
+        elif isinstance(cfg, dict):
+            # every entry is validated — including ones for slots absent
+            # at this I_max, so acceptance never depends on the sweep's
+            # replica bound (the engines must reject inputs identically)
+            for key, f in cfg.items():
+                try:
+                    k, r = (int(key[0]), int(key[1]))
+                except (TypeError, ValueError, IndexError):
+                    raise ValueError(
+                        f"{pre}replica_speeds[{g}]: keys must be "
+                        f"(stage, replica) pairs, got {key!r}") from None
+                if not 0 <= k < M:
+                    raise ValueError(
+                        f"{pre}replica_speeds[{g}]: stage {k} out of "
+                        f"range for M={M}")
+                try:
+                    fv = float(f)
+                except (TypeError, ValueError):
+                    raise ValueError(
+                        f"{pre}replica_speeds[{g}]: factor for "
+                        f"({k}, {r}) must be a number, got {f!r}") from None
+                if not (np.isfinite(fv) and fv > 0):
+                    raise ValueError(
+                        f"{pre}replica_speeds[{g}]: factors must be "
+                        f"finite and > 0")
+                if r < 0:
+                    raise ValueError(
+                        f"{pre}replica_speeds[{g}]: replica index {r} "
+                        f"is negative")
+                if r >= I_max:
+                    continue  # slot absent in every config: a no-op
+                sp[k, r] = fv
+        else:
+            arr = np.asarray(cfg, dtype=np.float64)
+            if arr.ndim != 2 or arr.shape[0] != M:
+                raise ValueError(
+                    f"{pre}replica_speeds[{g}]: expected [M={M}, I] "
+                    f"factors, got shape {arr.shape}")
+            if not (np.isfinite(arr) & (arr > 0)).all():
+                raise ValueError(
+                    f"{pre}replica_speeds[{g}]: factors must be "
+                    f"finite and > 0")
+            w = min(arr.shape[1], I_max)
+            sp[:, :w] = arr[:, :w]
+        out.append(sp)
+    return out
+
+
+def _max_replica_bound(dag: AppDAG, repl_cfgs) -> int:
+    """I_max contribution of one task: its largest replica count.
+
+    ``repl_cfgs`` is a *normalized* axis (:func:`_norm_replica_axis`
+    output) or ``None`` for the one-point axis at the DAG's own counts —
+    callers normalize first, so one-shot iterators are consumed once.
+    """
+    if repl_cfgs is None:
+        return max([1] + [int(r) for r in dag.replicas])
+    return max([1] + [int(v.max()) for v in repl_cfgs if v.size])
+
+
 class _Task:
     """One application's scenario grid, topologically relabelled and padded
     to the sweep's common (M_pad, I_max) shape family."""
 
     def __init__(self, dag: AppDAG, pred, act, c_max_grid, orders,
-                 cost_model, t0, M_pad: int,
+                 cost_model, t0, M_pad: int, I_max: int,
                  portfolio: Optional[ProviderPortfolio] = None,
                  include_transfers: bool = True,
-                 arrivals: ArrivalsLike = None):
+                 arrivals: ArrivalsLike = None,
+                 replicas=None, replica_speeds=None,
+                 where: str = ""):
         from .simulator import _with_transfer_defaults
 
         act = act if act is not None else pred
+        _validate_workload_axes(pred, act, where)
         pred = _with_transfer_defaults(pred)
         act = _with_transfer_defaults(act)
         B = max([v.shape[0] if np.asarray(v).ndim == 3 else 1
@@ -395,13 +587,25 @@ class _Task:
             raise ValueError(f"pred has {M} stages, dag has {dag.num_stages}")
         self.J, self.M = int(J), int(M)
         self.M_pad = M_pad
+        self.I_max = int(I_max)
         orders = tuple(orders)
-        self.grid = [(b, o, float(c)) for b in range(B) for o in orders
-                     for c in c_max_grid]
+        # replica pools as scenario data: an axis of per-stage count
+        # vectors x an axis of straggler-speed grids; both default to
+        # one-point axes (the DAG's own counts, all replicas healthy),
+        # keeping the degenerate sweep bit-exact vs the pre-axis path
+        repl_cfgs = _norm_replica_axis(replicas, dag, where)
+        speed_cfgs = _norm_speed_axis(replica_speeds, self.M, self.I_max,
+                                      where)
+        self.grid = [(b, o, float(c), r, g)
+                     for b in range(B) for o in orders for c in c_max_grid
+                     for r in range(len(repl_cfgs))
+                     for g in range(len(speed_cfgs))]
         self.S = len(self.grid)
-        self.orders_out = tuple(o for (_, o, _) in self.grid)
-        self.c_max_out = np.array([c for (_, _, c) in self.grid])
-        self.batch_out = np.array([b for (b, _, _) in self.grid])
+        self.orders_out = tuple(o for (_, o, _, _, _) in self.grid)
+        self.c_max_out = np.array([c for (_, _, c, _, _) in self.grid])
+        self.batch_out = np.array([b for (b, _, _, _, _) in self.grid])
+        self.repl_out = np.stack([repl_cfgs[r]
+                                  for (_, _, _, r, _) in self.grid])
         self.t0 = float(t0)
         # exogenous release stream (None = batch at t0); per-job absolute
         # deadlines are release + C_max, the batch deadline when no stream
@@ -430,7 +634,7 @@ class _Task:
         uniq: Dict[Tuple[int, str], Tuple[np.ndarray, np.ndarray]] = {}
         sel_by_b: Dict[int, np.ndarray] = {}
         cost_by_b: Dict[int, np.ndarray] = {}
-        for b in sorted({b for (b, _, _) in self.grid}):
+        for b in sorted({b for (b, _, _, _, _) in self.grid}):
             down_pred = pred["download"][b] if include_transfers else None
             down_act = act["download"][b] if include_transfers else None
             sel_by_b[b] = pf.np_selection_costs(
@@ -445,8 +649,10 @@ class _Task:
                     np.stack([key_fn(pred["P_private"][b], H, k)
                               for k in range(M)], axis=1),
                     key_fn(pred["P_private"][b], H, None))
-        stage_keys = np.stack([uniq[(b, o)][0] for (b, o, _) in self.grid])
-        job_keys = np.stack([uniq[(b, o)][1] for (b, o, _) in self.grid])
+        stage_keys = np.stack([uniq[(b, o)][0]
+                               for (b, o, _, _, _) in self.grid])
+        job_keys = np.stack([uniq[(b, o)][1]
+                             for (b, o, _, _, _) in self.grid])
         bsel = self.batch_out
         sel_p = np.stack([sel_by_b[b] for b in bsel])          # [S, P, J, M]
         cost_p = np.stack([cost_by_b[b] for b in bsel])        # [S, P, J, M]
@@ -472,8 +678,27 @@ class _Task:
         pinned[:M] = dag.must_private_mask[topo]
         inert = np.ones(M_pad, dtype=bool)
         inert[:M] = False
-        I_vec = np.ones(M_pad)
-        I_vec[:M] = np.maximum(dag.replicas[topo], 1)
+
+        # per-(config, grid) replica pools as [M_pad, I_max] speed
+        # matrices: finite entry = present replica with that slowdown,
+        # inf = absent slot; inert pad stages keep one healthy slot
+        def speed_matrix(rv: np.ndarray, sg: np.ndarray) -> np.ndarray:
+            sp = np.full((M_pad, self.I_max), np.inf)
+            sp[M:, 0] = 1.0
+            cnt = np.maximum(rv, 1)
+            for i, s in enumerate(topo):
+                sp[i, :cnt[s]] = sg[s, :cnt[s]]
+            return sp
+
+        sp_by_rg = {(r, g): speed_matrix(repl_cfgs[r], speed_cfgs[g])
+                    for r in range(len(repl_cfgs))
+                    for g in range(len(speed_cfgs))}
+        speed = np.stack([sp_by_rg[(r, g)]
+                          for (_, _, _, r, g) in self.grid])
+        # capacity T_max = sum_k I_k * C_max follows the scenario's own
+        # replica config (raw counts, as in the DES's t_max)
+        capacity = np.array([float(repl_cfgs[r].sum()) * c
+                             for (_, _, c, r, _) in self.grid])
 
         S = self.S
         self.args = tuple(
@@ -489,7 +714,7 @@ class _Task:
                 pad_cols(sel_p),
                 pad_cols(stage_keys), job_keys,
                 rel[None, :] + self.c_max_out[:, None],
-                float(dag.replicas.sum()) * self.c_max_out,
+                capacity,
                 np.full(S, self.t0),
                 np.broadcast_to(rel, (S, self.J)),
                 np.broadcast_to(A, (S,) + A.shape),
@@ -497,7 +722,7 @@ class _Task:
                 np.broadcast_to(sink, (S,) + sink.shape),
                 np.broadcast_to(pinned, (S,) + pinned.shape),
                 np.broadcast_to(inert, (S,) + inert.shape),
-                np.broadcast_to(I_vec, (S,) + I_vec.shape),
+                speed,
             ))
 
     def pack(self, out: Dict[str, np.ndarray]) -> VectorSimResult:
@@ -516,7 +741,9 @@ class _Task:
             deadline=self.c_max_out.copy(), orders=self.orders_out,
             c_max=self.c_max_out, batch_idx=self.batch_out,
             release=None if self.release is None
-            else np.broadcast_to(self.release, (self.S, self.J)).copy())
+            else np.broadcast_to(self.release, (self.S, self.J)).copy(),
+            replica=out["replica"][:, :, inv],
+            replicas=self.repl_out.copy())
 
 
 def _run_task(task: _Task, I_max: int, include_transfers: bool,
@@ -567,23 +794,37 @@ def simulate_scenarios(
     engine: str = "vector",
     portfolio: Optional[ProviderPortfolio] = None,
     arrivals: ArrivalsLike = None,
+    replicas=None,
+    replica_speeds=None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
     ``pred``/``act`` values are [J, M] (shared) or [B, J, M] (a batch of
     latency draws, e.g. one per seed); the scenario axis enumerates
-    ``batch x orders x c_max_grid`` in C order. ``engine="des"`` replays
-    the same grid serially through the reference simulator — same result
-    layout, used by the equivalence suite and benchmarks. ``portfolio``
-    generalizes the public cloud to N providers (cheapest-feasible
-    placement per offloaded stage); default is the scalar ``cost_model``.
-    ``arrivals`` injects an exogenous release stream (:mod:`.arrivals`),
-    shared by every scenario of the grid; ``None`` is the batch at ``t0``.
+    ``batch x orders x c_max_grid x replicas x replica_speeds`` in C
+    order. ``engine="des"`` replays the same grid serially through the
+    reference simulator — same result layout, used by the equivalence
+    suite and benchmarks. ``portfolio`` generalizes the public cloud to
+    N providers (cheapest-feasible placement per offloaded stage);
+    default is the scalar ``cost_model``. ``arrivals`` injects an
+    exogenous release stream (:mod:`.arrivals`), shared by every
+    scenario of the grid; ``None`` is the batch at ``t0``.
+
+    ``replicas`` is an autoscaling axis: a list of per-stage replica
+    count vectors [M], each a private-pool sizing of the same
+    application (``None`` = the one-point axis at the DAG's own counts).
+    ``replica_speeds`` is a straggler axis: a list of slowdown configs —
+    ``{(stage, replica): factor}`` dicts or [M, I] factor arrays
+    (``None`` entries/axis = all replicas healthy). Both are scenario
+    *data* in the vector engine (a masked [M, I_max] speed matrix per
+    scenario, same compiled executable); the DES replays them via
+    :meth:`.dag.AppDAG.with_replicas` and ``replica_slowdown``.
     """
     from .simulator import _with_transfer_defaults, simulate
 
     if engine == "des":
         act_d = act if act is not None else pred
+        _validate_workload_axes(pred, act_d)
         pred_d = _with_transfer_defaults(pred)
         act_d = _with_transfer_defaults(act_d)
         B = max([v.shape[0] if np.asarray(v).ndim == 3 else 1
@@ -593,15 +834,30 @@ def simulate_scenarios(
         act_d = _norm_batch(act_d, B)
         J = pred_d["P_private"].shape[1]
         release = resolve_release(arrivals, J, t0)
-        grid = [(b, o, float(c)) for b in range(B) for o in orders
-                for c in c_max_grid]
-        sims = [simulate(dag, {k: v[b] for k, v in pred_d.items()},
+        repl_cfgs = _norm_replica_axis(replicas, dag)
+        I_max = _max_replica_bound(dag,
+                                   None if replicas is None else repl_cfgs)
+        speed_cfgs = _norm_speed_axis(replica_speeds, dag.num_stages, I_max)
+        # the one-point axis reuses `dag` itself (cached structure, and
+        # bit-exact replay of the pre-axis path)
+        dags = [dag if replicas is None else dag.with_replicas(cfg)
+                for cfg in repl_cfgs]
+        slow = [{(k, i): float(sp[k, i])
+                 for k in range(dag.num_stages) for i in range(I_max)
+                 if sp[k, i] != 1.0} or None
+                for sp in speed_cfgs]
+        grid = [(b, o, float(c), r, g)
+                for b in range(B) for o in orders for c in c_max_grid
+                for r in range(len(repl_cfgs))
+                for g in range(len(speed_cfgs))]
+        sims = [simulate(dags[r], {k: v[b] for k, v in pred_d.items()},
                          {k: v[b] for k, v in act_d.items()},
                          c_max=c, order=o, cost_model=cost_model,
                          include_transfers=include_transfers,
                          init_phase=init_phase, adaptive=adaptive, t0=t0,
-                         portfolio=portfolio, arrivals=release)
-                for (b, o, c) in grid]
+                         portfolio=portfolio, arrivals=release,
+                         replica_slowdown=slow[g])
+                for (b, o, c, r, g) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
             cost_usd=np.array([r.cost_usd for r in sims]),
@@ -615,16 +871,19 @@ def simulate_scenarios(
             per_stage_offloads=np.stack([r.per_stage_offloads for r in sims]),
             provider=np.stack([r.provider for r in sims]),
             deadline=np.array([r.deadline for r in sims]),
-            orders=tuple(o for (_, o, _) in grid),
-            c_max=np.array([c for (_, _, c) in grid]),
-            batch_idx=np.array([b for (b, _, _) in grid]),
+            orders=tuple(o for (_, o, _, _, _) in grid),
+            c_max=np.array([c for (_, _, c, _, _) in grid]),
+            batch_idx=np.array([b for (b, _, _, _, _) in grid]),
             release=None if release is None
-            else np.broadcast_to(release, (len(grid), J)).copy())
+            else np.broadcast_to(release, (len(grid), J)).copy(),
+            replica=np.stack([r.replica for r in sims]),
+            replicas=np.stack([repl_cfgs[r] for (_, _, _, r, _) in grid]))
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
     return sweep_scenarios(
         [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
-              orders=orders, arrivals=arrivals)],
+              orders=orders, arrivals=arrivals, replicas=replicas,
+              replica_speeds=replica_speeds)],
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
         portfolio=portfolio)[0]
@@ -644,12 +903,24 @@ def sweep_scenarios(
     application — as one batched, device-parallel sweep.
 
     Each task is a dict with keys ``dag``, ``pred``, optional ``act``,
-    ``c_max_grid``, ``orders`` and ``arrivals`` (an exogenous release
-    stream for that task's jobs; omitted = batch at ``t0``); results come
-    back in task order. Tasks with a common job count batch into a single
-    engine call (stages padded to the largest DAG; the scenario axis
-    shards across host devices); differing job counts fall back to one
-    call per group.
+    ``c_max_grid``, ``orders``, ``arrivals`` (an exogenous release
+    stream for that task's jobs; omitted = batch at ``t0``),
+    ``replicas`` (an autoscaling axis: a list of per-stage replica count
+    vectors [M]; omitted = the DAG's own counts) and ``replica_speeds``
+    (a straggler axis: a list of ``{(stage, replica): factor}`` dicts or
+    [M, I] slowdown arrays; omitted = all healthy); results come back in
+    task order. Every task's replica configs pad to the sweep's common
+    ``I_max`` (absent slots are masked out), so the whole replica /
+    straggler grid shares one compiled executable per
+    ``(M_pad, I_max, J, P, flags)`` shape family. Tasks with a common
+    job count batch into a single engine call (stages padded to the
+    largest DAG; the scenario axis shards across host devices);
+    differing job counts fall back to one call per group.
+
+    Malformed inputs fail fast with a :class:`ValueError` naming the
+    task and the offending axis (e.g. ``tasks[1]: act['P_public']: ...``
+    or ``tasks[0]: replicas[2]: ...``) instead of a shape error from
+    inside the batched engine.
     """
     if engine == "des":
         return [simulate_scenarios(
@@ -657,7 +928,9 @@ def sweep_scenarios(
             t.get("c_max_grid", (60.0,)), t.get("orders", ("spt",)),
             cost_model=cost_model, include_transfers=include_transfers,
             init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des",
-            portfolio=portfolio, arrivals=t.get("arrivals"))
+            portfolio=portfolio, arrivals=t.get("arrivals"),
+            replicas=t.get("replicas"),
+            replica_speeds=t.get("replica_speeds"))
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -667,15 +940,27 @@ def sweep_scenarios(
         raise ValueError("engine='vector' requires t0 >= 0")
 
     M_pad = max(t["dag"].num_stages for t in tasks)
-    I_max = max(1, max(max(int(r) for r in t["dag"].replicas)
-                       for t in tasks))
+    # normalize each task's replica axis once (validates with the task's
+    # name, materializes one-shot iterators); the replica bound covers
+    # every task's autoscaling axis, so one shape family serves the
+    # whole sweep
+    tasks = [dict(t) for t in tasks]
+    for i, t in enumerate(tasks):
+        if t.get("replicas") is not None:
+            t["replicas"] = _norm_replica_axis(t["replicas"], t["dag"],
+                                               where=f"tasks[{i}]")
+    I_max = max(_max_replica_bound(t["dag"], t.get("replicas"))
+                for t in tasks)
     prepped = [_Task(t["dag"], t["pred"], t.get("act"),
                      t.get("c_max_grid", (60.0,)),
                      t.get("orders", ("spt",)), cost_model, t0, M_pad,
-                     portfolio=portfolio,
+                     I_max=I_max, portfolio=portfolio,
                      include_transfers=bool(include_transfers),
-                     arrivals=t.get("arrivals"))
-               for t in tasks]
+                     arrivals=t.get("arrivals"),
+                     replicas=t.get("replicas"),
+                     replica_speeds=t.get("replica_speeds"),
+                     where=f"tasks[{i}]")
+               for i, t in enumerate(tasks)]
 
     # One engine call per task, each sharding its own scenario axis across
     # the host devices: per-device state then stays small (cache-resident),
@@ -697,7 +982,9 @@ def sweep_scenarios(
                 deadline=p.c_max_out.copy(), orders=p.orders_out,
                 c_max=p.c_max_out, batch_idx=p.batch_out,
                 release=None if p.release is None
-                else np.zeros((p.S, 0))))
+                else np.zeros((p.S, 0)),
+                replica=np.full((p.S, 0, p.M), -1, dtype=np.int64),
+                replicas=p.repl_out.copy()))
         else:
             results.append(_run_task(p, I_max, bool(include_transfers),
                                      bool(init_phase), bool(adaptive)))

@@ -2,10 +2,11 @@
 # LLM request batches and continuous request streams (private pod replicas
 # + costed elastic overflow; rolling-horizon online mode).
 from .engine import Completion, InferenceEngine, Request
-from .hybrid import (HybridServingScheduler, OnlineReport,
-                     ServingLatencyModel, elastic_portfolio, plan_batch_jax,
-                     serving_dag)
+from .hybrid import (AutoscaleFrontier, HybridServingScheduler,
+                     OnlineReport, ServingLatencyModel, elastic_portfolio,
+                     pareto_mask, plan_batch_jax, serving_dag)
 
 __all__ = ["InferenceEngine", "Request", "Completion",
            "HybridServingScheduler", "ServingLatencyModel", "serving_dag",
-           "plan_batch_jax", "elastic_portfolio", "OnlineReport"]
+           "plan_batch_jax", "elastic_portfolio", "OnlineReport",
+           "AutoscaleFrontier", "pareto_mask"]

@@ -29,6 +29,15 @@ epoch's requests together, re-runs the ACD eviction sweep over every
 queue, and never migrates in-flight work (dispatch is final in both
 engines). SLA attainment is measured against the *true* arrival times,
 so admission delay counts against the SLA.
+
+``autoscale_frontier`` is the pod-sizing mode: replica counts are
+scenario *data* in the vector engine, so a whole grid of pool sizings x
+SLA deadlines (x optional straggler-speed configs) evaluates as one
+batched call, and the result is the cost/SLA Pareto frontier — total
+cost being elastic overflow spend plus the reserved pod
+(replica-seconds at a committed-use discount of the elastic rate). That is the serving
+analogue of the paper's Fig.-5 robustness story: how much pool does a
+target attainment need, and what does each extra replica buy.
 """
 from __future__ import annotations
 
@@ -217,6 +226,74 @@ class OnlineReport:
         }
 
 
+def pareto_mask(cost: np.ndarray, quality: np.ndarray) -> np.ndarray:
+    """Non-dominated mask: minimize ``cost``, maximize ``quality``.
+
+    Point ``s`` is dominated iff some point is no worse on both axes and
+    strictly better on at least one. Duplicate (cost, quality) points
+    all survive (neither strictly improves on the other).
+    """
+    cost = np.asarray(cost, dtype=np.float64)
+    quality = np.asarray(quality, dtype=np.float64)
+    better = ((cost[None, :] <= cost[:, None])
+              & (quality[None, :] >= quality[:, None])
+              & ((cost[None, :] < cost[:, None])
+                 | (quality[None, :] > quality[:, None])))
+    return ~better.any(axis=1)
+
+
+@dataclasses.dataclass
+class AutoscaleFrontier:
+    """One pod-sizing sweep: replica configs x deadlines, Pareto-tagged.
+
+    Scenario ``s`` ran replica config ``replicas[s]`` with scheduler
+    deadline ``c_max[s]``; ``sla`` is the fraction of requests finishing
+    within the *fixed* target ``sla_s`` (one per frontier call), so
+    every point measures the same promise and the (cost, sla) axes are
+    comparable across deadlines. ``total_usd = public_usd +
+    reserve_usd``: elastic overflow spend plus the reserved pod, priced
+    as replica-seconds of each stage's memory config over the serving
+    horizon (``max(makespan, c_max)``) at a committed-use fraction of
+    the elastic $/GB-ms rate. ``pareto`` marks the non-dominated
+    (total_usd, sla) points; ``frontier()`` returns their indices in
+    ascending-cost order. ``result`` keeps the full batched
+    :class:`VectorSimResult` (per-request times, placements, replica
+    assignments) for drill-down.
+    """
+
+    replicas: np.ndarray     # [S, M] per-scenario replica counts
+    c_max: np.ndarray        # [S] scheduler deadline knob
+    sla_s: float             # the fixed SLA target all points report on
+    sla: np.ndarray          # [S] fraction of requests meeting sla_s
+    public_usd: np.ndarray   # [S] elastic overflow spend (Eqn. 1)
+    reserve_usd: np.ndarray  # [S] reserved-pod cost over the horizon
+    total_usd: np.ndarray    # [S]
+    makespan: np.ndarray     # [S]
+    pareto: np.ndarray       # [S] bool: on the cost/SLA frontier
+    result: VectorSimResult
+
+    @property
+    def num_scenarios(self) -> int:
+        return int(self.total_usd.shape[0])
+
+    def frontier(self) -> np.ndarray:
+        """Indices of the non-dominated points, cheapest first."""
+        idx = np.flatnonzero(self.pareto)
+        return idx[np.argsort(self.total_usd[idx], kind="stable")]
+
+    def table(self) -> str:
+        """The frontier as an aligned text table (cheapest first)."""
+        lines = [f"{'replicas':>14} {'c_max s':>8} {'SLA':>6} "
+                 f"{'public $':>9} {'pod $':>9} {'total $':>9}"]
+        for s in self.frontier():
+            cfg = "x".join(str(int(c)) for c in self.replicas[s])
+            lines.append(
+                f"{cfg:>14} {self.c_max[s]:8.2f} {self.sla[s]:6.3f} "
+                f"{self.public_usd[s]:9.4f} {self.reserve_usd[s]:9.4f} "
+                f"{self.total_usd[s]:9.4f}")
+        return "\n".join(lines)
+
+
 class HybridServingScheduler:
     """Skedulix over a pod of serving replicas + elastic overflow."""
 
@@ -279,16 +356,83 @@ class HybridServingScheduler:
                        c_max_grid: Sequence[float],
                        orders: Sequence[str] = ("spt",), seed: int = 1,
                        use_ridge: bool = True,
-                       engine: str = "vector") -> VectorSimResult:
+                       engine: str = "vector",
+                       **sweep_kwargs) -> VectorSimResult:
         """Schedule the batch across a whole (order x SLA-deadline) grid.
 
         The serving twin of Fig. 4: one batched engine call instead of one
         DES replay per grid point; scenario ``s`` of the result is the
-        (orders[s], c_max[s]) schedule of the same request batch.
+        (orders[s], c_max[s]) schedule of the same request batch. Extra
+        keyword arguments (``replicas=``, ``replica_speeds=``,
+        ``arrivals=``) forward to
+        :meth:`.scheduler.SkedulixScheduler.schedule_sweep`.
         """
         pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
         return self.sched.schedule_sweep(
-            c_max_grid, pred=pred, act=act, orders=orders, engine=engine)
+            c_max_grid, pred=pred, act=act, orders=orders, engine=engine,
+            **sweep_kwargs)
+
+    def autoscale_frontier(self, prompt_len: np.ndarray,
+                           new_tokens: np.ndarray,
+                           replica_grid: Sequence,
+                           c_max_grid: Sequence[float],
+                           order: str = "spt", seed: int = 1,
+                           use_ridge: bool = True, engine: str = "vector",
+                           replica_speeds=None, sla_s: Optional[float] = None,
+                           reserve_rate_frac: float = 0.4,
+                           t0: float = 0.0) -> AutoscaleFrontier:
+        """Size the serving pod: sweep replica configs x deadlines in one
+        batched call and return the cost/SLA Pareto frontier.
+
+        ``replica_grid`` entries are per-stage replica count vectors [M]
+        (or bare ints, broadcast across stages); ``c_max_grid`` sweeps
+        the *scheduler's* deadline knob (a looser C_max offloads less —
+        cheaper, slower). Attainment is always measured against the one
+        fixed target ``sla_s`` (default: the tightest deadline of the
+        grid), so every point reports on the same promise and the
+        (cost, sla) axes stay comparable — measuring each scenario
+        against its own deadline would let "loose and idle" dominate
+        everything. Replica counts are scenario *data* in the vector
+        engine, so the whole ``configs x deadlines`` grid — ≥ 8 configs
+        x ≥ 4 deadlines is routine — runs as a single device call on one
+        compiled executable (``engine="des"`` replays it serially for
+        parity). ``replica_speeds`` adds a straggler axis (Fig.-5-style
+        degradation grids) swept in the same call.
+
+        Total cost per scenario = elastic overflow spend (Eqn. 1) + the
+        reserved pod: each stage-``k`` replica bills its memory config at
+        ``reserve_rate_frac`` of the elastic $/GB-ms rate over the
+        serving horizon ``max(makespan, c_max)`` — the committed-use
+        discount that makes pool sizing a real trade instead of
+        "more replicas always win".
+        """
+        M = self.dag.num_stages
+        # no int() coercion here: the core validator rejects fractional
+        # counts instead of silently truncating to a smaller pod
+        cfgs = [np.full(M, c) if np.ndim(c) == 0 else np.asarray(c)
+                for c in replica_grid]
+        pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
+        res = self.sched.schedule_sweep(
+            c_max_grid, pred=pred, act=act, orders=(order,), engine=engine,
+            replicas=cfgs, replica_speeds=replica_speeds, t0=t0)
+        sla_s = float(min(c_max_grid) if sla_s is None else sla_s)
+        rel = (np.full_like(res.completion, t0) if res.release is None
+               else res.release)
+        flow = res.completion - rel
+        sla = ((flow <= sla_s + 1e-9).mean(axis=1)
+               if flow.shape[1] else np.ones(res.num_scenarios))
+        # reserved pod: replica-seconds x memory config at the
+        # committed-use fraction of the elastic rate
+        rate_k = (self.dag.mem_mb / 1024.0) * (
+            self.cost_model.usd_per_gb_ms * 1e3) * float(reserve_rate_frac)
+        horizon = np.maximum(res.makespan, res.c_max)
+        reserve = (res.replicas * rate_k[None, :]).sum(axis=1) * horizon
+        total = res.cost_usd + reserve
+        return AutoscaleFrontier(
+            replicas=res.replicas, c_max=res.c_max, sla_s=sla_s, sla=sla,
+            public_usd=res.cost_usd, reserve_usd=reserve, total_usd=total,
+            makespan=res.makespan, pareto=pareto_mask(total, sla),
+            result=res)
 
     def serve_online(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
                      arrivals: ArrivalsLike, sla_s: float,

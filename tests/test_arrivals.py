@@ -24,7 +24,7 @@ from repro.serving.hybrid import serving_dag
 J = 17
 FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
           "n_offloaded_stages", "n_init_offloaded_jobs",
-          "per_stage_offloads", "provider", "release")
+          "per_stage_offloads", "provider", "release", "replica")
 
 PINNED_DAG = AppDAG(
     "pinned",

@@ -1,0 +1,117 @@
+"""Autoscaling frontier: pod-sizing sweeps on the replicas scenario axis.
+
+Covers ISSUE 4's serving acceptance criterion: ``autoscale_frontier``
+evaluates >= 8 replica configs x >= 4 deadlines in ONE batched vector
+call and returns a non-dominated cost/SLA set; the DES replays the same
+grid exactly; straggler-speed grids ride the same call.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.hybrid import (AutoscaleFrontier, HybridServingScheduler,
+                                  pareto_mask)
+
+
+class TestParetoMask:
+    def test_dominated_point_removed(self):
+        cost = np.array([1.0, 2.0, 3.0])
+        sla = np.array([0.5, 0.9, 0.8])   # point 2: pricier and worse
+        np.testing.assert_array_equal(pareto_mask(cost, sla),
+                                      [True, True, False])
+
+    def test_duplicates_survive(self):
+        m = pareto_mask(np.array([1.0, 1.0]), np.array([0.7, 0.7]))
+        assert m.all()
+
+    def test_strict_domination_on_one_axis(self):
+        # same SLA, higher cost -> dominated
+        m = pareto_mask(np.array([1.0, 2.0]), np.array([0.7, 0.7]))
+        np.testing.assert_array_equal(m, [True, False])
+
+    def test_frontier_is_mutually_non_dominating(self):
+        rng = np.random.default_rng(0)
+        cost = rng.uniform(0, 1, 64)
+        sla = rng.uniform(0, 1, 64)
+        idx = np.flatnonzero(pareto_mask(cost, sla))
+        c, s = cost[idx], sla[idx]
+        for i in range(len(idx)):
+            dom = ((c <= c[i]) & (s >= s[i])
+                   & ((c < c[i]) | (s > s[i])))
+            assert not dom.any()
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return HybridServingScheduler(get_config("llama3-8b"))
+
+
+@pytest.fixture(scope="module")
+def requests():
+    rng = np.random.default_rng(3)
+    return rng.integers(64, 4096, 32), rng.integers(32, 512, 32)
+
+
+REPLICA_GRID = [np.array([p, d, 1]) for p in (1, 2, 4) for d in (2, 4, 8)]
+C_MAX_GRID = (1.0, 2.0, 4.0, 8.0)
+
+
+class TestAutoscaleFrontier:
+    def test_grid_shape_and_nondominated(self, sched, requests):
+        """9 configs x 4 deadlines in one batched call; the frontier is a
+        mutually non-dominating subset measured against one fixed SLA."""
+        plen, ntok = requests
+        fr = sched.autoscale_frontier(plen, ntok, REPLICA_GRID, C_MAX_GRID,
+                                      use_ridge=False)
+        assert isinstance(fr, AutoscaleFrontier)
+        assert fr.num_scenarios == len(REPLICA_GRID) * len(C_MAX_GRID)
+        assert fr.sla_s == min(C_MAX_GRID)
+        assert fr.pareto.any()
+        np.testing.assert_allclose(fr.total_usd,
+                                   fr.public_usd + fr.reserve_usd)
+        idx = fr.frontier()
+        assert (np.diff(fr.total_usd[idx]) >= 0).all()
+        # frontier points are mutually non-dominating and SLA-sorted too:
+        # costlier frontier points buy strictly more attainment
+        assert (np.diff(fr.sla[idx]) >= 0).all()
+        assert len(fr.table().splitlines()) == len(idx) + 1
+
+    def test_engines_agree(self, sched, requests):
+        plen, ntok = requests
+        kw = dict(use_ridge=False)
+        v = sched.autoscale_frontier(plen, ntok, REPLICA_GRID[:4],
+                                     C_MAX_GRID, **kw)
+        d = sched.autoscale_frontier(plen, ntok, REPLICA_GRID[:4],
+                                     C_MAX_GRID, engine="des", **kw)
+        np.testing.assert_allclose(v.total_usd, d.total_usd,
+                                   rtol=1e-9, atol=1e-12)
+        np.testing.assert_array_equal(v.sla, d.sla)
+        np.testing.assert_array_equal(v.pareto, d.pareto)
+        np.testing.assert_array_equal(v.replicas, d.replicas)
+
+    def test_bigger_pod_never_attains_less_at_fixed_knob(self, sched,
+                                                         requests):
+        """Within one (deadline, speeds) slice, scaling every stage's pool
+        up cannot reduce the number of privately-served requests' SLA...
+        asserted weakly: the best attainment over deadlines is monotone in
+        uniformly-scaled pool size."""
+        plen, ntok = requests
+        grid = [np.array([i, 2 * i, i]) for i in (1, 2, 4)]
+        fr = sched.autoscale_frontier(plen, ntok, grid, C_MAX_GRID,
+                                      use_ridge=False)
+        best = [fr.sla[(fr.replicas[:, 0] == i)].max() for i in (1, 2, 4)]
+        assert best[0] <= best[1] + 1e-12 <= best[2] + 2e-12
+
+    def test_straggler_axis_rides_along(self, sched, requests):
+        """A replica_speeds grid multiplies the scenario axis in the same
+        batched call; stragglers can only lower attainment or raise cost
+        on the degenerate single-config slice."""
+        plen, ntok = requests
+        slow = {(1, 0): 4.0}  # decode replica 0 is 4x slow
+        fr = sched.autoscale_frontier(
+            plen, ntok, [np.array([2, 4, 2])], C_MAX_GRID,
+            replica_speeds=[None, slow], use_ridge=False)
+        assert fr.num_scenarios == len(C_MAX_GRID) * 2
+        healthy, degraded = fr.sla[0::2], fr.sla[1::2]
+        assert (degraded <= healthy + 1e-12).all()
+        assert (fr.makespan[1::2] >= fr.makespan[0::2] - 1e-9).all()

@@ -174,6 +174,69 @@ class TestSimulatorProperties:
 _SINGLE_SERVER = AppDAG("single", (Stage("s", replicas=1),), ())
 
 
+class TestReplicaMonotonicityProperties:
+    """Adding a replica to a stage never hurts — asserted on both engines
+    via the ``replicas=`` scenario axis, in the regimes where
+    work-conservation monotonicity is a theorem.
+
+    Makespan: list-scheduling *independent* jobs (one stage, fixed
+    priority list, no offloading) on I identical replicas — each job's
+    dispatch time is an order statistic of earlier completions, which is
+    pointwise monotone in the machine count. Precedence or eviction
+    would reopen Graham-style anomalies, so the offload paths are off.
+
+    Public cost: with the ACD disabled, the only public placements come
+    from the capacity-prefix initialization offload; an extra replica
+    grows ``T_max = Σ I_k · C_max``, the kept prefix extends, and the
+    offloaded set (and its nonnegative billed sum) can only shrink —
+    true on any DAG.
+    """
+
+    @given(st.lists(f_lat, min_size=8, max_size=8),
+           st.integers(min_value=1, max_value=3),
+           st.floats(min_value=0.0, max_value=10.0))
+    @settings(max_examples=25, deadline=None)
+    def test_makespan_monotone_in_replicas(self, works, I, spread):
+        from repro.core.vectorsim import simulate_scenarios
+        J = len(works)
+        rel = np.linspace(0.0, spread, J)  # staggered, tie-free releases
+        P = np.array(works)[:, None]
+        pred = dict(P_private=P, P_public=P)
+        dag = AppDAG("pool", (Stage("s", replicas=I),), ())
+        kw = dict(c_max_grid=(1e6,), orders=("spt",), arrivals=rel,
+                  include_transfers=False, init_phase=False,
+                  adaptive=False, replicas=[[I], [I + 1]])
+        for engine in ("vector", "des"):
+            r = simulate_scenarios(dag, pred, engine=engine, **kw)
+            assert r.makespan[1] <= r.makespan[0] + 1e-9, engine
+
+    @given(st.lists(f_lat, min_size=8, max_size=8),
+           st.integers(min_value=0, max_value=3),
+           st.floats(min_value=0.1, max_value=0.9),
+           st.integers(min_value=0, max_value=10**6))
+    @settings(max_examples=25, deadline=None)
+    def test_public_cost_monotone_in_replicas(self, works, stage, frac,
+                                              seed):
+        from repro.core import video_app
+        from repro.core.vectorsim import simulate_scenarios
+        rng = np.random.default_rng(seed)
+        dag = video_app(replicas=1)
+        J, M = len(works), dag.num_stages
+        P = np.array(works)[:, None] * rng.uniform(0.5, 1.5, (J, M))
+        pred = dict(P_private=P, P_public=P * rng.uniform(0.5, 2.0, (J, M)))
+        base = np.ones(M, dtype=int)
+        plus = base.copy()
+        plus[stage] += 1
+        kw = dict(c_max_grid=(float(P.sum()) * frac / M,), orders=("spt",),
+                  include_transfers=False, init_phase=True, adaptive=False,
+                  replicas=[base, plus])
+        for engine in ("vector", "des"):
+            r = simulate_scenarios(dag, pred, engine=engine, **kw)
+            assert r.cost_usd[1] <= r.cost_usd[0] + 1e-12, engine
+            assert (r.n_init_offloaded_jobs[1]
+                    <= r.n_init_offloaded_jobs[0]), engine
+
+
 class TestArrivalStreamProperties:
     """Invariants of the exogenous-arrival extension (core/arrivals.py)."""
 

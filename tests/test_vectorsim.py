@@ -16,7 +16,7 @@ from repro.serving.hybrid import serving_dag
 J = 17
 FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
           "n_offloaded_stages", "n_init_offloaded_jobs",
-          "per_stage_offloads", "provider")
+          "per_stage_offloads", "provider", "replica")
 
 PINNED_DAG = AppDAG(
     "pinned",
@@ -132,9 +132,144 @@ def test_vector_engine_rejects_unsupported():
     dag = APPS["matrix"]
     pred, act = workload(dag, 4, 0)
     with pytest.raises(ValueError):
-        simulate(dag, pred, act, engine="vector",
-                 replica_slowdown={(0, 0): 2.0})
-    with pytest.raises(ValueError):
         simulate_scenarios(dag, pred, act, t0=-1.0)
     with pytest.raises(ValueError):
         simulate(dag, pred, act, engine="warp")
+
+
+@pytest.mark.parametrize("engine", ["vector", "des"])
+def test_validation_names_offending_axis(engine):
+    """Malformed sweep inputs fail fast, naming the bad entry/axis —
+    not as a shape error from deep inside the batched engine."""
+    dag = APPS["matrix"]
+    pred, act = workload(dag, 8, 0)
+    bad_act = dict(act, P_public=act["P_public"][:5])
+    with pytest.raises(ValueError, match=r"act\['P_public'\]"):
+        simulate_scenarios(dag, pred, bad_act, engine=engine)
+    bad_batch = dict(act, P_public=np.broadcast_to(
+        act["P_public"], (3,) + act["P_public"].shape),
+        P_private=np.broadcast_to(
+        act["P_private"], (2,) + act["P_private"].shape))
+    with pytest.raises(ValueError, match="batch axis"):
+        simulate_scenarios(dag, pred, bad_batch, engine=engine)
+    with pytest.raises(ValueError, match=r"replicas\[1\]"):
+        simulate_scenarios(dag, pred, act, engine=engine,
+                           replicas=[[2, 2], [2, 2, 2]])
+    with pytest.raises(ValueError, match=r"replicas\[0\]"):
+        simulate_scenarios(dag, pred, act, engine=engine,
+                           replicas=[[0, 2]])
+    with pytest.raises(ValueError, match=r"replica_speeds\[0\]"):
+        simulate_scenarios(dag, pred, act, engine=engine,
+                           replica_speeds=[{(0, 0): -1.0}])
+    with pytest.raises(ValueError, match=r"replica_speeds\[1\]"):
+        simulate_scenarios(dag, pred, act, engine=engine,
+                           replica_speeds=[None, {(9, 0): 2.0}])
+    # acceptance must not depend on the sweep's replica bound: a bad
+    # factor on a slot absent at this I_max still rejects on both engines
+    with pytest.raises(ValueError, match="finite and > 0"):
+        simulate_scenarios(dag, pred, act, engine=engine,
+                           replica_speeds=[{(0, 7): -1.0}])
+    with pytest.raises(ValueError, match=r"\(stage, replica\) pairs"):
+        simulate_scenarios(dag, pred, act, engine=engine,
+                           replica_speeds=[{"a0": 2.0}])
+    with pytest.raises(ValueError, match="tasks\\[1\\]"):
+        sweep_scenarios([
+            dict(dag=dag, pred=pred, act=act),
+            dict(dag=dag, pred=pred, act=bad_act)])
+    # the DES shares the vector engine's slowdown validation: a negative
+    # factor must not silently schedule end < start
+    with pytest.raises(ValueError, match="finite and > 0"):
+        simulate(dag, pred, act, engine=engine if engine != "vector"
+                 else "des", replica_slowdown={(0, 0): -2.0})
+    with pytest.raises(ValueError, match="out of range"):
+        simulate(dag, pred, act, engine="des",
+                 replica_slowdown={(99, 0): 2.0})
+
+
+@pytest.mark.parametrize("engine", ["vector", "des"])
+def test_replica_axis_accepts_generators(engine):
+    """One-shot iterators on the replicas axis are materialized, not
+    silently exhausted into an empty grid."""
+    dag = APPS["matrix"]
+    pred, act = workload(dag, 8, 0)
+    kw = dict(c_max_grid=grid_for(dag, pred)[:1], orders=("spt",))
+    lst = simulate_scenarios(dag, pred, act, **kw,
+                             replicas=[[2, 2], [3, 1]], engine=engine)
+    gen = simulate_scenarios(dag, pred, act, **kw,
+                             replicas=iter([[2, 2], [3, 1]]), engine=engine)
+    assert gen.num_scenarios == 2
+    np.testing.assert_array_equal(gen.replicas, lst.replicas)
+    np.testing.assert_array_equal(gen.makespan, lst.makespan)
+
+
+def straggler_cfg(dag, factor=3.0):
+    """Slow down replica 0 of every stage (a Fig.-5-style injection)."""
+    return {(k, 0): factor for k in range(dag.num_stages)}
+
+
+@pytest.mark.parametrize("dag", [APPS["video"], APPS["matrix"], PINNED_DAG],
+                         ids=lambda d: d.name)
+def test_straggler_injection_matches_des(dag):
+    """engine="vector" accepts replica_slowdown and reproduces the DES
+    exactly — including the per-(job, stage) replica *assignment*, the
+    regression rail for the deterministic lowest-index-free tie-break."""
+    pred, act = workload(dag, J, 8)
+    slow = straggler_cfg(dag)
+    kw = dict(c_max=grid_for(dag, pred)[1], order="spt",
+              replica_slowdown=slow)
+    v = simulate(dag, pred, act, engine="vector", **kw)
+    d = simulate(dag, pred, act, engine="des", **kw)
+    assert v.replica is not None and d.replica is not None
+    np.testing.assert_array_equal(v.replica, d.replica)
+    assert np.isclose(v.makespan, d.makespan)
+    assert np.isclose(v.cost_usd, d.cost_usd)
+    np.testing.assert_allclose(v.start, d.start, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(v.end, d.end, rtol=1e-9, atol=1e-9)
+    assert (v.public_mask == d.public_mask).all()
+    # the injection binds: replica 0 jobs run factor x their draw
+    priv0 = (~v.public_mask) & (v.replica == 0)
+    if priv0.any():
+        dur = (v.end - v.start)[priv0]
+        np.testing.assert_allclose(dur, (act["P_private"] * 3.0)[priv0],
+                                   rtol=1e-9)
+    # and degrades the schedule vs the healthy run
+    healthy = simulate(dag, pred, act, engine="vector",
+                       c_max=kw["c_max"], order="spt")
+    assert v.makespan >= healthy.makespan - 1e-9
+
+
+def test_replica_axes_sweep_matches_des():
+    """replicas x replica_speeds scenario axes: the batched grid equals
+    the DES replay (dag.with_replicas + replica_slowdown), field for
+    field, across heterogeneous pool shapes and straggler grids."""
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 9)
+    kw = dict(
+        c_max_grid=grid_for(dag, pred, (0.4, 0.9)), orders=("spt",),
+        replicas=[[1, 2, 3, 1], [2, 2, 2, 2], [4, 1, 1, 4]],
+        replica_speeds=[None, straggler_cfg(dag, 2.5),
+                        np.full((dag.num_stages, 2), 1.5)])
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert v.num_scenarios == 2 * 3 * 3
+    np.testing.assert_array_equal(v.replicas, d.replicas)
+    assert_equivalent(v, d)
+    # straggler scenarios must genuinely differ from their healthy twins
+    assert not np.allclose(v.makespan[0::3], v.makespan[1::3])
+
+
+def test_degenerate_replica_axes_bit_exact():
+    """A one-point replicas/speeds axis at the DAG's own healthy pools is
+    the pre-refactor path, bit for bit."""
+    dag = APPS["image"]
+    pred, act = workload(dag, J, 10)
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"))
+    base = simulate_scenarios(dag, pred, act, **kw)
+    one = simulate_scenarios(
+        dag, pred, act, **kw, replicas=[dag.replicas],
+        replica_speeds=[None])
+    for fld in ("makespan", "cost_usd", "completion", "start", "end",
+                "replica", "provider"):
+        a = np.nan_to_num(np.asarray(getattr(base, fld), float), nan=-1.0)
+        b = np.nan_to_num(np.asarray(getattr(one, fld), float), nan=-1.0)
+        np.testing.assert_array_equal(a, b, err_msg=f"field {fld}")
