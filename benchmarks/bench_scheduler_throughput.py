@@ -29,10 +29,19 @@ grows a ``replicas=`` scenario axis of N per-stage pool sizings
 (deterministic per-app draws in 1..4), multiplying the grid N-fold —
 the batched pod-sizing workload behind ``autoscale_frontier``. Replica
 counts are scenario *data* in the vector engine (one executable per
-(M, I_max, J, P, flags) shape family), so the N-fold grid is still one
-device call per app; the DES replays it serially. des/vector
+(M, I_max, J, P, S, flags) shape family), so the N-fold grid is still
+one device call per app; the DES replays it serially. des/vector
 checksum-checked; the frozen seed DES predates replica-as-data and sits
 it out. CI's smoke run passes ``--replica-sweep 8``.
+
+``--price-traces N`` adds a time-dependent-pricing point: each app's
+sweep grows a ``price_traces=`` scenario axis of N portfolio pricings —
+a spot-market trace family per app (``spot_portfolio``, deterministic
+per-(app, variant) seeds, 6 segments over the deadline horizon) — so
+the grid multiplies N-fold and every offload is priced at its offload
+epoch (segment-indexed [P, S, J, M] billing data, same executable).
+des/vector checksum-checked; the seed DES predates portfolios and sits
+it out. CI's smoke run passes ``--price-traces 4``.
 
 Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
 absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
@@ -116,9 +125,9 @@ def run_serial(tasks, sim_fn, portfolio=None):
 def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector"):
     """Whole-sweep runner: one batched call per app on ``vector``, a
     serial scenario-grid replay on ``des`` (the path that understands the
-    ``replicas=`` axis)."""
+    ``replicas=``/``price_traces=`` axes)."""
     keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals",
-            "replicas")
+            "replicas", "price_traces")
     calls = [{k: t[k] for k in keys if t.get(k) is not None} for t in tasks]
     if warm and engine == "vector":  # compile outside the timed region
         sweep_scenarios(calls, portfolio=portfolio)
@@ -155,8 +164,23 @@ def attach_replicas(tasks, n_cfgs: int):
     return tasks
 
 
+def attach_price_traces(tasks, n_traces: int, providers: int):
+    """Give each app a ``price_traces=`` axis of ``n_traces`` spot-market
+    pricings of the portfolio (6-segment walks over the app's deadline
+    horizon, deterministic per-(app, variant) seeds)."""
+    from repro.core.cost import spot_portfolio
+
+    for ai, t in enumerate(tasks):
+        horizon = float(max(t["c_max_grid"]))
+        t["price_traces"] = [
+            spot_portfolio(providers, num_segments=6, horizon_s=horizon,
+                           seed=1000 + 31 * ai + v)
+            for v in range(n_traces)]
+    return tasks
+
+
 def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
-                  arrivals=None, replica_sweep=None):
+                  arrivals=None, replica_sweep=None, price_traces=None):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
@@ -165,6 +189,11 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
         tasks = attach_arrivals(tasks, arrivals)
     if replica_sweep is not None:
         tasks = attach_replicas(tasks, replica_sweep)
+    if price_traces is not None:
+        if portfolio is None:
+            raise ValueError("--price-traces needs a portfolio")
+        tasks = attach_price_traces(tasks, price_traces,
+                                    portfolio.num_providers)
     point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
              "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
     if portfolio is not None:
@@ -173,6 +202,8 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
         point["arrivals"] = arrivals
     if replica_sweep is not None:
         point["replica_configs"] = replica_sweep
+    if price_traces is not None:
+        point["price_traces"] = price_traces
     checks = {}
     for eng in engines:
         if eng == "seed":
@@ -184,7 +215,7 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                 raise ValueError("the frozen seed DES has no replica axis")
             dt, chk, n = run_serial(tasks, simulate_seed)
         elif eng == "des":
-            if replica_sweep is not None:
+            if replica_sweep is not None or price_traces is not None:
                 dt, chk, n = run_vector(tasks, portfolio=portfolio,
                                         engine="des")
             else:
@@ -230,6 +261,10 @@ def main(argv=None):
                     help="add a replica-autoscaling point: N pool sizings "
                          "per app batched on the scenario axis "
                          "(des/vector engines)")
+    ap.add_argument("--price-traces", type=int, default=None, metavar="N",
+                    help="add a time-dependent-pricing point: N spot-market "
+                         "pricings of the portfolio per app batched on the "
+                         "scenario axis (des/vector engines)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
@@ -262,6 +297,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(64, ("des", "vector"),
                               replica_sweep=args.replica_sweep))
+        if args.price_traces:
+            print(f"smoke: J=64, {args.price_traces}-trace spot-pricing "
+                  "sweep, des+vector")
+            report["points"].append(
+                measure_point(64, ("des", "vector"), portfolio=pf,
+                              price_traces=args.price_traces))
     else:
         print("sweep 3 apps x 2 orders x 5 deadlines:")
         report["points"].append(
@@ -282,6 +323,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(512, ("des", "vector"),
                               replica_sweep=args.replica_sweep))
+        if args.price_traces:
+            print(f"spot-pricing sweep ({args.price_traces} trace "
+                  "families/app, des/vector only):")
+            report["points"].append(
+                measure_point(512, ("des", "vector"), portfolio=pf,
+                              price_traces=args.price_traces))
         # large-J: seed is O(J^2 log J); one deadline keeps it bounded
         print("large-J point (1 deadline per app/order):")
         report["points"].append(

@@ -16,6 +16,10 @@ Layout (one module per concern):
     Public-cloud billing (Eqn. 1): scalar :class:`CostModel` and the
     multi-provider :class:`ProviderPortfolio` (per-provider quantum, rate,
     egress, latency multiplier, memory cap; cheapest-feasible placement).
+    :class:`PriceTrace` makes rate/egress/latency piecewise-constant over
+    simulated time (spot markets via :func:`spot_portfolio`, tariffs via
+    :func:`diurnal_portfolio`); placement then locks its (provider, price
+    segment) at the offload epoch.
 ``arrivals``
     Exogenous release streams (:class:`PoissonArrivals`,
     :class:`MMPPArrivals`, :class:`TraceArrivals`) generalizing the
@@ -44,8 +48,10 @@ Layout (one module per concern):
 from .arrivals import (ArrivalProcess, BatchArrivals, MMPPArrivals,
                        PoissonArrivals, TraceArrivals, parse_arrivals,
                        resolve_release)
-from .cost import (CostModel, LAMBDA_COST, Provider, ProviderPortfolio,
-                   as_portfolio, demo_portfolio, lambda_cost, stage_costs)
+from .cost import (CostModel, LAMBDA_COST, PriceTrace, Provider,
+                   ProviderPortfolio, as_portfolio, demo_portfolio,
+                   diurnal_portfolio, lambda_cost, scaled_portfolio,
+                   spot_portfolio, stage_costs)
 from .dag import APPS, AppDAG, Stage, image_app, matrix_app, video_app
 from .greedy import (acd_sweep, acd_sweep_jax, init_offload, init_offload_jax,
                      offload_negative_acd, select_provider,
@@ -62,7 +68,9 @@ from .vectorsim import VectorSimResult, simulate_scenarios, sweep_scenarios
 __all__ = [
     "AppDAG", "Stage", "APPS", "matrix_app", "video_app", "image_app",
     "CostModel", "LAMBDA_COST", "lambda_cost", "stage_costs",
-    "Provider", "ProviderPortfolio", "as_portfolio", "demo_portfolio",
+    "PriceTrace", "Provider", "ProviderPortfolio", "as_portfolio",
+    "demo_portfolio", "spot_portfolio", "diurnal_portfolio",
+    "scaled_portfolio",
     "ArrivalProcess", "BatchArrivals", "TraceArrivals", "PoissonArrivals",
     "MMPPArrivals", "parse_arrivals", "resolve_release",
     "init_offload", "init_offload_jax", "acd_sweep", "acd_sweep_jax",

@@ -3,13 +3,19 @@
 * :func:`solve_milp` — the appendix MILP (Eqns. 2-16) built verbatim and
   handed to scipy's HiGHS branch-and-cut (the paper used Gurobi). Used for
   the Fig.-3 "optimal vs greedy" comparison at small job counts. Placement
-  is provider-indexed: binary ``g_{j,k,p}`` puts (job, stage) on public
-  provider p (with its own billed cost and latency multiplier), so the
-  optimal baseline stays comparable to the greedy portfolio scheduler; a
-  single-provider portfolio reduces to the paper's e/(1-e) formulation.
-  Provider-dependent *edge* transfer latencies enter the precedence rows
-  through the portfolio's fastest multiplier (a relaxation — the bound
-  stays a true lower bound); sink downloads are provider-exact.
+  is provider- **and segment-** indexed: binary ``g_{j,k,p,s}`` puts
+  (job, stage) on public provider p billed in price segment s of the
+  provider's :class:`.cost.PriceTrace` (static providers have one
+  segment, recovering the PR-2 ``g_{j,k,p}`` model, which itself reduces
+  to the paper's e/(1-e) formulation for one provider). Big-M window rows
+  tie a chosen segment to the stage's start time — relaxed by the
+  provider's upload latency, since the simulator locks the segment at the
+  *offload epoch* (before upload), so the constraint never cuts a
+  schedule the greedy engines could execute and the optimum stays a true
+  lower bound. Provider-dependent *edge* transfer latencies enter the
+  precedence rows through the portfolio's fastest multiplier, and
+  cross-provider cascade egress is not charged (both relaxations — the
+  bound only loosens); sink downloads are (provider, segment)-exact.
 * :func:`johnson_makespan` — exact F2||Cmax makespan (Johnson's rule) for
   2-stage/1-replica all-private instances; a simulator ground truth.
 * :func:`knapsack_lower_bound` — the appendix "special case": with one
@@ -38,6 +44,7 @@ class MilpResult:
     mip_gap: float
     objective_bound: float      # best provable lower bound on public cost
     provider: Optional[np.ndarray] = None  # [J, M] -1 private, else index
+    segment: Optional[np.ndarray] = None   # [J, M] -1 private, else price segment
 
 
 def solve_milp(
@@ -53,13 +60,18 @@ def solve_milp(
     mip_rel_gap: float = 1e-3,
     portfolio: Optional[ProviderPortfolio] = None,
 ) -> MilpResult:
-    """Build and solve the appendix MILP, provider-indexed.
+    """Build and solve the appendix MILP, provider- and segment-indexed.
 
-    Decision vars: start times s_{k,j}; e_{k,j} (1=private); provider
-    placement g_{k,j,p} (1 = public on provider p, with e + sum_p g = 1);
-    replica assignment x^i_{k,j}; pair orders y^r_{k,j}; transfer
-    indicators u_{k,j}, d_{k,j}. Objective (2), portfolio form: minimize
-    the billed public cost  sum g_{k,j,p} * H_p[j,k].
+    Decision vars: start times s_{k,j}; e_{k,j} (1=private); placement
+    g_{k,j,p,s} (1 = public on provider p billed in price segment s, with
+    e + sum_{p,s} g = 1); replica assignment x^i_{k,j}; pair orders
+    y^r_{k,j}; transfer indicators u_{k,j}, d_{k,j}. Objective (2),
+    portfolio form: minimize the billed public cost
+    sum g_{k,j,p,s} * H[p,s,j,k]. Segment windows are big-M rows relaxed
+    by the provider's upload latency (the simulator locks the segment at
+    the offload epoch, i.e. before upload), so the bound stays valid for
+    every executable schedule; a static portfolio has one segment per
+    provider and the rows vanish.
     """
     P_priv = np.asarray(P_private, dtype=np.float64)
     P_pub = np.asarray(P_public, dtype=np.float64)
@@ -68,13 +80,18 @@ def solve_milp(
     D = np.zeros((J, M)) if download is None else np.asarray(download, dtype=np.float64)
     pf = as_portfolio(portfolio, cost_model)
     nP = pf.num_providers
+    nS = pf.num_segments
     sink_mask = dag.is_sink if include_sink_download else None
-    H_p = pf.np_stage_costs(P_pub, dag.mem_mb,
-                            D if include_sink_download else None,
-                            sink_mask)                         # [P, J, M]
+    H_ps = pf.np_stage_costs_seg(P_pub, dag.mem_mb,
+                                 D if include_sink_download else None,
+                                 sink_mask)                    # [P, S, J, M]
     feas = pf.feasible_mask(dag.mem_mb,
                             require=~dag.must_private_mask)    # [P, M]
-    lat = pf.latency_mults                                     # [P]
+    lat = pf.latency_mults_seg()                               # [P, S]
+    edges = pf.segment_edges()                                 # [P, S]
+    seg_lo = edges                                             # [P, S]
+    seg_hi = np.concatenate([edges[:, 1:],
+                             np.full((nP, 1), np.inf)], axis=1)
     # provider-dependent transfer latency on DAG edges would need
     # provider-indexed u/d indicators; the fastest multiplier keeps those
     # rows a relaxation (never over-constrains), so the optimum stays a
@@ -94,7 +111,7 @@ def solve_milp(
         return lo
     s0 = _block(J * M)
     e0 = _block(J * M)
-    g0 = _block(J * M * nP)
+    g0 = _block(J * M * nP * nS)
     x_index: Dict[Tuple[int, int, int], int] = {}
     for k in range(M):
         for j in range(J):
@@ -110,7 +127,7 @@ def solve_milp(
     n_var = idx
     S = lambda j, k: s0 + j * M + k
     E = lambda j, k: e0 + j * M + k
-    G = lambda j, k, p: g0 + (j * M + k) * nP + p
+    G = lambda j, k, p, s: g0 + ((j * M + k) * nP + p) * nS + s
     Uv = lambda j, k: u0 + j * M + k
     Dv = lambda j, k: d0 + j * M + k
 
@@ -126,20 +143,22 @@ def solve_milp(
     sources = set(dag.sources())
     for j in range(J):
         for k in range(M):
-            # placement partition: e + sum_p g_p = 1
+            # placement partition: e + sum_{p,s} g = 1
             coef = {E(j, k): 1.0}
             for p in range(nP):
-                coef[G(j, k, p)] = 1.0
+                for s in range(nS):
+                    coef[G(j, k, p, s)] = 1.0
             _con(coef, 1.0, 1.0)
-            # (3) deadline: s + Ppriv*e + sum_p (latmult_p*Ppub
-            #     [+ latmult_p*Ddl at sinks]) * g_p <= Cmax
+            # (3) deadline: s + Ppriv*e + sum_{p,s} (latmult_ps*Ppub
+            #     [+ latmult_ps*Ddl at sinks]) * g_ps <= Cmax
             is_sink_dl = include_sink_download and k in sinks
             coef = {S(j, k): 1.0, E(j, k): P_priv[j, k]}
             for p in range(nP):
-                dur = lat[p] * P_pub[j, k]
-                if is_sink_dl:
-                    dur += lat[p] * D[j, k]
-                coef[G(j, k, p)] = dur
+                for s in range(nS):
+                    dur = lat[p, s] * P_pub[j, k]
+                    if is_sink_dl:
+                        dur += lat[p, s] * D[j, k]
+                    coef[G(j, k, p, s)] = dur
             _con(coef, -np.inf, c_max)
             # (5) sum_i x = e
             coef = {E(j, k): -1.0}
@@ -151,8 +170,28 @@ def solve_milp(
             if k in sources:
                 coef = {S(j, k): 1.0}
                 for p in range(nP):
-                    coef[G(j, k, p)] = -lat[p] * U[j, k]
+                    for s in range(nS):
+                        coef[G(j, k, p, s)] = -lat[p, s] * U[j, k]
                 _con(coef, 0.0, np.inf)
+            # segment windows: g_{j,k,p,s} = 1 pins the *offload epoch*
+            # (= start minus upload) inside segment s. Lower: the start
+            # can be no earlier than the segment's opening (s_jk >= lo*g,
+            # vacuous for lo <= 0). Upper: the epoch precedes the next
+            # breakpoint, so s_jk <= hi + latmult*U + Q*(1 - g) — the
+            # upload slack keeps every executable schedule feasible
+            # (a relaxation; both rows vanish for 1-segment providers).
+            # Segments ending at hi < 0 lie entirely in the past — no
+            # epoch (>= 0) can land there, so g is fixed to 0 below
+            # instead of emitting a row whose big-M could not cover |hi|.
+            for p in range(nP):
+                for s in range(nS):
+                    lo, hi = seg_lo[p, s], seg_hi[p, s]
+                    if np.isfinite(lo) and lo > 0.0:
+                        _con({S(j, k): 1.0, G(j, k, p, s): -lo},
+                             0.0, np.inf)
+                    if np.isfinite(hi) and hi >= 0.0:
+                        _con({S(j, k): 1.0, G(j, k, p, s): Q},
+                             -np.inf, hi + lat[p, s] * U[j, k] + Q)
     # (4) precedence + transfer latencies along edges
     for j in range(J):
         for (p, q) in dag.edges:
@@ -161,7 +200,8 @@ def solve_milp(
                     Uv(j, p): -min_lat * U[j, p],
                     Dv(j, p): -min_lat * D[j, p]}
             for pi in range(nP):
-                coef[G(j, p, pi)] = -lat[pi] * P_pub[j, p]
+                for s in range(nS):
+                    coef[G(j, p, pi, s)] = -lat[pi, s] * P_pub[j, p]
             _con(coef, 0.0, np.inf)
     # (6),(7) replica sequencing
     for k in range(M):
@@ -197,7 +237,9 @@ def solve_milp(
             _con(c10, -np.inf, BIG - 0.001)
             c11 = dict(xcoef); c11[Dv(j, p)] = c11.get(Dv(j, p), 0.0) + BIG
             _con(c11, 0.0, np.inf)
-    # (12) privacy pins + provider feasibility (memory caps)
+    # (12) privacy pins + provider feasibility (memory caps; padded
+    # segments — ``+inf`` opening edge — and segments that end before
+    # t=0 — no offload epoch can land in the past — can never activate)
     lb = np.zeros(n_var)
     ub = np.ones(n_var)
     ub[s0:s0 + J * M] = np.inf  # s >= 0 free above
@@ -206,16 +248,19 @@ def solve_milp(
             if dag.stages[k].must_private:
                 lb[E(j, k)] = 1.0
             for p in range(nP):
-                if not feas[p, k]:
-                    ub[G(j, k, p)] = 0.0
+                for s in range(nS):
+                    if not feas[p, k] or seg_lo[p, s] == np.inf \
+                            or seg_hi[p, s] < 0.0:
+                        ub[G(j, k, p, s)] = 0.0
 
     # objective (2), portfolio form: minimize the billed public cost
-    # sum g * H_p (== maximizing the saved cost over any fixed provider)
+    # sum g * H[p,s] (== maximizing the saved cost over any fixed provider)
     c = np.zeros(n_var)
     for j in range(J):
         for k in range(M):
             for p in range(nP):
-                c[G(j, k, p)] = H_p[p, j, k]
+                for s in range(nS):
+                    c[G(j, k, p, s)] = H_ps[p, s, j, k]
 
     A = sp.lil_matrix((len(rows), n_var))
     for r, coef in enumerate(rows):
@@ -237,13 +282,16 @@ def solve_milp(
                           cost_usd=float("inf"), e=np.zeros((J, M)),
                           s=np.zeros((J, M)), mip_gap=float("inf"),
                           objective_bound=0.0,
-                          provider=np.full((J, M), -1, dtype=np.int64))
+                          provider=np.full((J, M), -1, dtype=np.int64),
+                          segment=np.full((J, M), -1, dtype=np.int64))
     x = np.asarray(res.x)
     e = np.rint(x[e0:e0 + J * M].reshape(J, M))
     s = x[s0:s0 + J * M].reshape(J, M)
-    g = np.rint(x[g0:g0 + J * M * nP].reshape(J, M, nP))
-    provider = np.where(e > 0.5, -1, np.argmax(g, axis=2)).astype(np.int64)
-    cost = float((g * np.moveaxis(H_p, 0, 2)).sum())
+    g = np.rint(x[g0:g0 + J * M * nP * nS].reshape(J, M, nP, nS))
+    flat = np.argmax(g.reshape(J, M, nP * nS), axis=2)
+    provider = np.where(e > 0.5, -1, flat // nS).astype(np.int64)
+    segment = np.where(e > 0.5, -1, flat % nS).astype(np.int64)
+    cost = float((g * np.moveaxis(H_ps, (0, 1), (2, 3))).sum())
     # a dual bound of exactly 0.0 is a legitimate proof state (public cost
     # >= 0 always holds) — only fall back to the incumbent when HiGHS
     # reports no bound at all
@@ -252,7 +300,7 @@ def solve_milp(
         status=int(res.status), feasible=True, cost_usd=cost,
         e=e, s=s, mip_gap=float(getattr(res, "mip_gap", 0.0) or 0.0),
         objective_bound=float(res.fun if bound is None else bound),
-        provider=provider)
+        provider=provider, segment=segment)
 
 
 def johnson_makespan(P: np.ndarray) -> float:

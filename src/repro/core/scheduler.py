@@ -134,6 +134,7 @@ class SkedulixScheduler:
         arrivals: ArrivalsLike = None,
         replicas=None,
         replica_speeds=None,
+        price_traces=None,
         **sim_kwargs,
     ) -> VectorSimResult:
         """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
@@ -148,10 +149,13 @@ class SkedulixScheduler:
         replica count vectors [M], each a private-pool sizing swept
         against every deadline of the grid; ``replica_speeds`` adds a
         straggler axis — ``{(stage, replica): factor}`` dicts or [M, I]
-        slowdown arrays (Fig.-5-style robustness grids). Both are
-        scenario data in the vector engine: the full
-        ``orders x c_max x replicas x speeds`` grid is still one batched
-        call on one compiled executable.
+        slowdown arrays (Fig.-5-style robustness grids); ``price_traces``
+        adds a pricing axis — portfolio variants or per-provider
+        :class:`.cost.PriceTrace` lists (spot markets, diurnal tariffs)
+        swept against every deadline. All are scenario data in the
+        vector engine: the full ``orders x c_max x replicas x speeds x
+        traces`` grid is still one batched call on one compiled
+        executable.
         """
         if pred is None:
             pred = self.predict(base_features)
@@ -159,7 +163,8 @@ class SkedulixScheduler:
             self.dag, pred, act, c_max_grid=c_max_grid, orders=orders,
             cost_model=self.cost_model, portfolio=self.portfolio,
             engine=engine, arrivals=arrivals, replicas=replicas,
-            replica_speeds=replica_speeds, **sim_kwargs)
+            replica_speeds=replica_speeds, price_traces=price_traces,
+            **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None,
                             arrivals: ArrivalsLike = None) -> SimResult:

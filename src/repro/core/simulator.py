@@ -21,10 +21,18 @@ deadline ``t0 + C_max`` when every release is ``t0`` — the batch path is
 bit-exact pre/post this generalization (``tests/test_arrivals.py``).
 
 The public cloud is a provider *portfolio* (:mod:`.cost`): each offloaded
-(job, stage) runs on its cheapest feasible provider — a static argmin of
-predicted billed cost, precomputed in the constructor — so the event loop
-itself only ever reads pre-gathered per-provider durations and prices.
-``loc`` holds the provider index (-1 = private replica).
+(job, stage) runs on its cheapest feasible provider. With static prices
+the argmin is precomputed in the constructor, so the event loop only ever
+reads pre-gathered per-provider durations and prices; under **price
+traces** the argmin is evaluated at the *offload epoch* — the event time
+at which ``_start_public`` fires — over each provider's price segment
+active at that instant, and the chosen (provider, segment) pair is locked
+for the whole stage (billing, latency multiplier, downloads). ``loc``
+holds the provider index (-1 = private replica), ``segment`` the billed
+price segment (-1 = private; 0 for static portfolios). When a forced-
+public cascade moves a DAG edge between providers, the upstream
+provider's egress (at the upstream stage's recorded segment) is billed on
+the edge's un-multiplied download volume.
 
 Engine selection: this module is the ``engine="des"`` reference
 implementation — an event heap driving per-stage sorted queues. The
@@ -53,7 +61,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .arrivals import ArrivalsLike, resolve_release
-from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
+from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST,
+                   ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
 from .greedy import init_offload, t_max
 from .priority import ORDERS
@@ -87,6 +96,7 @@ class SimResult:
     provider: Optional[np.ndarray] = None  # [J, M] int: -1 private, else index
     release: Optional[np.ndarray] = None   # [J] job release times (None=batch)
     replica: Optional[np.ndarray] = None   # [J, M] int: private replica, -1 = public
+    segment: Optional[np.ndarray] = None   # [J, M] int: price segment, -1 = private
 
     @property
     def offload_fraction(self) -> float:
@@ -152,22 +162,49 @@ class _Sim:
         self.replica_slowdown = replica_slowdown or {}
 
         # provider selection: each (job, stage), if offloaded, runs on the
-        # cheapest feasible provider by *predicted* billed cost (static
-        # argmin shared with the vector engine and the MILP baseline)
+        # cheapest feasible provider by *predicted* billed cost. Static
+        # portfolios precompute the argmin (time-independent, shared with
+        # the vector engine and the MILP baseline); price-traced portfolios
+        # precompute the full [P, S, J, M] segment-indexed matrices and
+        # defer the argmin to the offload epoch (_start_public), where the
+        # active segment of each provider is known.
         mem = dag.mem_mb
         pf = self.portfolio
+        # the precomputed fast path needs placement to be a static per-
+        # (job, stage) argmin: time-independent prices AND no cross-
+        # provider switch penalty (single provider). Multi-provider
+        # portfolios resolve placement at the offload epoch, where the
+        # upstream providers (and so the egress penalty) are known.
+        self._static_prices = pf.is_static and pf.num_providers == 1
         down_pred = pred["download"] if include_transfers else None
         down_act = act["download"] if include_transfers else None
         sinkm = dag.is_sink if include_transfers else None
-        H_pred_sel = pf.np_selection_costs(pred["P_public"], mem,
-                                           down_pred, sinkm,
-                                           require=~dag.must_private_mask)
-        self.prov = pf.select(H_pred_sel)                      # [J, M]
-        lat = pf.latency_mults[self.prov]                      # [J, M]
+        if self._static_prices:
+            H_pred_sel = pf.np_selection_costs(pred["P_public"], mem,
+                                               down_pred, sinkm,
+                                               require=~dag.must_private_mask)
+            self.prov = pf.select(H_pred_sel)                  # [J, M]
+            lat = pf.latency_mults[self.prov]                  # [J, M]
+            H_pred = pf.min_cost(H_pred_sel)
+        else:
+            self._sel_pst = pf.np_selection_costs_seg(
+                pred["P_public"], mem, down_pred, sinkm,
+                require=~dag.must_private_mask)                # [P, S, J, M]
+            self._cost_pst = pf.np_stage_costs_seg(
+                act["P_public"], mem, down_act, sinkm)         # [P, S, J, M]
+            self._edges = pf.segment_edges()                   # [P, S]
+            self._lat_seg = pf.latency_mults_seg()             # [P, S]
+            self._iota_P = np.arange(pf.num_providers)
+            # keys/init-offload see the trace prices at plan time t0 (the
+            # same static [J, M] matrix the vector engine's keys use)
+            seg0 = pf.segments_at(t0)                          # [P]
+            H_pred = np.min(self._sel_pst[self._iota_P, seg0], axis=0)
+        # egress rates per (provider, segment): cross-provider cascade
+        # billing reads these for static portfolios too (S=1 there)
+        self._egress_seg = pf.egress_seg()                     # [P, S]
 
         # priority keys: per-stage and whole-job, from *predicted* quantities
         # (H seen by the keys = the selected provider's predicted price)
-        H_pred = pf.min_cost(H_pred_sel)
         key_fn = ORDERS[order]
         self.stage_keys = np.stack(
             [key_fn(pred["P_private"], H_pred, k) for k in range(self.M)], axis=1)
@@ -178,23 +215,45 @@ class _Sim:
 
         # hot-path precomputation ------------------------------------------
         self.P_pred = np.ascontiguousarray(pred["P_private"], dtype=np.float64)
-        # billed cost of every (job, stage) on its selected provider
-        # (actual runtime; includes sink egress when transfers are modeled)
-        H_act_sel = pf.np_stage_costs(act["P_public"], mem, down_act, sinkm)
-        self.H_act = np.take_along_axis(H_act_sel, self.prov[None], axis=0)[0]
         # plain-float nested lists: scalar reads off numpy arrays dominate
-        # the event loop otherwise; public/transfer draws carry the selected
-        # provider's latency multiplier
+        # the event loop otherwise
         self._act_priv = act["P_private"].tolist()
-        self._act_pub = (act["P_public"] * lat).tolist()
-        self._act_up = (act["upload"] * lat).tolist()
-        self._act_down = (act["download"] * lat).tolist()
-        self._prov_l = self.prov.tolist()
-        self._cost_l = self.H_act.tolist()
+        if self._static_prices:
+            # billed cost of every (job, stage) on its selected provider
+            # (actual runtime; includes sink egress when transfers are
+            # modeled); public/transfer draws carry the selected provider's
+            # latency multiplier
+            H_act_sel = pf.np_stage_costs(act["P_public"], mem, down_act,
+                                          sinkm)
+            self.H_act = np.take_along_axis(H_act_sel, self.prov[None],
+                                            axis=0)[0]
+            self._act_pub = (act["P_public"] * lat).tolist()
+            self._act_up = (act["upload"] * lat).tolist()
+            self._act_down = (act["download"] * lat).tolist()
+            self._prov_l = self.prov.tolist()
+            self._cost_l = self.H_act.tolist()
+        else:
+            # raw draws; the offload epoch's (provider, segment) supplies
+            # the latency multiplier and the billed price
+            self._act_pub_raw = act["P_public"].tolist()
+            self._act_up_raw = act["upload"].tolist()
+            self._act_down_raw = act["download"].tolist()
+        # un-multiplied download volumes (GB) for cross-provider egress:
+        # predicted volumes feed the selection penalty (a decision),
+        # actual volumes the billing
+        self._down_gb_pred = (pred["download"] * EGRESS_GB_PER_S).tolist()
+        self._down_gb = (act["download"] * EGRESS_GB_PER_S).tolist()
         self._keys_l = self.stage_keys.tolist()
         # cached DAG structure
         self._succ = dag.succ_lists
         self._pred_l = dag.pred_lists
+        # predecessors in topological-position order: the egress penalty /
+        # billing accumulate in exactly the vector engine's stage order,
+        # so float summation associates identically and near-tie argmins
+        # cannot flip between engines
+        _pos = {s: i for i, s in enumerate(dag.topo_order())}
+        self._pred_topo = [sorted(ps, key=_pos.__getitem__)
+                           for ps in dag.pred_lists]
         self._desc = dag.descendant_lists
         self._is_sink = set(dag.sink_ids)
         self._repl = [max(int(r), 1) for r in dag.replicas]
@@ -203,6 +262,8 @@ class _Sim:
         # runtime state
         self.status = np.full((self.J, self.M), WAITING, dtype=np.int8)
         self.loc = np.full((self.J, self.M), PRIVATE, dtype=np.int16)
+        # billed price segment of each public (job, stage); -1 = private
+        self.segment = np.full((self.J, self.M), -1, dtype=np.int16)
         # which private replica ran each (job, stage); -1 = ran public
         self.replica = np.full((self.J, self.M), -1, dtype=np.int32)
         self.forced_public = np.zeros((self.J, self.M), dtype=bool)
@@ -240,7 +301,8 @@ class _Sim:
             per_stage_offloads=self.per_stage_offloads, deadline=self.c_max,
             provider=self.loc.astype(np.int64),
             release=None if self.release is None else self._rel.copy(),
-            replica=self.replica.astype(np.int64))
+            replica=self.replica.astype(np.int64),
+            segment=self.segment.astype(np.int64))
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
@@ -365,7 +427,39 @@ class _Sim:
 
     def _start_public(self, t: float, j: int, k: int):
         self.status[j, k] = RUNNING
-        self.loc[j, k] = self._prov_l[j][k]
+        if self._static_prices:
+            prov = self._prov_l[j][k]
+            seg = 0
+            up_eff = self._act_up[j][k]
+            dur = self._act_pub[j][k]
+            billed = self._cost_l[j][k]
+        else:
+            # decision-epoch pricing: the argmin runs over each provider's
+            # price segment active *now*, plus the provider-affinity
+            # penalty — placing stage k on a provider other than a public
+            # predecessor's pays that predecessor's (predicted) egress to
+            # move the edge, so cascades prefer staying put unless the
+            # price gap covers the hop. (provider, segment) then lock for
+            # the whole stage even if execution spans a breakpoint.
+            segs = (self._edges <= t).sum(axis=1) - 1          # [P]
+            selc = self._sel_pst[self._iota_P, segs, j, k]     # [P]
+            if self.include_transfers:
+                loc_j = self.loc[j]
+                seg_j = self.segment[j]
+                for u in self._pred_topo[k]:
+                    lu = loc_j[u]
+                    if lu >= 0:
+                        pen = (self._egress_seg[lu, seg_j[u]]
+                               * self._down_gb_pred[j][u])
+                        selc = selc + np.where(self._iota_P != lu, pen, 0.0)
+            prov = int(np.argmin(selc))
+            seg = int(segs[prov])
+            lm = self._lat_seg[prov, seg]
+            up_eff = self._act_up_raw[j][k] * lm
+            dur = self._act_pub_raw[j][k] * lm
+            billed = self._cost_pst[prov, seg, j, k]
+        self.loc[j, k] = prov
+        self.segment[j, k] = seg
         self.n_offloaded += 1
         self.per_stage_offloads[k] += 1
         up = 0.0
@@ -375,10 +469,18 @@ class _Sim:
             loc_j = self.loc[j]
             needs_up = (not preds) or any(loc_j[p] == PRIVATE for p in preds)
             if needs_up:
-                up = self._act_up[j][k]
+                up = up_eff
+            # cross-provider cascade: an edge whose endpoints run public on
+            # *different* providers pays the upstream provider's egress (at
+            # the upstream stage's recorded segment) on the *actual* edge
+            # volume
+            for u in self._pred_topo[k]:
+                lu = loc_j[u]
+                if lu >= 0 and lu != prov:
+                    self.cost += (self._egress_seg[lu, self.segment[j, u]]
+                                  * self._down_gb[j][u])
         self.start[j, k] = t + up
-        dur = self._act_pub[j][k]
-        self.cost += self._cost_l[j][k]
+        self.cost += billed
         self._at(t + up + dur, self._public_done, j, k)
 
     def _public_done(self, t: float, j: int, k: int):
@@ -398,7 +500,12 @@ class _Sim:
         if k in self._is_sink:
             down = 0.0
             if self.include_transfers and self.loc[j, k] != PRIVATE:
-                down = self._act_down[j][k]
+                if self._static_prices:
+                    down = self._act_down[j][k]
+                else:
+                    # the locked (provider, segment) supplies the multiplier
+                    down = self._act_down_raw[j][k] * self._lat_seg[
+                        self.loc[j, k], self.segment[j, k]]
             if t + down > self.completion[j]:
                 self.completion[j] = t + down
 

@@ -51,10 +51,15 @@ are scenario **data** too: ``sweep_scenarios`` takes a ``replicas=``
 axis (a list of per-stage replica-count vectors) and a
 ``replica_speeds=`` axis (straggler grids), and a whole replica
 autoscaling or robustness sweep batches into the same executable. The
-provider portfolio is data as well — per-provider billed-cost / latency
-/ selection matrices ``[P, J, M]``, with the cheapest-feasible-provider
-argmin evaluated inside the per-stage loop — so the shape family is
-(M_pad, I_max, J, P, flags). Heterogeneous applications batch into a
+provider portfolio is data as well — **segment-indexed** billed-cost /
+selection matrices ``[P, S, J, M]`` plus per-segment latency / egress /
+start-edge vectors ``[P, S]``, where S counts the price segments of the
+portfolio's time-dependent pricing (:class:`.cost.PriceTrace`; 1 for a
+static portfolio). The cheapest-feasible (provider, segment) pair is
+resolved per stage at each job's *offload epoch* (decision-epoch
+pricing), so spot-market and diurnal tariffs sweep as a
+``price_traces=`` scenario axis and the shape family is
+(M_pad, I_max, J, P, S, flags). Heterogeneous applications batch into a
 single call — stages are topologically relabelled, short DAGs are padded
 with inert stages (no jobs eligible, so their event loops run zero
 iterations) — and the whole figure's scenario axis shards across host
@@ -68,8 +73,8 @@ predecessors finish), so an external release stream (:mod:`.arrivals`)
 simply replaces the constant ``t0`` at source stages — release times enter
 as one more ``[J]`` input, and per-job deadlines (``release + C_max``)
 replace the scalar deadline in the ACD. No new executables: the shape
-family stays (M_pad, I_max, J, P, flags), and a batch (all releases at
-``t0``) reproduces the pre-arrivals path bit-exactly.
+family stays (M_pad, I_max, J, P, S, flags), and a batch (all releases
+at ``t0``) reproduces the pre-arrivals path bit-exactly.
 
 All arithmetic runs in float64 (via ``jax.experimental.enable_x64``) so
 keep/offload decisions agree bit-for-bit with the numpy DES; equivalence
@@ -88,9 +93,10 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from .arrivals import ArrivalsLike, resolve_release
-from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
+from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST, PriceTrace,
+                   Provider, ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
-from .greedy import init_offload_jax, select_provider_jax
+from .greedy import init_offload_jax
 from .priority import ORDERS
 
 
@@ -120,6 +126,8 @@ class VectorSimResult:
     release: Optional[np.ndarray] = None  # [S, J] job release times (None=batch)
     replica: Optional[np.ndarray] = None  # [S, J, M] int: private replica, -1 = public
     replicas: Optional[np.ndarray] = None  # [S, M] per-scenario replica counts
+    segment: Optional[np.ndarray] = None  # [S, J, M] int: price segment, -1 = private
+    trace_idx: Optional[np.ndarray] = None  # [S] index into the price_traces axis
 
     @property
     def num_scenarios(self) -> int:
@@ -144,35 +152,44 @@ class VectorSimResult:
             deadline=float(self.deadline[s]),
             provider=self.provider[s],
             release=None if self.release is None else self.release[s],
-            replica=None if self.replica is None else self.replica[s])
+            replica=None if self.replica is None else self.replica[s],
+            segment=None if self.segment is None else self.segment[s])
 
 
 @functools.lru_cache(maxsize=None)
-def _build_engine(M: int, I_max: int, J: int, P: int,
+def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                   include_transfers: bool, init_phase: bool, adaptive: bool):
     """Trace the stage-decomposed event loop for one (stage count, replica
-    bound, job count, provider count, flags) shape family. DAG structure
-    arrives as data: ``A``/``desc`` are [M, M] adjacency / strict-descendant
-    masks over topologically-ordered stage indices (edges go low -> high),
-    ``sink``/``pinned``/``inert`` are [M] stage flags, ``speed`` the
-    [M, I_max] per-replica speed matrix (finite = present replica with
-    that multiplicative slowdown, ``inf`` = absent slot) — replica counts
-    and straggler factors are both scenario data. The provider portfolio
-    arrives as data too: per-provider billed cost / latency /
-    selection-key matrices ``[P, J, M]``; the cheapest feasible provider
-    is an argmin inside the per-stage loop, so one executable serves any
-    portfolio of the same size.
+    bound, job count, provider count, price-segment count, flags) shape
+    family. DAG structure arrives as data: ``A``/``desc`` are [M, M]
+    adjacency / strict-descendant masks over topologically-ordered stage
+    indices (edges go low -> high), ``sink``/``pinned``/``inert`` are [M]
+    stage flags, ``speed`` the [M, I_max] per-replica speed matrix
+    (finite = present replica with that multiplicative slowdown, ``inf`` =
+    absent slot) — replica counts and straggler factors are both scenario
+    data. The provider portfolio arrives as data too, **segment-indexed**:
+    billed-cost / selection-key matrices ``[P, S, J, M]`` and per-segment
+    latency / egress / start-edge vectors ``[P, S]``. Placement is
+    decision-epoch priced: after a stage's event loop resolves its offload
+    epochs, the active segment of each provider at that epoch is a
+    comparison-sum over the edge data, and the cheapest feasible
+    (provider, segment) pair is gathered per job — so one executable
+    serves any portfolio of the same (P, S), static portfolios being the
+    S=1 (or constant-trace) case of the same arithmetic.
     """
     iota_J = jnp.arange(J)
 
-    def run_stage(k, a, forced_k, elig, upk, speed_k, acd_k, P_k, rem_k,
-                  dur_k, pub_k, keys_k, deadline, t0):
-        """Simulate stage k given per-job arrival times ``a`` [J].
+    def run_stage(k, a, forced_k, elig, speed_k, acd_k, P_k, rem_k,
+                  dur_k, keys_k, deadline, t0):
+        """Run stage k's event loop given per-job arrival times ``a`` [J].
 
         ``deadline`` is the per-job absolute deadline [J] (release + C_max;
         a constant vector for batch workloads). ``speed_k`` [I_max] holds
-        the stage's replica pool. Returns (start, end, locpub, evicted,
-        replica) for the stage, job coords.
+        the stage's replica pool. Returns (times, replica) in job coords:
+        ``times`` holds the dispatch instant of private jobs and
+        ``-(eviction instant) - 1`` of evicted ones (NaN = never exited);
+        placement/pricing happen in the caller, where the offload epoch
+        is known.
         """
         # queue coordinates: stable sort by stage key, ties by job id
         perm = jnp.argsort(keys_k, stable=True)
@@ -276,22 +293,11 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
                  jnp.zeros((), bool), jnp.zeros((), jnp.int32))
         carry = jax.lax.while_loop(cond, body, carry)
         _, _, _, _, times, rep, _, _ = carry
-        # back to job coordinates; `times` holds the dispatch instant of
-        # private jobs and -(eviction instant) - 1 of evicted ones
-        times_j = times[inv]
-        rep_j = rep[inv]
-        evicted = times_j < -0.5  # NaN (never exited) compares False
-        locpub = forced_k | evicted
-        pub_event = jnp.where(forced_k, a, -times_j - 1.0)
-        start = jnp.where(locpub, pub_event + upk, times_j)
-        # private durations run on the *assigned* replica's speed (the
-        # body already advanced the clock by the scaled duration)
-        priv_dur = dur_k * speed_k[jnp.maximum(rep_j, 0)]
-        end = start + jnp.where(locpub, pub_k, priv_dur)
-        replica = jnp.where(locpub, -1, rep_j)
-        return start, end, locpub, evicted, replica
+        # back to job coordinates
+        return times[inv], rep[inv]
 
-    def run_one(P_pred, act_priv, pub_p, up_p, down_p, cost_p, sel_p,
+    def run_one(P_pred, act_priv, pub_a, up_a, down_a, dgb_pred, cost_ps,
+                sel_ps, lat_ps, eg_ps, edges_ps,
                 stage_keys, job_keys, deadline, capacity, t0, release,
                 A, desc, sink, pinned, inert, speed):
         # per-stage critical-path remainder (reverse index order = reverse
@@ -313,9 +319,11 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         loc_l: List[Optional[jax.Array]] = [None] * M
         evict_l: List[Optional[jax.Array]] = [None] * M
         prov_l: List[Optional[jax.Array]] = [None] * M
+        seg_l: List[Optional[jax.Array]] = [None] * M
         rep_l: List[Optional[jax.Array]] = [None] * M
         down_l: List[Optional[jax.Array]] = [None] * M
         cost_l: List[Optional[jax.Array]] = [None] * M
+        xegress = jnp.zeros(())
         neg = jnp.full(J, -jnp.inf)
         for k in range(M):
             # source stages arrive at the job's release time (t0 for a
@@ -331,38 +339,82 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
                 forced_k = forced_k | (desc[u, k] & evict_l[u])
             forced_k = forced_k & ~pinned[k]
             elig = ~forced_k & ~inert[k]
-            # cheapest feasible provider for this stage's jobs: argmin of
-            # the predicted-billing selection key over the provider axis
-            # (infeasible providers carry +inf)
-            pidx_k = select_provider_jax(sel_p[:, :, k])     # [J]
-            pub_k = pub_p[pidx_k, iota_J, k]
-            up_raw = up_p[pidx_k, iota_J, k]
-            down_l[k] = down_p[pidx_k, iota_J, k]
-            cost_l[k] = cost_p[pidx_k, iota_J, k]
+            acd_k = ~pinned[k]
+            times_j, rep_j = run_stage(
+                k, a, forced_k, elig, speed[k], acd_k, P_pred[:, k],
+                rem_l[k], act_priv[:, k], stage_keys[:, k], deadline, t0)
+            evicted = times_j < -0.5  # NaN (never exited) compares False
+            locpub = forced_k | evicted
+            # decision-epoch pricing: the offload epoch is the stage's
+            # arrival time when forced public, the eviction instant when
+            # ACD-evicted; each provider's active segment at that epoch is
+            # a comparison-sum over the edge data, and the cheapest
+            # feasible (provider, segment) is locked for the whole stage
+            tau = jnp.where(forced_k, a, -times_j - 1.0)
+            seg_pj = jnp.maximum(
+                (edges_ps[:, :, None] <= tau[None, None, :]).sum(axis=1) - 1,
+                0)                                            # [P, J]
+            selc = jnp.take_along_axis(sel_ps[:, :, :, k],
+                                       seg_pj[:, None, :], axis=1)[:, 0, :]
+            if include_transfers:
+                # provider-affinity penalty: placing stage k on a provider
+                # other than a public predecessor's pays that
+                # predecessor's (predicted) egress to move the edge.
+                # Accumulated onto selc one predecessor at a time, in
+                # ascending topological order — the DES sums in the same
+                # order, so the floats associate identically and near-tie
+                # argmins cannot flip between engines.
+                iota_P = jnp.arange(P)
+                for u in range(k):
+                    pen_u = jnp.where(
+                        A[u, k] & loc_l[u],
+                        eg_ps[prov_l[u], seg_l[u]] * dgb_pred[:, u], 0.0)
+                    selc = selc + jnp.where(
+                        iota_P[:, None] != prov_l[u][None, :],
+                        pen_u[None, :], 0.0)
+            pidx_k = jnp.argmin(selc, axis=0)                 # [J]
+            seg_k = seg_pj[pidx_k, iota_J]                    # [J]
+            lm = lat_ps[pidx_k, seg_k]                        # [J]
+            cost_l[k] = cost_ps[pidx_k, seg_k, iota_J, k]
+            down_l[k] = down_a[:, k] * lm
             prov_l[k] = pidx_k
+            seg_l[k] = seg_k
             # upload needed iff some input of stage k lives in private
-            # storage (or the stage reads the original private input)
+            # storage (or the stage reads the original private input);
+            # an edge whose endpoints run public on *different* providers
+            # pays the upstream provider's egress (at the upstream stage's
+            # recorded segment) on the edge's un-multiplied volume
             if include_transfers:
                 needs_up = jnp.zeros(J, dtype=bool)
                 for u in range(k):
                     needs_up = needs_up | (A[u, k] & ~loc_l[u])
+                    moved = (A[u, k] & loc_l[u] & locpub
+                             & (prov_l[u] != pidx_k))
+                    rate_u = eg_ps[prov_l[u], seg_l[u]]
+                    xegress = xegress + jnp.where(
+                        moved,
+                        rate_u * (down_a[:, u] * EGRESS_GB_PER_S),
+                        0.0).sum()
                 has_pred = A[:k, k].any() if k else jnp.asarray(False)
                 needs_up = jnp.where(has_pred, needs_up, True)
-                upk = jnp.where(needs_up, up_raw, 0.0)
+                upk = jnp.where(needs_up, up_a[:, k] * lm, 0.0)
             else:
                 upk = jnp.zeros(J)
-            acd_k = ~pinned[k]
-            (start_l[k], end_l[k], loc_l[k], evict_l[k],
-             rep_l[k]) = run_stage(
-                k, a, forced_k, elig, upk, speed[k], acd_k, P_pred[:, k],
-                rem_l[k], act_priv[:, k], pub_k, stage_keys[:, k],
-                deadline, t0)
+            start = jnp.where(locpub, tau + upk, times_j)
+            # private durations run on the *assigned* replica's speed (the
+            # loop body already advanced the clock by the scaled duration)
+            priv_dur = act_priv[:, k] * speed[k][jnp.maximum(rep_j, 0)]
+            end = start + jnp.where(locpub, pub_a[:, k] * lm, priv_dur)
+            start_l[k], end_l[k] = start, end
+            loc_l[k], evict_l[k] = locpub, evicted
+            rep_l[k] = jnp.where(locpub, -1, rep_j)
 
         start = jnp.stack(start_l, axis=1)
         end = jnp.stack(end_l, axis=1)
         locpub = jnp.stack(loc_l, axis=1)
         cost_m = jnp.stack(cost_l, axis=1)
         prov_m = jnp.stack(prov_l, axis=1)
+        seg_m = jnp.stack(seg_l, axis=1)
         rep_m = jnp.stack(rep_l, axis=1)
         # job completion: results back in private storage (sink download)
         fin = end
@@ -371,24 +423,27 @@ def _build_engine(M: int, I_max: int, J: int, P: int,
         completion = jnp.max(
             jnp.where(sink[None, :], fin, -jnp.inf), axis=1)
         return dict(makespan=completion.max() - t0,
-                    cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0)),
+                    cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0))
+                    + xegress,
                     public_mask=locpub, start=start, end=end,
                     completion=completion,
                     n_offloaded_stages=locpub.sum(),
                     n_init_offloaded_jobs=off.sum(),
                     per_stage_offloads=locpub.sum(axis=0),
                     provider=jnp.where(locpub, prov_m, -1),
-                    replica=rep_m)
+                    replica=rep_m,
+                    segment=jnp.where(locpub, seg_m, -1))
 
     return run_one
 
 
 @functools.lru_cache(maxsize=None)
-def _engine_fn(M: int, I_max: int, J: int, P: int, include_transfers: bool,
-               init_phase: bool, adaptive: bool, n_dev: int):
+def _engine_fn(M: int, I_max: int, J: int, P: int, S: int,
+               include_transfers: bool, init_phase: bool, adaptive: bool,
+               n_dev: int):
     """jit(vmap) on one device; pmap(vmap) sharding the scenario axis
     across host devices when more are available."""
-    run_one = _build_engine(M, I_max, J, P, include_transfers, init_phase,
+    run_one = _build_engine(M, I_max, J, P, S, include_transfers, init_phase,
                             adaptive)
     if n_dev > 1:
         return jax.pmap(jax.vmap(run_one))
@@ -548,6 +603,62 @@ def _norm_speed_axis(replica_speeds, M: int, I_max: int,
     return out
 
 
+def _norm_trace_axis(price_traces, base: ProviderPortfolio,
+                     where: str = "") -> List[ProviderPortfolio]:
+    """``price_traces=`` axis -> list of portfolio variants.
+
+    Each entry is a pricing of the *same* providers: a full
+    :class:`ProviderPortfolio` (same provider count as ``base``), a
+    sequence of per-provider :class:`PriceTrace` (applied to ``base``'s
+    providers in order), a single :class:`PriceTrace` (applied to every
+    provider), or ``None`` (``base`` unchanged — the degenerate entry).
+    ``None`` as the whole axis is the one-point axis at ``base``.
+    """
+    pre = f"{where}: " if where else ""
+    if price_traces is None:
+        return [base]
+    cfgs = list(price_traces)
+    if not cfgs:
+        raise ValueError(f"{pre}price_traces axis is empty")
+    out = []
+    for i, cfg in enumerate(cfgs):
+        if cfg is None:
+            out.append(base)
+            continue
+        if isinstance(cfg, ProviderPortfolio):
+            if cfg.num_providers != base.num_providers:
+                raise ValueError(
+                    f"{pre}price_traces[{i}]: portfolio has "
+                    f"{cfg.num_providers} providers, the sweep's base "
+                    f"portfolio has {base.num_providers} (one shape "
+                    f"family needs a fixed provider count)")
+            out.append(cfg)
+            continue
+        if isinstance(cfg, PriceTrace):
+            cfg = [cfg] * base.num_providers
+        try:
+            traces = list(cfg)
+        except TypeError:
+            raise ValueError(
+                f"{pre}price_traces[{i}]: expected a ProviderPortfolio, "
+                f"a PriceTrace, a sequence of PriceTrace, or None — got "
+                f"{type(cfg).__name__}") from None
+        if len(traces) != base.num_providers or not all(
+                isinstance(t, PriceTrace) for t in traces):
+            raise ValueError(
+                f"{pre}price_traces[{i}]: expected {base.num_providers} "
+                f"PriceTrace entries (one per provider), got "
+                f"{[type(t).__name__ for t in traces]}")
+        out.append(ProviderPortfolio(tuple(
+            p.with_trace(t) for p, t in zip(base.providers, traces))))
+    return out
+
+
+def _max_segment_bound(trace_cfgs: List[ProviderPortfolio]) -> int:
+    """S: the segment bound of one task's normalized price-trace axis."""
+    return max(pf.num_segments for pf in trace_cfgs)
+
+
 def _max_replica_bound(dag: AppDAG, repl_cfgs) -> int:
     """I_max contribution of one task: its largest replica count.
 
@@ -570,6 +681,7 @@ class _Task:
                  include_transfers: bool = True,
                  arrivals: ArrivalsLike = None,
                  replicas=None, replica_speeds=None,
+                 price_traces=None, S_seg: Optional[int] = None,
                  where: str = ""):
         from .simulator import _with_transfer_defaults
 
@@ -596,16 +708,27 @@ class _Task:
         repl_cfgs = _norm_replica_axis(replicas, dag, where)
         speed_cfgs = _norm_speed_axis(replica_speeds, self.M, self.I_max,
                                       where)
-        self.grid = [(b, o, float(c), r, g)
+        # price-trace axis: portfolio variants of the same provider count,
+        # padded to the sweep's common segment bound (one-point axis at the
+        # base portfolio when omitted — the degenerate, bit-exact sweep).
+        # sweep_scenarios pre-normalizes every task's axis (with the
+        # task's name in errors), so a list here is already portfolios.
+        pf = as_portfolio(portfolio, cost_model)
+        trace_cfgs = [pf] if price_traces is None else list(price_traces)
+        self.n_segments = (_max_segment_bound(trace_cfgs) if S_seg is None
+                           else int(S_seg))
+        self.grid = [(b, o, float(c), r, g, tr)
                      for b in range(B) for o in orders for c in c_max_grid
                      for r in range(len(repl_cfgs))
-                     for g in range(len(speed_cfgs))]
+                     for g in range(len(speed_cfgs))
+                     for tr in range(len(trace_cfgs))]
         self.S = len(self.grid)
-        self.orders_out = tuple(o for (_, o, _, _, _) in self.grid)
-        self.c_max_out = np.array([c for (_, _, c, _, _) in self.grid])
-        self.batch_out = np.array([b for (b, _, _, _, _) in self.grid])
+        self.orders_out = tuple(o for (_, o, _, _, _, _) in self.grid)
+        self.c_max_out = np.array([c for (_, _, c, _, _, _) in self.grid])
+        self.batch_out = np.array([b for (b, _, _, _, _, _) in self.grid])
         self.repl_out = np.stack([repl_cfgs[r]
-                                  for (_, _, _, r, _) in self.grid])
+                                  for (_, _, _, r, _, _) in self.grid])
+        self.trace_out = np.array([tr for (_, _, _, _, _, tr) in self.grid])
         self.t0 = float(t0)
         # exogenous release stream (None = batch at t0); per-job absolute
         # deadlines are release + C_max, the batch deadline when no stream
@@ -625,41 +748,64 @@ class _Task:
             return out
 
         # priority keys + provider selection/billing: identical numpy math
-        # to the DES preamble; keys depend only on (draw, order), the
-        # selection key and billing matrices only on the draw
-        pf = as_portfolio(portfolio, cost_model)
+        # to the DES preamble. Keys depend on (draw, order, trace) — they
+        # see the trace prices at plan time t0 — while the segment-indexed
+        # selection/billing matrices [P, S_seg, J, M] depend on
+        # (draw, trace); per-segment latency/egress/edge vectors [P, S_seg]
+        # only on the trace. The engine gathers the (provider, segment)
+        # active at each offload epoch from these at run time.
         self.n_providers = pf.num_providers
-        lat4 = pf.latency_mults[None, :, None, None]          # [1, P, 1, 1]
+        S_seg = self.n_segments
         sinkm = dag.is_sink if include_transfers else None
-        uniq: Dict[Tuple[int, str], Tuple[np.ndarray, np.ndarray]] = {}
-        sel_by_b: Dict[int, np.ndarray] = {}
-        cost_by_b: Dict[int, np.ndarray] = {}
-        for b in sorted({b for (b, _, _, _, _) in self.grid}):
+        uniq: Dict[Tuple[int, str, int],
+                   Tuple[np.ndarray, np.ndarray]] = {}
+        sel_bt: Dict[Tuple[int, int], np.ndarray] = {}
+        cost_bt: Dict[Tuple[int, int], np.ndarray] = {}
+        iota_P = np.arange(self.n_providers)
+        for b in sorted({b for (b, _, _, _, _, _) in self.grid}):
             down_pred = pred["download"][b] if include_transfers else None
             down_act = act["download"][b] if include_transfers else None
-            sel_by_b[b] = pf.np_selection_costs(
-                pred["P_public"][b], mem, down_pred, sinkm,
-                require=~dag.must_private_mask)                # [P, J, M]
-            cost_by_b[b] = pf.np_stage_costs(
-                act["P_public"][b], mem, down_act, sinkm)      # [P, J, M]
-            H = pf.min_cost(sel_by_b[b])
-            for o in dict.fromkeys(orders):
-                key_fn = ORDERS[o]
-                uniq[(b, o)] = (
-                    np.stack([key_fn(pred["P_private"][b], H, k)
-                              for k in range(M)], axis=1),
-                    key_fn(pred["P_private"][b], H, None))
-        stage_keys = np.stack([uniq[(b, o)][0]
-                               for (b, o, _, _, _) in self.grid])
-        job_keys = np.stack([uniq[(b, o)][1]
-                             for (b, o, _, _, _) in self.grid])
+            for tr, tpf in enumerate(trace_cfgs):
+                sel_bt[(b, tr)] = tpf.np_selection_costs_seg(
+                    pred["P_public"][b], mem, down_pred, sinkm,
+                    require=~dag.must_private_mask,
+                    num_segments=S_seg)                 # [P, S_seg, J, M]
+                cost_bt[(b, tr)] = tpf.np_stage_costs_seg(
+                    act["P_public"][b], mem, down_act, sinkm,
+                    num_segments=S_seg)                 # [P, S_seg, J, M]
+                seg0 = tpf.segments_at(self.t0)
+                H = np.min(sel_bt[(b, tr)][iota_P, seg0], axis=0)
+                for o in dict.fromkeys(orders):
+                    key_fn = ORDERS[o]
+                    uniq[(b, o, tr)] = (
+                        np.stack([key_fn(pred["P_private"][b], H, k)
+                                  for k in range(M)], axis=1),
+                        key_fn(pred["P_private"][b], H, None))
+        stage_keys = np.stack([uniq[(b, o, tr)][0]
+                               for (b, o, _, _, _, tr) in self.grid])
+        job_keys = np.stack([uniq[(b, o, tr)][1]
+                             for (b, o, _, _, _, tr) in self.grid])
         bsel = self.batch_out
-        sel_p = np.stack([sel_by_b[b] for b in bsel])          # [S, P, J, M]
-        cost_p = np.stack([cost_by_b[b] for b in bsel])        # [S, P, J, M]
-        # per-provider actual draws: latency multiplier on public/transfers
-        pub_p = act["P_public"][bsel][:, None] * lat4
-        up_p = act["upload"][bsel][:, None] * lat4
-        down_p = act["download"][bsel][:, None] * lat4
+        sel_p = np.stack([sel_bt[(b, tr)]
+                          for (b, _, _, _, _, tr) in self.grid])
+        cost_p = np.stack([cost_bt[(b, tr)]
+                           for (b, _, _, _, _, tr) in self.grid])
+        lat_by_tr = [tpf.latency_mults_seg(S_seg) for tpf in trace_cfgs]
+        eg_by_tr = [tpf.egress_seg(S_seg) for tpf in trace_cfgs]
+        edges_by_tr = [tpf.segment_edges(S_seg) for tpf in trace_cfgs]
+        lat_ps = np.stack([lat_by_tr[tr]
+                           for (_, _, _, _, _, tr) in self.grid])
+        eg_ps = np.stack([eg_by_tr[tr]
+                          for (_, _, _, _, _, tr) in self.grid])
+        edges_ps = np.stack([edges_by_tr[tr]
+                             for (_, _, _, _, _, tr) in self.grid])
+        # raw actual draws: the engine applies the locked (provider,
+        # segment)'s latency multiplier after the placement resolves;
+        # predicted download volumes (GB) feed the affinity penalty
+        pub_a = act["P_public"][bsel]
+        up_a = act["upload"][bsel]
+        down_a = act["download"][bsel]
+        dgb_pred = pred["download"][bsel] * EGRESS_GB_PER_S
 
         # structure as data, in relabelled indices, padded with inert stages
         A = np.zeros((M_pad, M_pad), dtype=bool)
@@ -694,11 +840,11 @@ class _Task:
                     for r in range(len(repl_cfgs))
                     for g in range(len(speed_cfgs))}
         speed = np.stack([sp_by_rg[(r, g)]
-                          for (_, _, _, r, g) in self.grid])
+                          for (_, _, _, r, g, _) in self.grid])
         # capacity T_max = sum_k I_k * C_max follows the scenario's own
         # replica config (raw counts, as in the DES's t_max)
         capacity = np.array([float(repl_cfgs[r].sum()) * c
-                             for (_, _, c, r, _) in self.grid])
+                             for (_, _, c, r, _, _) in self.grid])
 
         S = self.S
         self.args = tuple(
@@ -707,11 +853,15 @@ class _Task:
             for x in (
                 pad_cols(pred["P_private"][bsel]),
                 pad_cols(act["P_private"][bsel]),
-                pad_cols(pub_p),
-                pad_cols(up_p),
-                pad_cols(down_p),
+                pad_cols(pub_a),
+                pad_cols(up_a),
+                pad_cols(down_a),
+                pad_cols(dgb_pred),
                 pad_cols(cost_p),
                 pad_cols(sel_p),
+                lat_ps,
+                eg_ps,
+                edges_ps,
                 pad_cols(stage_keys), job_keys,
                 rel[None, :] + self.c_max_out[:, None],
                 capacity,
@@ -743,7 +893,9 @@ class _Task:
             release=None if self.release is None
             else np.broadcast_to(self.release, (self.S, self.J)).copy(),
             replica=out["replica"][:, :, inv],
-            replicas=self.repl_out.copy())
+            replicas=self.repl_out.copy(),
+            segment=out["segment"][:, :, inv],
+            trace_idx=self.trace_out.copy())
 
 
 def _run_task(task: _Task, I_max: int, include_transfers: bool,
@@ -753,7 +905,8 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
     S = task.S
     n_dev = jax.local_device_count() if S > 1 else 1
     fn = _engine_fn(task.M_pad, I_max, task.J, task.n_providers,
-                    include_transfers, init_phase, adaptive, n_dev)
+                    task.n_segments, include_transfers, init_phase,
+                    adaptive, n_dev)
     with enable_x64():
         if n_dev > 1:
             # strided scenario->device interleave balances heterogeneous
@@ -796,19 +949,20 @@ def simulate_scenarios(
     arrivals: ArrivalsLike = None,
     replicas=None,
     replica_speeds=None,
+    price_traces=None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
     ``pred``/``act`` values are [J, M] (shared) or [B, J, M] (a batch of
     latency draws, e.g. one per seed); the scenario axis enumerates
-    ``batch x orders x c_max_grid x replicas x replica_speeds`` in C
-    order. ``engine="des"`` replays the same grid serially through the
-    reference simulator — same result layout, used by the equivalence
-    suite and benchmarks. ``portfolio`` generalizes the public cloud to
-    N providers (cheapest-feasible placement per offloaded stage);
-    default is the scalar ``cost_model``. ``arrivals`` injects an
-    exogenous release stream (:mod:`.arrivals`), shared by every
-    scenario of the grid; ``None`` is the batch at ``t0``.
+    ``batch x orders x c_max_grid x replicas x replica_speeds x
+    price_traces`` in C order. ``engine="des"`` replays the same grid
+    serially through the reference simulator — same result layout, used
+    by the equivalence suite and benchmarks. ``portfolio`` generalizes
+    the public cloud to N providers (cheapest-feasible placement per
+    offloaded stage); default is the scalar ``cost_model``. ``arrivals``
+    injects an exogenous release stream (:mod:`.arrivals`), shared by
+    every scenario of the grid; ``None`` is the batch at ``t0``.
 
     ``replicas`` is an autoscaling axis: a list of per-stage replica
     count vectors [M], each a private-pool sizing of the same
@@ -819,6 +973,15 @@ def simulate_scenarios(
     *data* in the vector engine (a masked [M, I_max] speed matrix per
     scenario, same compiled executable); the DES replays them via
     :meth:`.dag.AppDAG.with_replicas` and ``replica_slowdown``.
+
+    ``price_traces`` is a pricing axis: a list of portfolio variants of
+    the same providers — :class:`ProviderPortfolio` objects, per-provider
+    :class:`.cost.PriceTrace` sequences, single traces, or ``None``
+    entries (= the base ``portfolio``). Spot markets, diurnal tariffs
+    and flat pricing then sweep as scenario *data* (segment-indexed
+    [P, S, J, M] billing matrices, one executable per
+    (M, I_max, J, P, S, flags) shape family); the DES replays each
+    variant as its ``portfolio=``.
     """
     from .simulator import _with_transfer_defaults, simulate
 
@@ -838,6 +1001,8 @@ def simulate_scenarios(
         I_max = _max_replica_bound(dag,
                                    None if replicas is None else repl_cfgs)
         speed_cfgs = _norm_speed_axis(replica_speeds, dag.num_stages, I_max)
+        trace_cfgs = _norm_trace_axis(price_traces,
+                                      as_portfolio(portfolio, cost_model))
         # the one-point axis reuses `dag` itself (cached structure, and
         # bit-exact replay of the pre-axis path)
         dags = [dag if replicas is None else dag.with_replicas(cfg)
@@ -846,18 +1011,19 @@ def simulate_scenarios(
                  for k in range(dag.num_stages) for i in range(I_max)
                  if sp[k, i] != 1.0} or None
                 for sp in speed_cfgs]
-        grid = [(b, o, float(c), r, g)
+        grid = [(b, o, float(c), r, g, tr)
                 for b in range(B) for o in orders for c in c_max_grid
                 for r in range(len(repl_cfgs))
-                for g in range(len(speed_cfgs))]
+                for g in range(len(speed_cfgs))
+                for tr in range(len(trace_cfgs))]
         sims = [simulate(dags[r], {k: v[b] for k, v in pred_d.items()},
                          {k: v[b] for k, v in act_d.items()},
                          c_max=c, order=o, cost_model=cost_model,
                          include_transfers=include_transfers,
                          init_phase=init_phase, adaptive=adaptive, t0=t0,
-                         portfolio=portfolio, arrivals=release,
+                         portfolio=trace_cfgs[tr], arrivals=release,
                          replica_slowdown=slow[g])
-                for (b, o, c, r, g) in grid]
+                for (b, o, c, r, g, tr) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
             cost_usd=np.array([r.cost_usd for r in sims]),
@@ -871,19 +1037,21 @@ def simulate_scenarios(
             per_stage_offloads=np.stack([r.per_stage_offloads for r in sims]),
             provider=np.stack([r.provider for r in sims]),
             deadline=np.array([r.deadline for r in sims]),
-            orders=tuple(o for (_, o, _, _, _) in grid),
-            c_max=np.array([c for (_, _, c, _, _) in grid]),
-            batch_idx=np.array([b for (b, _, _, _, _) in grid]),
+            orders=tuple(o for (_, o, _, _, _, _) in grid),
+            c_max=np.array([c for (_, _, c, _, _, _) in grid]),
+            batch_idx=np.array([b for (b, _, _, _, _, _) in grid]),
             release=None if release is None
             else np.broadcast_to(release, (len(grid), J)).copy(),
             replica=np.stack([r.replica for r in sims]),
-            replicas=np.stack([repl_cfgs[r] for (_, _, _, r, _) in grid]))
+            replicas=np.stack([repl_cfgs[r] for (_, _, _, r, _, _) in grid]),
+            segment=np.stack([r.segment for r in sims]),
+            trace_idx=np.array([tr for (_, _, _, _, _, tr) in grid]))
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
     return sweep_scenarios(
         [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
               orders=orders, arrivals=arrivals, replicas=replicas,
-              replica_speeds=replica_speeds)],
+              replica_speeds=replica_speeds, price_traces=price_traces)],
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
         portfolio=portfolio)[0]
@@ -906,15 +1074,19 @@ def sweep_scenarios(
     ``c_max_grid``, ``orders``, ``arrivals`` (an exogenous release
     stream for that task's jobs; omitted = batch at ``t0``),
     ``replicas`` (an autoscaling axis: a list of per-stage replica count
-    vectors [M]; omitted = the DAG's own counts) and ``replica_speeds``
+    vectors [M]; omitted = the DAG's own counts), ``replica_speeds``
     (a straggler axis: a list of ``{(stage, replica): factor}`` dicts or
-    [M, I] slowdown arrays; omitted = all healthy); results come back in
-    task order. Every task's replica configs pad to the sweep's common
-    ``I_max`` (absent slots are masked out), so the whole replica /
-    straggler grid shares one compiled executable per
-    ``(M_pad, I_max, J, P, flags)`` shape family. Tasks with a common
-    job count batch into a single engine call (stages padded to the
-    largest DAG; the scenario axis shards across host devices);
+    [M, I] slowdown arrays; omitted = all healthy) and ``price_traces``
+    (a pricing axis: portfolio variants / per-provider
+    :class:`.cost.PriceTrace` lists; omitted = the sweep's
+    ``portfolio``); results come back in task order. Every task's
+    replica configs pad to the sweep's common ``I_max`` (absent slots
+    are masked out) and every price trace to the common segment bound
+    ``S`` (padded segments never activate), so the whole
+    replica / straggler / pricing grid shares one compiled executable
+    per ``(M_pad, I_max, J, P, S, flags)`` shape family. Tasks with a
+    common job count batch into a single engine call (stages padded to
+    the largest DAG; the scenario axis shards across host devices);
     differing job counts fall back to one call per group.
 
     Malformed inputs fail fast with a :class:`ValueError` naming the
@@ -930,7 +1102,8 @@ def sweep_scenarios(
             init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des",
             portfolio=portfolio, arrivals=t.get("arrivals"),
             replicas=t.get("replicas"),
-            replica_speeds=t.get("replica_speeds"))
+            replica_speeds=t.get("replica_speeds"),
+            price_traces=t.get("price_traces"))
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -940,17 +1113,21 @@ def sweep_scenarios(
         raise ValueError("engine='vector' requires t0 >= 0")
 
     M_pad = max(t["dag"].num_stages for t in tasks)
-    # normalize each task's replica axis once (validates with the task's
-    # name, materializes one-shot iterators); the replica bound covers
-    # every task's autoscaling axis, so one shape family serves the
-    # whole sweep
+    # normalize each task's replica and price-trace axes once (validates
+    # with the task's name, materializes one-shot iterators); the replica
+    # and segment bounds cover every task's axes, so one shape family
+    # serves the whole sweep
     tasks = [dict(t) for t in tasks]
+    base_pf = as_portfolio(portfolio, cost_model)
     for i, t in enumerate(tasks):
         if t.get("replicas") is not None:
             t["replicas"] = _norm_replica_axis(t["replicas"], t["dag"],
                                                where=f"tasks[{i}]")
+        t["price_traces"] = _norm_trace_axis(t.get("price_traces"), base_pf,
+                                             where=f"tasks[{i}]")
     I_max = max(_max_replica_bound(t["dag"], t.get("replicas"))
                 for t in tasks)
+    S_seg = max(_max_segment_bound(t["price_traces"]) for t in tasks)
     prepped = [_Task(t["dag"], t["pred"], t.get("act"),
                      t.get("c_max_grid", (60.0,)),
                      t.get("orders", ("spt",)), cost_model, t0, M_pad,
@@ -959,6 +1136,7 @@ def sweep_scenarios(
                      arrivals=t.get("arrivals"),
                      replicas=t.get("replicas"),
                      replica_speeds=t.get("replica_speeds"),
+                     price_traces=t["price_traces"], S_seg=S_seg,
                      where=f"tasks[{i}]")
                for i, t in enumerate(tasks)]
 
@@ -984,7 +1162,9 @@ def sweep_scenarios(
                 release=None if p.release is None
                 else np.zeros((p.S, 0)),
                 replica=np.full((p.S, 0, p.M), -1, dtype=np.int64),
-                replicas=p.repl_out.copy()))
+                replicas=p.repl_out.copy(),
+                segment=np.full((p.S, 0, p.M), -1, dtype=np.int64),
+                trace_idx=p.trace_out.copy()))
         else:
             results.append(_run_task(p, I_max, bool(include_transfers),
                                      bool(init_phase), bool(adaptive)))

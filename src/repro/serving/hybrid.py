@@ -38,6 +38,15 @@ cost being elastic overflow spend plus the reserved pod
 (replica-seconds at a committed-use discount of the elastic rate). That is the serving
 analogue of the paper's Fig.-5 robustness story: how much pool does a
 target attainment need, and what does each extra replica buy.
+
+``spot_frontier`` is the pricing mode: elastic pool prices become
+piecewise-constant *traces* over the serving horizon
+(:class:`.core.cost.PriceTrace` — spot markets, diurnal tariffs), each
+offloaded request billed in the segment active at its offload epoch.
+Pricing is scenario data too, so a whole grid of market scenarios x SLA
+deadlines evaluates as one batched call and comes back Pareto-tagged —
+under which market, and how tight an SLA, is overflow serving still
+worth it.
 """
 from __future__ import annotations
 
@@ -49,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.arrivals import ArrivalsLike, resolve_release
-from ..core.cost import (USD_PER_GB_MS, CostModel, Provider,
+from ..core.cost import (USD_PER_GB_MS, CostModel, PriceTrace, Provider,
                          ProviderPortfolio)
 from ..core.dag import AppDAG, Stage
 from ..core.greedy import init_offload_jax, t_max
@@ -294,6 +303,89 @@ class AutoscaleFrontier:
         return "\n".join(lines)
 
 
+def spot_elastic_traces(n: int = 3, num_segments: int = 6,
+                        horizon_s: float = 60.0, seed: int = 0,
+                        volatility: float = 0.4,
+                        families: Optional[int] = None,
+                        ) -> List[Tuple[PriceTrace, ...]]:
+    """``families`` spot-market pricings of :func:`elastic_portfolio`'s
+    ``n`` pools (default: one family per pool): per family, one
+    :class:`PriceTrace` per provider — ready to pass as a
+    ``price_traces=`` axis / ``trace_grid``. Each trace's rate and
+    egress follow the shared :func:`.core.cost.price_walk` market model
+    (latency held flat — elastic attach behavior is a pool property, not
+    market state), so every market opens at the flat pool tariff and
+    drifts from there."""
+    from ..core.cost import price_walk
+
+    base = elastic_portfolio(n)
+    out = []
+    rng = np.random.default_rng(seed)
+    S = int(num_segments)
+    bps = tuple(horizon_s * (s + 1) / S for s in range(S - 1))
+    for _ in range(max(int(n if families is None else families), 1)):
+        traces = []
+        for p in base.providers:
+            walk = price_walk(rng, S, volatility)
+            traces.append(PriceTrace(
+                usd_per_gb_ms=tuple(p.usd_per_gb_ms * walk),
+                egress_usd_per_gb=tuple(p.egress_usd_per_gb * walk),
+                latency_mult=(p.latency_mult,) * S,
+                breakpoints=bps))
+        out.append(tuple(traces))
+    return out
+
+
+@dataclasses.dataclass
+class SpotFrontier:
+    """One pricing sweep: price-trace families x deadlines, Pareto-tagged.
+
+    Scenario ``s`` ran trace family ``trace_idx[s]`` (an index into the
+    ``trace_grid`` handed to :meth:`HybridServingScheduler.spot_frontier`)
+    with scheduler deadline ``c_max[s]``; ``sla`` measures attainment
+    against the one fixed target ``sla_s``, so every point reports on the
+    same promise. ``cost_usd`` is the elastic overflow spend under that
+    scenario's market (decision-epoch priced — each offload billed in
+    the segment active at its offload epoch). ``pareto`` marks the
+    non-dominated (cost, sla) points; ``result`` keeps the full batched
+    :class:`VectorSimResult` (providers, segments, times) for drill-down.
+    """
+
+    trace_idx: np.ndarray    # [S] which trace family
+    c_max: np.ndarray        # [S] scheduler deadline knob
+    sla_s: float             # the fixed SLA target all points report on
+    sla: np.ndarray          # [S] fraction of requests meeting sla_s
+    cost_usd: np.ndarray     # [S] elastic overflow spend
+    makespan: np.ndarray     # [S]
+    pareto: np.ndarray       # [S] bool: on the cost/SLA frontier
+    result: VectorSimResult
+
+    @property
+    def num_scenarios(self) -> int:
+        return int(self.cost_usd.shape[0])
+
+    def frontier(self) -> np.ndarray:
+        """Indices of the non-dominated points, cheapest first."""
+        idx = np.flatnonzero(self.pareto)
+        return idx[np.argsort(self.cost_usd[idx], kind="stable")]
+
+    def per_trace_cost(self) -> np.ndarray:
+        """[T] total overflow spend per trace family (summed over its
+        deadline grid) — the headline \"what does this market cost us\"."""
+        T = int(self.trace_idx.max()) + 1 if self.trace_idx.size else 0
+        return np.array([self.cost_usd[self.trace_idx == t].sum()
+                         for t in range(T)])
+
+    def table(self) -> str:
+        """The frontier as an aligned text table (cheapest first)."""
+        lines = [f"{'trace':>6} {'c_max s':>8} {'SLA':>6} {'cost $':>10}"]
+        for s in self.frontier():
+            lines.append(
+                f"{int(self.trace_idx[s]):>6} {self.c_max[s]:8.2f} "
+                f"{self.sla[s]:6.3f} {self.cost_usd[s]:10.5f}")
+        return "\n".join(lines)
+
+
 class HybridServingScheduler:
     """Skedulix over a pod of serving replicas + elastic overflow."""
 
@@ -433,6 +525,50 @@ class HybridServingScheduler:
             public_usd=res.cost_usd, reserve_usd=reserve, total_usd=total,
             makespan=res.makespan, pareto=pareto_mask(total, sla),
             result=res)
+
+    def spot_frontier(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
+                      trace_grid: Sequence,
+                      c_max_grid: Sequence[float],
+                      order: str = "spt", seed: int = 1,
+                      use_ridge: bool = True, engine: str = "vector",
+                      sla_s: Optional[float] = None,
+                      t0: float = 0.0) -> SpotFrontier:
+        """Sweep elastic-pricing families against SLA deadlines in one
+        batched call and return the cost/SLA Pareto frontier.
+
+        ``trace_grid`` entries are pricings of the scheduler's elastic
+        pools — :class:`.core.cost.PriceTrace` tuples (one per provider,
+        e.g. from :func:`spot_elastic_traces`), whole
+        :class:`ProviderPortfolio` variants (e.g.
+        :func:`.core.cost.diurnal_portfolio`), or ``None`` for the flat
+        base pricing; ``c_max_grid`` sweeps the scheduler's deadline
+        knob. Pricing is scenario *data* in the vector engine
+        (segment-indexed billing matrices), so the whole
+        ``markets x deadlines`` grid runs as a single device call — the
+        pricing analogue of :meth:`autoscale_frontier`'s pod-sizing
+        sweep, answering \"under which market, and how tight an SLA, is
+        overflow serving still worth it\". Attainment is measured
+        against the fixed target ``sla_s`` (default: the tightest
+        deadline of the grid). Each offloaded request bills in the price
+        segment active at its offload epoch (decision-epoch pricing), so
+        a market spike mid-horizon genuinely lands on the requests
+        offloaded during it.
+        """
+        trace_grid = list(trace_grid)
+        pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
+        res = self.sched.schedule_sweep(
+            c_max_grid, pred=pred, act=act, orders=(order,), engine=engine,
+            price_traces=trace_grid, t0=t0)
+        sla_s = float(min(c_max_grid) if sla_s is None else sla_s)
+        rel = (np.full_like(res.completion, t0) if res.release is None
+               else res.release)
+        flow = res.completion - rel
+        sla = ((flow <= sla_s + 1e-9).mean(axis=1)
+               if flow.shape[1] else np.ones(res.num_scenarios))
+        return SpotFrontier(
+            trace_idx=res.trace_idx, c_max=res.c_max, sla_s=sla_s, sla=sla,
+            cost_usd=res.cost_usd, makespan=res.makespan,
+            pareto=pareto_mask(res.cost_usd, sla), result=res)
 
     def serve_online(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
                      arrivals: ArrivalsLike, sla_s: float,

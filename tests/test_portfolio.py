@@ -7,6 +7,8 @@ providers by cost, identically in the DES, the vector engine and (as a
 lower bound) the MILP; and the cost-model correctness fixes
 (min-quantums billing floor, float64 ACD twin) hold in both twins.
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -195,24 +197,98 @@ def test_multi_provider_engine_matches_des(dag, pf):
     np.testing.assert_array_equal(v.provider, d.provider)
 
 
+def _spread_workload(dag, seed=0, lo=-2.2, hi=0.4):
+    """Fig.-4 workload with per-job scales spread over 2.6 decades, so the
+    cheapest provider genuinely differs across jobs (the fine-quantum
+    premium provider wins the short ones, the coarse discounter the
+    long ones)."""
+    pred, act = workload(dag, J, seed)
+    scale = np.logspace(lo, hi, J)[:, None]
+    for d in (pred, act):
+        for key in ("P_private", "P_public"):
+            d[key] = d[key] * scale
+    return pred, act
+
+
+def affinity_argmin_expected(dag, pf, pred, provider):
+    """The documented placement rule, recomputed from an executed
+    schedule: per offloaded (job, stage), argmin over providers of the
+    predicted selection cost plus the cross-provider egress penalty of
+    every public predecessor (static single-segment portfolios, so the
+    offload epoch does not matter). Penalties accumulate in topological
+    predecessor order — the association both engines use."""
+    from repro.core.cost import EGRESS_GB_PER_S
+    sel = pf.np_selection_costs(pred["P_public"], dag.mem_mb,
+                                pred["download"], dag.is_sink)
+    eg0 = pf.egress_seg()[:, 0]
+    dgb = pred["download"] * EGRESS_GB_PER_S
+    pos = {s: i for i, s in enumerate(dag.topo_order())}
+    preds_topo = [sorted(ps, key=pos.__getitem__) for ps in dag.pred_lists]
+    iota = np.arange(pf.num_providers)
+    expect = np.full_like(provider, -1)
+    for k in dag.topo_order():
+        for j in range(provider.shape[0]):
+            if provider[j, k] < 0:
+                continue
+            c = sel[:, j, k]
+            for u in preds_topo[k]:
+                lu = provider[j, u]
+                if lu >= 0:
+                    c = c + np.where(iota != lu, eg0[lu] * dgb[j, u], 0.0)
+            expect[j, k] = int(np.argmin(c))
+    return expect
+
+
 def test_acd_eviction_picks_provider_by_cost():
-    """>= 2 providers actually win stages in one schedule, and every
-    placement is the argmin of the predicted selection cost."""
+    """Egress-free regime: >= 2 providers actually win stages in one
+    schedule, every placement is the static argmin of the predicted
+    selection cost (no switch penalty without egress), and the portfolio
+    is strictly cheaper than forcing any single provider."""
     dag = APPS["video"]
-    pred, act = workload(dag, J, 0)
-    c_tight = grid_for(dag, pred, (0.3,))[0]
-    res = simulate(dag, pred, act, c_max=c_tight, order="spt", portfolio=PF3)
+    pred, act = _spread_workload(dag)
+    free = ProviderPortfolio(tuple(
+        dataclasses.replace(p, egress_usd_per_gb=0.0)
+        for p in PF3.providers))
+    c_tight = grid_for(dag, pred, (0.05,))[0]
+    res = simulate(dag, pred, act, c_max=c_tight, order="spt",
+                   portfolio=free)
     used = np.unique(res.provider[res.provider >= 0])
     assert len(used) >= 2, f"expected >=2 providers in play, got {used}"
-    sel = PF3.np_selection_costs(pred["P_public"], dag.mem_mb,
-                                 pred["download"], dag.is_sink)
-    expect = PF3.select(sel)
+    sel = free.np_selection_costs(pred["P_public"], dag.mem_mb,
+                                  pred["download"], dag.is_sink)
+    expect = free.select(sel)
     np.testing.assert_array_equal(res.provider[res.provider >= 0],
                                   expect[res.provider >= 0])
-    # and the portfolio is strictly cheaper than forcing provider 0 alone
-    solo = ProviderPortfolio((PF3.providers[0],))
-    res0 = simulate(dag, pred, act, c_max=c_tight, order="spt", portfolio=solo)
-    assert res.cost_usd < res0.cost_usd
+    # and the portfolio is strictly cheaper than forcing any one provider
+    for p in free.providers:
+        solo = simulate(dag, pred, act, c_max=c_tight, order="spt",
+                        portfolio=ProviderPortfolio((p,)))
+        assert res.cost_usd < solo.cost_usd
+
+
+def test_eviction_placement_is_affinity_aware_argmin():
+    """With egress priced, placement follows the *affinity-aware* argmin:
+    the selection cost plus each public predecessor's egress penalty for
+    switching providers — cascades stay put unless the price gap covers
+    the hop. The executed placements must reproduce that rule exactly
+    (and identically on both engines)."""
+    dag = APPS["video"]
+    pred, act = _spread_workload(dag)
+    c_tight = grid_for(dag, pred, (0.02,))[0]
+    res = simulate(dag, pred, act, c_max=c_tight, order="spt",
+                   portfolio=PF3)
+    used = np.unique(res.provider[res.provider >= 0])
+    assert len(used) >= 2, f"expected >=2 providers in play, got {used}"
+    expect = affinity_argmin_expected(dag, PF3, pred, res.provider)
+    np.testing.assert_array_equal(res.provider, expect)
+    v = simulate(dag, pred, act, c_max=c_tight, order="spt",
+                 portfolio=PF3, engine="vector")
+    np.testing.assert_array_equal(v.provider, res.provider)
+    np.testing.assert_array_equal(v.segment, res.segment)
+    assert np.isclose(v.cost_usd, res.cost_usd)
+    # (cascade stickiness itself is covered by the affinity_argmin_expected
+    # check above; this only pins that a static portfolio bills segment 0)
+    assert (res.segment[res.provider >= 0] == 0).all()
 
 
 def test_pinned_stage_needs_no_feasible_provider():

@@ -1,0 +1,511 @@
+"""Time-dependent provider pricing: traces, decision-epoch placement,
+engine parity, the price_traces scenario axis, and the MILP bound.
+
+Covers the ISSUE-5 acceptance rails: DES==vector exact on multi-segment,
+multi-provider spot portfolios — including the provider *and* segment
+chosen per (job, stage) — with the 1-segment path bit-exact against the
+static portfolio; trace edge cases (a stage spanning a price breakpoint,
+zero-length segments, breakpoint-boundary pricing); cross-provider
+cascade egress; and the "uniformly cheaper trace never costs more"
+monotonicity (deterministic here, hypothesis twin in test_property.py).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (APPS, AppDAG, LAMBDA_COST, PriceTrace, Provider,
+                        ProviderPortfolio, Stage, demo_portfolio,
+                        diurnal_portfolio, scaled_portfolio, simulate,
+                        solve_milp, spot_portfolio)
+from repro.core.cost import EGRESS_GB_PER_S, USD_PER_GB_MS
+from repro.core.vectorsim import simulate_scenarios, sweep_scenarios
+
+from .test_vectorsim import (FIELDS, J, assert_equivalent, grid_for,
+                             workload)
+
+
+# -- PriceTrace construction / validation ----------------------------------
+
+class TestPriceTrace:
+    def test_zero_length_segment_rejected(self):
+        with pytest.raises(ValueError, match="zero-length segment"):
+            PriceTrace((1.0, 2.0, 3.0), breakpoints=(5.0, 5.0))
+        with pytest.raises(ValueError, match="strictly increasing"):
+            PriceTrace((1.0, 2.0, 3.0), breakpoints=(5.0, 4.0))
+
+    def test_length_mismatches_rejected(self):
+        with pytest.raises(ValueError, match="breakpoints"):
+            PriceTrace((1.0, 2.0), breakpoints=(1.0, 2.0))
+        with pytest.raises(ValueError, match="latency_mult"):
+            PriceTrace((1.0, 2.0), latency_mult=(1.0,),
+                       breakpoints=(1.0,))
+        with pytest.raises(ValueError, match="egress"):
+            PriceTrace((1.0,), egress_usd_per_gb=(0.1, 0.2))
+
+    def test_bad_values_rejected(self):
+        with pytest.raises(ValueError, match="finite"):
+            PriceTrace((np.inf,))
+        with pytest.raises(ValueError, match="> 0"):
+            PriceTrace((1.0,), latency_mult=(0.0,))
+        with pytest.raises(ValueError, match="finite"):
+            PriceTrace((1.0, 2.0), breakpoints=(np.inf,))
+        with pytest.raises(ValueError, match="at least one segment"):
+            PriceTrace(())
+
+    def test_segment_at_breakpoint_boundary(self):
+        """The new price applies *at* the breakpoint instant."""
+        tr = PriceTrace((1.0, 2.0, 3.0), breakpoints=(10.0, 20.0))
+        assert tr.segment_at(0.0) == 0
+        assert tr.segment_at(10.0 - 1e-9) == 0
+        assert tr.segment_at(10.0) == 1
+        assert tr.segment_at(20.0) == 2
+        assert tr.segment_at(1e9) == 2
+        assert tr.num_segments == 3
+        assert tr.edges()[0] == -np.inf
+
+    def test_provider_effective_trace_roundtrip(self):
+        p = Provider("x", usd_per_gb_ms=2 * USD_PER_GB_MS,
+                     egress_usd_per_gb=0.07, latency_mult=1.3)
+        tr = p.effective_trace()
+        assert tr.num_segments == 1
+        assert tr.usd_per_gb_ms == (p.usd_per_gb_ms,)
+        assert tr.egress_usd_per_gb == (0.07,)
+        assert tr.latency_mult == (1.3,)
+        assert p.with_trace(tr).effective_trace() is tr
+
+    def test_segment_padding_never_activates(self):
+        pf = spot_portfolio(3, 4)
+        edges = pf.segment_edges(7)
+        assert edges.shape == (3, 7)
+        assert np.isinf(edges[:, 4:]).all() and (edges[:, 4:] > 0).all()
+        # padded segments repeat the last real prices
+        lat = pf.latency_mults_seg(7)
+        np.testing.assert_array_equal(lat[:, 4:], lat[:, 3:4].repeat(3, 1))
+        with pytest.raises(ValueError, match="cannot pad"):
+            pf.segment_edges(2)
+
+
+# -- decision-epoch billing semantics (DES, deterministic) -----------------
+
+def _one_stage_dag(replicas=1):
+    return AppDAG("one", (Stage("s", replicas=replicas),), ())
+
+
+def _flat_then_double(break_at: float) -> ProviderPortfolio:
+    """One provider whose rate doubles (and latency halves) at t=break_at."""
+    return ProviderPortfolio((Provider(
+        "p", quantum_ms=100.0,
+        trace=PriceTrace(
+            usd_per_gb_ms=(USD_PER_GB_MS, 2 * USD_PER_GB_MS),
+            egress_usd_per_gb=(0.0, 0.0),
+            latency_mult=(1.0, 0.5),
+            breakpoints=(break_at,))),))
+
+
+@pytest.mark.parametrize("engine", ["des", "vector"])
+class TestDecisionEpochPricing:
+    def test_stage_spanning_breakpoint_bills_locked_segment(self, engine):
+        """A stage offloaded in segment 0 whose execution runs across the
+        breakpoint bills segment 0's rate for the *whole* duration (the
+        price locks at the offload epoch), and keeps segment 0's latency
+        multiplier for the run."""
+        dag = _one_stage_dag()
+        P = np.array([[5.0]])          # runs 0 -> 5
+        pred = dict(P_private=P, P_public=P)
+        pf = _flat_then_double(break_at=2.0)   # price doubles mid-run
+        res = simulate(dag, pred, c_max=0.0, include_transfers=False,
+                       adaptive=False, portfolio=pf, engine=engine)
+        assert res.segment[0, 0] == 0
+        np.testing.assert_allclose(
+            res.cost_usd, float(LAMBDA_COST.np_cost(5000.0, 1024.0)))
+        np.testing.assert_allclose(res.end - res.start, 5.0)
+
+    def test_later_offload_epoch_lands_in_later_segment(self, engine):
+        """The same job arriving after the breakpoint bills the new
+        segment: double rate, half latency."""
+        dag = _one_stage_dag()
+        P = np.array([[5.0]])
+        pred = dict(P_private=P, P_public=P)
+        pf = _flat_then_double(break_at=2.0)
+        res = simulate(dag, pred, c_max=0.0, include_transfers=False,
+                       adaptive=False, portfolio=pf, arrivals=[3.0],
+                       engine=engine)
+        assert res.segment[0, 0] == 1
+        np.testing.assert_allclose(
+            res.cost_usd, float(LAMBDA_COST.np_cost(2 * 2500.0, 1024.0)))
+        np.testing.assert_allclose(res.end - res.start, 2.5)
+
+    def test_offload_exactly_at_breakpoint_takes_new_price(self, engine):
+        dag = _one_stage_dag()
+        P = np.array([[1.0]])
+        pred = dict(P_private=P, P_public=P)
+        pf = _flat_then_double(break_at=2.0)
+        res = simulate(dag, pred, c_max=0.0, include_transfers=False,
+                       adaptive=False, portfolio=pf, arrivals=[2.0],
+                       engine=engine)
+        assert res.segment[0, 0] == 1
+
+    def test_eviction_reprices_at_eviction_time(self, engine):
+        """Queued jobs evicted by the ACD after a breakpoint bill the
+        segment active at the *eviction* instant, not at t0."""
+        dag = _one_stage_dag(replicas=1)
+        # job 0 occupies the replica until t=4; job 1's ACD goes negative
+        # while waiting, evicting it after the t=2 breakpoint
+        P = np.array([[4.0], [4.0]])
+        pred = dict(P_private=P, P_public=P)
+        pf = _flat_then_double(break_at=2.0)
+        res = simulate(dag, pred, c_max=5.0, include_transfers=False,
+                       init_phase=False, portfolio=pf, arrivals=[0.0, 2.5],
+                       engine=engine)
+        assert res.provider[0, 0] == -1          # job 0 ran private
+        assert res.provider[1, 0] == 0 and res.segment[1, 0] == 1
+        np.testing.assert_allclose(
+            res.cost_usd, float(LAMBDA_COST.np_cost(2 * 2000.0, 1024.0)))
+
+
+# -- 1-segment bit-exactness & engine equivalence --------------------------
+
+def test_one_segment_trace_bit_exact_vs_static_portfolio():
+    """Wrapping every provider's static fields as a constant 1-segment
+    trace reproduces the static portfolio byte-for-byte on both engines
+    (whether the wrap takes the static fast path or the segmented one)."""
+    base = demo_portfolio(3)
+    wrapped = ProviderPortfolio(tuple(
+        p.with_trace(p.effective_trace()) for p in base.providers))
+    # also force the *segmented* (dynamic) pipeline with identical prices
+    # via a far-away breakpoint that never activates before the horizon
+    far = ProviderPortfolio(tuple(
+        p.with_trace(PriceTrace(
+            usd_per_gb_ms=(p.usd_per_gb_ms,) * 2,
+            egress_usd_per_gb=(p.egress_usd_per_gb,) * 2,
+            latency_mult=(p.latency_mult,) * 2,
+            breakpoints=(1e15,))) for p in base.providers))
+    assert wrapped.is_static and not far.is_static
+    for dag in (APPS["video"], APPS["image"]):
+        pred, act = workload(dag, J, 0)
+        kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"))
+        for engine in ("des", "vector"):
+            a = simulate_scenarios(dag, pred, act, **kw, engine=engine,
+                                   portfolio=base)
+            for pf in (wrapped, far):
+                b = simulate_scenarios(dag, pred, act, **kw, engine=engine,
+                                       portfolio=pf)
+                for fld in FIELDS:
+                    av = np.nan_to_num(
+                        np.asarray(getattr(a, fld), float), nan=-1)
+                    bv = np.nan_to_num(
+                        np.asarray(getattr(b, fld), float), nan=-1)
+                    np.testing.assert_array_equal(av, bv, err_msg=fld)
+
+
+@pytest.mark.parametrize("dag", [APPS["video"], APPS["image"]],
+                         ids=lambda d: d.name)
+def test_spot_portfolio_engine_matches_des(dag):
+    """DES==vector exact on a multi-segment, multi-provider spot
+    portfolio — including the provider *and* segment assignment."""
+    pred, act = workload(dag, J, 3)
+    grid = grid_for(dag, pred)
+    pf = spot_portfolio(3, 6, horizon_s=float(max(grid)))
+    kw = dict(c_max_grid=grid, orders=("spt", "hcf"), portfolio=pf)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+    np.testing.assert_array_equal(v.provider, d.provider)
+    np.testing.assert_array_equal(v.segment, d.segment)
+    # the trace genuinely bites: multiple segments appear
+    assert len(np.unique(v.segment[v.segment >= 0])) >= 2
+
+
+def test_diurnal_tariffs_rotate_with_phase():
+    """Provider i's tariff at time t follows its own phase-anchored
+    half-period grid — peak iff floor((t - phase_i)/half) is even — so
+    phase-shifted providers genuinely disagree (with n=2, they are in
+    strict anti-phase) instead of collapsing onto provider 0's schedule.
+    """
+    period, cycles = 40.0, 2
+    for n in (2, 3):
+        pf = diurnal_portfolio(n, period_s=period, cycles=cycles,
+                               peak_mult=1.6, off_mult=0.7)
+        base = demo_portfolio(n)
+        half = period / 2.0
+        for t in np.linspace(0.0, period * cycles - 1e-6, 37):
+            for i, (p, q) in enumerate(zip(pf.providers, base.providers)):
+                tr = p.effective_trace()
+                got = tr.usd_per_gb_ms[tr.segment_at(t)]
+                h = int(np.floor((t - period * i / n) / half))
+                want = q.usd_per_gb_ms * (1.6 if h % 2 == 0 else 0.7)
+                assert got == pytest.approx(want), (n, i, t)
+    # anti-phase pair: never simultaneously on the same tariff
+    pf2 = diurnal_portfolio(2, period_s=period)
+    b2 = demo_portfolio(2)
+    for t in np.linspace(0.0, period * 2 - 1e-6, 29):
+        states = [p.effective_trace().usd_per_gb_ms[
+                      p.effective_trace().segment_at(t)] / q.usd_per_gb_ms
+                  for p, q in zip(pf2.providers, b2.providers)]
+        assert states[0] != states[1], t
+
+
+def test_diurnal_portfolio_engine_matches_des():
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 5)
+    grid = grid_for(dag, pred, (0.3, 0.7))
+    pf = diurnal_portfolio(3, period_s=float(max(grid)) / 2)
+    kw = dict(c_max_grid=grid, orders=("spt", "hcf"), portfolio=pf)
+    v = simulate_scenarios(dag, pred, act, **kw)
+    d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+    assert_equivalent(v, d)
+
+
+def test_segment_field_semantics():
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 1)
+    pf = spot_portfolio(3, 4, horizon_s=10.0)
+    res = simulate(dag, pred, act, c_max=grid_for(dag, pred, (0.4,))[0],
+                   portfolio=pf)
+    assert ((res.segment >= 0) == (res.provider >= 0)).all()
+    assert res.segment.max() < 4
+
+
+# -- cross-provider cascade egress -----------------------------------------
+
+@pytest.mark.parametrize("engine", ["des", "vector"])
+def test_cross_provider_cascade_pays_egress(engine):
+    """A 2-stage cascade whose stages land on different providers pays
+    the upstream provider's egress on the edge volume; zeroing the
+    egress removes exactly that charge. The downstream stage's own
+    selection penalty is what makes switching rational only when the
+    price gap covers the hop."""
+    dag = AppDAG("chain", (Stage("a", 1), Stage("b", 1)), ((0, 1),))
+    # provider 0 wins stage a (short), provider 1 wins stage b (long) by
+    # a margin larger than any switch penalty
+    pf = ProviderPortfolio((
+        Provider("fine", quantum_ms=1.0, usd_per_gb_ms=USD_PER_GB_MS,
+                 egress_usd_per_gb=0.10),
+        Provider("coarse", quantum_ms=1000.0,
+                 usd_per_gb_ms=0.5 * USD_PER_GB_MS,
+                 egress_usd_per_gb=0.02),
+    ))
+    # stage a (50 ms): fine bills 50 ms, coarse a whole 500-equivalent
+    # quantum -> fine wins. stage b (60 s): coarse's rate cut + cheaper
+    # sink egress save ~1.5e-3 USD, the 0.01-s edge's switch penalty only
+    # 1.25e-4 -> the cascade rationally hops providers and pays the
+    # egress.
+    P_pub = np.array([[0.05, 60.0]])
+    pred = dict(P_private=np.array([[1e9, 1e9]]), P_public=P_pub,
+                upload=np.zeros((1, 2)), download=np.array([[0.01, 0.1]]))
+    kw = dict(c_max=0.0, adaptive=False, engine=engine)
+    res = simulate(dag, pred, portfolio=pf, **kw)
+    np.testing.assert_array_equal(res.provider[0], [0, 1])
+    free = ProviderPortfolio(tuple(
+        dataclasses.replace(p, egress_usd_per_gb=0.0) for p in pf.providers))
+    res0 = simulate(dag, pred, portfolio=free, **kw)
+    np.testing.assert_array_equal(res0.provider[0], [0, 1])
+    # delta = stage-a egress of the moved edge (0.10 $/GB, volume of
+    # download[0, 0]) + stage-b sink egress (0.02 $/GB on download[0, 1])
+    moved = 0.10 * 0.01 * EGRESS_GB_PER_S
+    sink = 0.02 * 0.1 * EGRESS_GB_PER_S
+    np.testing.assert_allclose(res.cost_usd - res0.cost_usd, moved + sink)
+
+
+@pytest.mark.parametrize("engine", ["des", "vector"])
+def test_affinity_penalty_keeps_cascade_on_one_provider(engine):
+    """When the price gap does NOT cover the hop, the downstream stage
+    stays on the upstream provider even though it is not its solo
+    argmin."""
+    dag = AppDAG("chain", (Stage("a", 1), Stage("b", 1)), ((0, 1),))
+    pf = ProviderPortfolio((
+        Provider("cheap-egress", usd_per_gb_ms=USD_PER_GB_MS,
+                 egress_usd_per_gb=0.50),
+        Provider("slightly-cheaper", usd_per_gb_ms=0.99 * USD_PER_GB_MS,
+                 egress_usd_per_gb=0.50),
+    ))
+    pred = dict(P_private=np.array([[1e9, 1e9]]),
+                P_public=np.array([[1.0, 1.0]]),
+                upload=np.zeros((1, 2)), download=np.array([[2.0, 2.0]]))
+    res = simulate(dag, pred, c_max=0.0, adaptive=False, portfolio=pf,
+                   engine=engine)
+    # stage b's solo argmin is provider 1, but moving the edge costs
+    # 0.5 $/GB * 0.25 GB >> the 1% execution discount
+    np.testing.assert_array_equal(res.provider[0], [1, 1])
+
+
+# -- the price_traces scenario axis ----------------------------------------
+
+@pytest.mark.parametrize("engine", ["vector", "des"])
+def test_price_traces_axis_matches_des(engine):
+    dag = APPS["video"]
+    pred, act = workload(dag, J, 2)
+    grid = grid_for(dag, pred, (0.4, 0.9))
+    base = demo_portfolio(3)
+    traces = [None, spot_portfolio(3, 5, horizon_s=float(max(grid))),
+              diurnal_portfolio(3, period_s=float(max(grid)) / 2)]
+    kw = dict(c_max_grid=grid, orders=("spt",), portfolio=base,
+              price_traces=traces)
+    res = simulate_scenarios(dag, pred, act, **kw, engine=engine)
+    assert res.num_scenarios == 2 * 3
+    np.testing.assert_array_equal(res.trace_idx, [0, 1, 2] * 2)
+    if engine == "vector":
+        d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+        assert_equivalent(res, d)
+        np.testing.assert_array_equal(res.trace_idx, d.trace_idx)
+
+
+def test_degenerate_trace_axis_bit_exact():
+    """price_traces=[None] is the pre-axis path, bit for bit."""
+    dag = APPS["image"]
+    pred, act = workload(dag, J, 6)
+    kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"),
+              portfolio=demo_portfolio(3))
+    base = simulate_scenarios(dag, pred, act, **kw)
+    one = simulate_scenarios(dag, pred, act, **kw, price_traces=[None])
+    for fld in FIELDS:
+        a = np.nan_to_num(np.asarray(getattr(base, fld), float), nan=-1.0)
+        b = np.nan_to_num(np.asarray(getattr(one, fld), float), nan=-1.0)
+        np.testing.assert_array_equal(a, b, err_msg=f"field {fld}")
+
+
+@pytest.mark.parametrize("engine", ["vector", "des"])
+def test_trace_axis_validation_names_offender(engine):
+    dag = APPS["matrix"]
+    pred, act = workload(dag, 8, 0)
+    base = demo_portfolio(3)
+    with pytest.raises(ValueError, match=r"price_traces\[0\]"):
+        simulate_scenarios(dag, pred, act, engine=engine, portfolio=base,
+                           price_traces=[demo_portfolio(2)])
+    with pytest.raises(ValueError, match=r"price_traces\[1\]"):
+        simulate_scenarios(dag, pred, act, engine=engine, portfolio=base,
+                           price_traces=[None, [PriceTrace((1.0,))]])
+    with pytest.raises(ValueError, match="price_traces axis is empty"):
+        simulate_scenarios(dag, pred, act, engine=engine, portfolio=base,
+                           price_traces=[])
+    with pytest.raises(ValueError, match=r"tasks\[1\].*price_traces\[0\]"):
+        sweep_scenarios(
+            [dict(dag=dag, pred=pred, act=act),
+             dict(dag=dag, pred=pred, act=act,
+                  price_traces=[demo_portfolio(2)])],
+            portfolio=base)
+
+
+def test_mixed_segment_counts_share_one_sweep():
+    """Tasks whose trace axes have different segment counts pad to the
+    sweep-wide bound and still agree with the DES replay."""
+    dag_a, dag_b = APPS["video"], APPS["matrix"]
+    pred_a, act_a = workload(dag_a, J, 7)
+    pred_b, act_b = workload(dag_b, J, 8)
+    base = demo_portfolio(2)
+    tasks = [
+        dict(dag=dag_a, pred=pred_a, act=act_a,
+             c_max_grid=grid_for(dag_a, pred_a, (0.4,)),
+             price_traces=[spot_portfolio(2, 6, horizon_s=8.0)]),
+        dict(dag=dag_b, pred=pred_b, act=act_b,
+             c_max_grid=grid_for(dag_b, pred_b, (0.4,)),
+             price_traces=[None, spot_portfolio(2, 3, horizon_s=5.0)]),
+    ]
+    outs = sweep_scenarios(tasks, portfolio=base)
+    for t, v in zip(tasks, outs):
+        d = simulate_scenarios(t["dag"], t["pred"], t["act"],
+                               t["c_max_grid"], ("spt",), engine="des",
+                               portfolio=base,
+                               price_traces=t["price_traces"])
+        assert_equivalent(v, d)
+
+
+# -- uniformly cheaper trace never costs more (deterministic twin) ---------
+
+@pytest.mark.parametrize("engine", ["des", "vector"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_uniformly_cheaper_trace_never_costs_more(engine, seed):
+    """Scaling every segment price of every provider by c <= 1 scales the
+    billed total by exactly c (latency and placement untouched): the
+    hypothesis twin in test_property.py sweeps the factor."""
+    dag = APPS["video"]
+    pred, act = workload(dag, J, seed)
+    grid = grid_for(dag, pred, (0.3, 0.7))
+    pf = spot_portfolio(3, 5, horizon_s=float(max(grid)), seed=seed)
+    cheap = scaled_portfolio(pf, 0.5)
+    kw = dict(c_max_grid=grid, orders=("spt", "hcf"), engine=engine)
+    a = simulate_scenarios(dag, pred, act, **kw, portfolio=pf)
+    b = simulate_scenarios(dag, pred, act, **kw, portfolio=cheap)
+    np.testing.assert_array_equal(a.provider, b.provider)
+    np.testing.assert_array_equal(a.segment, b.segment)
+    np.testing.assert_allclose(b.cost_usd, 0.5 * a.cost_usd, rtol=1e-9)
+    assert (b.cost_usd <= a.cost_usd + 1e-15).all()
+
+
+def test_spot_portfolio_one_segment_is_demo_portfolio():
+    """Walk and wobble both anchor at 1, so spot_portfolio(n, 1) prices
+    exactly like demo_portfolio(n) (and takes the static fast path)."""
+    sp = spot_portfolio(3, 1)
+    base = demo_portfolio(3)
+    assert sp.is_static
+    for p, q in zip(sp.providers, base.providers):
+        tr = p.effective_trace()
+        assert tr.usd_per_gb_ms == (q.usd_per_gb_ms,)
+        assert tr.egress_usd_per_gb == (q.egress_usd_per_gb,)
+        assert tr.latency_mult == (q.latency_mult,)
+
+
+# -- MILP bound on traced portfolios ---------------------------------------
+
+
+def test_milp_deep_past_breakpoint_stays_feasible():
+    """A segment lying entirely before t=0 (|edge| larger than the
+    big-M horizon) must be excluded by bounds, not by a window row that
+    would cut every start time — the MILP must stay feasible and agree
+    with the identical static portfolio."""
+    from repro.core import matrix_app
+    dag = matrix_app(replicas=2)
+    rng = np.random.default_rng(3)
+    P_priv = rng.uniform(1.0, 4.0, (2, 2))
+    P_pub = P_priv * 0.6
+    c_max = 30.0
+    base = demo_portfolio(1)
+    past = ProviderPortfolio(tuple(
+        p.with_trace(PriceTrace(
+            usd_per_gb_ms=(p.usd_per_gb_ms,) * 2,
+            egress_usd_per_gb=(p.egress_usd_per_gb,) * 2,
+            latency_mult=(p.latency_mult,) * 2,
+            breakpoints=(-1e6,))) for p in base.providers))
+    m0 = solve_milp(dag, P_priv, P_pub, c_max, portfolio=base,
+                    time_limit_s=20)
+    m1 = solve_milp(dag, P_priv, P_pub, c_max, portfolio=past,
+                    time_limit_s=20)
+    assert m0.feasible and m1.feasible
+    assert m1.cost_usd == pytest.approx(m0.cost_usd, rel=1e-9, abs=1e-12)
+    assert (m1.segment[m1.provider >= 0] == 1).all()  # the active segment
+
+def test_milp_lower_bounds_greedy_on_spot_portfolio(rng):
+    from repro.core import matrix_app
+    dag = matrix_app(replicas=2)
+    Jm = 5
+    P_priv = rng.uniform(1.0, 4.0, (Jm, 2))
+    P_pub = P_priv * rng.uniform(0.4, 0.8, (Jm, 2))
+    U = np.full_like(P_priv, 0.1)
+    D = np.full_like(P_priv, 0.1)
+    c_max = float(P_priv.sum() / 5.0)
+    pf = spot_portfolio(3, 4, horizon_s=c_max * 1.2)
+    m = solve_milp(dag, P_priv, P_pub, c_max, U, D, time_limit_s=60,
+                   portfolio=pf)
+    assert m.feasible
+    assert m.segment is not None and m.segment.max() >= 0
+    # chosen segments respect their windows: a start inside segment s
+    # (modulo the upload relaxation) — and the bound holds under both
+    # greedy orders even with cross-provider egress billed on top
+    edges = pf.segment_edges()
+    for j in range(Jm):
+        for k in range(dag.num_stages):
+            p, s = m.provider[j, k], m.segment[j, k]
+            if p < 0:
+                continue
+            lo = edges[p, s]
+            hi = edges[p, s + 1] if s + 1 < edges.shape[1] else np.inf
+            up = pf.latency_mults_seg()[p, s] * U[j, k]
+            assert m.s[j, k] >= min(lo, 0.0) - 1e-9
+            assert m.s[j, k] <= hi + up + 1e-9
+    pred = dict(P_private=P_priv, P_public=P_pub, upload=U, download=D)
+    for order in ("spt", "hcf"):
+        for engine in ("des", "vector"):
+            g = simulate(dag, pred, c_max=c_max, order=order, portfolio=pf,
+                         engine=engine)
+            assert m.cost_usd <= g.cost_usd + 1e-9

@@ -5,9 +5,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (AppDAG, LAMBDA_COST, Provider, ProviderPortfolio,
-                        Stage, init_offload, johnson_makespan, lambda_cost,
-                        matrix_app, simulate)
+from repro.core import (AppDAG, LAMBDA_COST, PriceTrace, Provider,
+                        ProviderPortfolio, Stage, init_offload,
+                        johnson_makespan, lambda_cost, matrix_app,
+                        scaled_portfolio, simulate, spot_portfolio)
 from repro.core.cost import USD_PER_GB_MS
 from repro.training.optimizer import (dequantize_q8, dequantize_q8_log,
                                       quantize_q8, quantize_q8_log)
@@ -97,6 +98,66 @@ class TestPortfolioProperties:
         pf = ProviderPortfolio.from_cost_model(LAMBDA_COST)
         h = pf.np_stage_costs(np.array([[t_s]]), np.array([m]))[0, 0, 0]
         assert h == float(LAMBDA_COST.np_cost(t_s * 1e3, m))
+
+
+class TestPriceTraceProperties:
+    """Invariants of time-dependent pricing (core/cost.py PriceTrace)."""
+
+    @given(factor=st.floats(min_value=0.05, max_value=1.0),
+           seed=st.integers(min_value=0, max_value=10**6),
+           frac=st.floats(min_value=0.2, max_value=0.8))
+    @settings(max_examples=20, deadline=None)
+    def test_uniformly_cheaper_trace_never_increases_cost(
+            self, factor, seed, frac):
+        """Scaling every segment price of every provider by c <= 1 leaves
+        placement and timing untouched (latency multipliers and quanta
+        unchanged; keys/argmins are scale-invariant) and scales the
+        billed total by exactly c — so a uniformly cheaper trace never
+        increases total billed cost, on either engine."""
+        rng = np.random.default_rng(seed)
+        dag = matrix_app(replicas=2)
+        J = 8
+        P = rng.uniform(0.5, 5.0, (J, 2))
+        pred = dict(P_private=P, P_public=P * rng.uniform(0.5, 1.5, (J, 2)),
+                    upload=rng.uniform(0.01, 0.2, (J, 2)),
+                    download=rng.uniform(0.01, 0.2, (J, 2)))
+        c_max = float(P.sum()) * frac / 2.0
+        pf = spot_portfolio(2, 3, horizon_s=max(c_max, 1.0), seed=seed)
+        cheap = scaled_portfolio(pf, factor)
+        for engine in ("des", "vector"):
+            a = simulate(dag, pred, c_max=c_max, portfolio=pf,
+                         engine=engine)
+            b = simulate(dag, pred, c_max=c_max, portfolio=cheap,
+                         engine=engine)
+            np.testing.assert_array_equal(a.provider, b.provider)
+            np.testing.assert_array_equal(a.segment, b.segment)
+            assert b.cost_usd <= a.cost_usd + 1e-15, engine
+            np.testing.assert_allclose(b.cost_usd, factor * a.cost_usd,
+                                       rtol=1e-9, atol=1e-18)
+
+    @given(seed=st.integers(min_value=0, max_value=10**6),
+           t=st.floats(min_value=-5.0, max_value=200.0))
+    @settings(max_examples=60, deadline=None)
+    def test_segment_lookup_is_piecewise_constant_partition(self, seed, t):
+        """Every instant belongs to exactly one segment, boundaries take
+        the *new* price, and padding never activates."""
+        rng = np.random.default_rng(seed)
+        S = int(rng.integers(1, 6))
+        bps = np.sort(rng.uniform(0.0, 100.0, S - 1))
+        if len(np.unique(bps)) != S - 1:
+            bps = np.arange(S - 1, dtype=float)  # degenerate draw: respace
+        tr = PriceTrace(tuple(rng.uniform(0.5, 2.0, S)),
+                        breakpoints=tuple(bps))
+        s = tr.segment_at(t)
+        assert 0 <= s < S
+        edges = tr.edges()
+        assert edges[s] <= t
+        if s + 1 < S:
+            assert t < edges[s + 1]
+        pf = ProviderPortfolio((Provider("p", trace=tr),))
+        assert pf.segments_at(t)[0] == s
+        padded = pf.segment_edges(S + 3)
+        assert (np.asarray(padded[0, S:]) == np.inf).all()
 
 
 class TestInitOffloadProperties:

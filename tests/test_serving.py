@@ -107,3 +107,28 @@ class TestHybridScheduler:
             rep = sched.schedule(plen, ntok, c_max=priv.makespan * frac)
             offs.append(rep.result.n_offloaded_stages)
         assert offs[0] >= offs[1] >= offs[2]
+
+    def test_spot_frontier_markets_x_deadlines(self):
+        """Market scenarios x SLA deadlines in one batched call, engine-
+        exact, Pareto frontier non-empty and measured on one SLA."""
+        from repro.serving import elastic_portfolio, spot_elastic_traces
+        h = HybridServingScheduler(get_config("llama3-8b"),
+                                   portfolio=elastic_portfolio(3))
+        rng = np.random.default_rng(7)
+        plen = rng.integers(512, 4096, 48)
+        ntok = rng.integers(64, 512, 48)
+        tot = float(h.lat.latencies(plen, ntok, None)["P_private"].sum()
+                    / h.dag.replicas.sum())
+        grid = spot_elastic_traces(3, num_segments=4,
+                                   horizon_s=tot * 0.6) + [None]
+        cg = tuple(tot * f for f in (0.2, 0.5))
+        f = h.spot_frontier(plen, ntok, grid, c_max_grid=cg, use_ridge=False)
+        assert f.num_scenarios == len(grid) * len(cg)
+        assert f.pareto.any()
+        assert f.per_trace_cost().shape == (len(grid),)
+        assert (f.cost_usd > 0).any()      # markets genuinely billed
+        d = h.spot_frontier(plen, ntok, grid, c_max_grid=cg,
+                            use_ridge=False, engine="des")
+        np.testing.assert_allclose(f.cost_usd, d.cost_usd, rtol=1e-9)
+        np.testing.assert_array_equal(f.result.segment, d.result.segment)
+        np.testing.assert_array_equal(f.result.provider, d.result.provider)

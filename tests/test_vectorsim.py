@@ -16,7 +16,7 @@ from repro.serving.hybrid import serving_dag
 J = 17
 FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
           "n_offloaded_stages", "n_init_offloaded_jobs",
-          "per_stage_offloads", "provider", "replica")
+          "per_stage_offloads", "provider", "replica", "segment")
 
 PINNED_DAG = AppDAG(
     "pinned",
@@ -269,7 +269,7 @@ def test_degenerate_replica_axes_bit_exact():
         dag, pred, act, **kw, replicas=[dag.replicas],
         replica_speeds=[None])
     for fld in ("makespan", "cost_usd", "completion", "start", "end",
-                "replica", "provider"):
+                "replica", "provider", "segment"):
         a = np.nan_to_num(np.asarray(getattr(base, fld), float), nan=-1.0)
         b = np.nan_to_num(np.asarray(getattr(one, fld), float), nan=-1.0)
         np.testing.assert_array_equal(a, b, err_msg=f"field {fld}")

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Bench ratchet: fail when smoke throughput regresses beyond tolerance.
+
+Compares the scenarios/sec of every (point, engine) in a fresh
+``BENCH_scheduler.json`` against the committed baseline
+(``tools/bench_baseline.json``) and exits non-zero when any tracked
+engine regresses by more than the tolerance band (default 25%, the
+baseline file's ``tolerance`` field, overridable with ``--tolerance``
+or ``BENCH_RATCHET_TOL``). Points are identified by their workload
+signature (J + providers/arrivals/replica-configs/price-traces), so
+reordering points in the bench script does not confuse the ratchet.
+
+The baseline is a *ratchet*: refresh it with ``--update`` after a
+deliberate perf change (or when CI hardware shifts), commit the result,
+and the new floor sticks. Points present in the current run but absent
+from the baseline are reported and adopted by ``--update``; points in
+the baseline but missing from the run fail the check — silently dropping
+a tracked point is how regressions hide.
+
+Usage:
+    python tools/check_bench_regression.py \
+        [BENCH_scheduler.json] [tools/bench_baseline.json] \
+        [--tolerance 0.25] [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ENGINES = ("seed", "des", "vector")
+
+
+def point_key(point: dict) -> str:
+    """Stable identity of one bench point: its workload signature."""
+    parts = [f"J{point['J']}"]
+    for field, tag in (("providers", "prov"), ("arrivals", "arr"),
+                       ("replica_configs", "repl"),
+                       ("price_traces", "traces")):
+        if point.get(field) is not None:
+            parts.append(f"{tag}={point[field]}")
+    parts.append(f"dl={point.get('deadlines')}")
+    return " ".join(parts)
+
+
+def extract(report: dict) -> dict:
+    """{point_key: {engine: scenarios_per_sec}} from a bench report."""
+    out = {}
+    for point in report.get("points", []):
+        key = point_key(point)
+        out[key] = {eng: point["engines"][eng]["scenarios_per_sec"]
+                    for eng in ENGINES if eng in point.get("engines", {})}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="?", default="BENCH_scheduler.json")
+    ap.add_argument("baseline", nargs="?",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "bench_baseline.json"))
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="allowed fractional regression (default: the "
+                         "baseline file's tolerance, else 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current bench run")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        current = extract(json.load(f))
+    if not current:
+        print(f"error: no bench points in {args.bench}")
+        return 2
+
+    if args.update or not os.path.exists(args.baseline):
+        if not args.update:
+            print(f"no baseline at {args.baseline}; writing one "
+                  f"(commit it to arm the ratchet)")
+        tol = 0.25 if args.tolerance is None else args.tolerance
+        with open(args.baseline, "w") as f:
+            json.dump({"tolerance": tol, "points": current}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.baseline} "
+              f"({sum(len(v) for v in current.values())} engine points)")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    tol = args.tolerance
+    if tol is None:
+        tol = float(os.environ.get("BENCH_RATCHET_TOL",
+                                   base.get("tolerance", 0.25)))
+
+    failures, notes = [], []
+    for key, engines in sorted(base.get("points", {}).items()):
+        got = current.get(key)
+        if got is None:
+            failures.append(f"point [{key}] missing from the current run")
+            continue
+        for eng, ref in sorted(engines.items()):
+            cur = got.get(eng)
+            if cur is None:
+                failures.append(f"[{key}] {eng}: engine missing from run")
+                continue
+            floor = ref * (1.0 - tol)
+            verdict = "OK"
+            if cur < floor:
+                verdict = "REGRESSION"
+                failures.append(
+                    f"[{key}] {eng}: {cur:.2f} scen/s < floor "
+                    f"{floor:.2f} (baseline {ref:.2f}, tol {tol:.0%})")
+            elif cur > ref * (1.0 + tol):
+                notes.append(
+                    f"[{key}] {eng}: {cur:.2f} scen/s is {cur / ref:.2f}x "
+                    f"baseline — consider --update to raise the floor")
+            print(f"  [{key}] {eng:>6}: {cur:8.2f} scen/s "
+                  f"(baseline {ref:8.2f}, floor {floor:8.2f}) {verdict}")
+    for key in sorted(set(current) - set(base.get("points", {}))):
+        notes.append(f"[{key}] untracked point (run --update to adopt)")
+
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"\nbench ratchet FAILED ({len(failures)} problem(s), "
+              f"tolerance {tol:.0%}):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(f"\nbench ratchet OK (tolerance {tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
