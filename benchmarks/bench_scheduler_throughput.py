@@ -43,6 +43,16 @@ epoch (segment-indexed [P, S, J, M] billing data, same executable).
 des/vector checksum-checked; the seed DES predates portfolios and sits
 it out. CI's smoke run passes ``--price-traces 4``.
 
+``--fault-rate R`` adds a fault-injection point: each app's sweep grows
+a ``faults=`` reliability axis of two configs — fault-free and a seeded
+chaos scenario (iid per-attempt failures at rate R, one provider outage
+window over the deadline horizon, mid-stage kills at 0.75 of the
+duration) — under a 3-attempt retry policy with backoff re-placement
+and private fallback. Failures are scenario *data* (seeded grids +
+outage windows), so the vector engine unrolls a bounded attempt axis in
+the same device call and the des/vector checksum assertion covers the
+recovery path too. CI's smoke run passes ``--fault-rate 0.3``.
+
 Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
 absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
 the seed baseline at each job count. ``--smoke`` runs a tiny instance and
@@ -122,17 +132,19 @@ def run_serial(tasks, sim_fn, portfolio=None):
     return time.perf_counter() - t0, chk, n
 
 
-def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector"):
+def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector",
+               retry=None):
     """Whole-sweep runner: one batched call per app on ``vector``, a
     serial scenario-grid replay on ``des`` (the path that understands the
-    ``replicas=``/``price_traces=`` axes)."""
+    ``replicas=``/``price_traces=``/``faults=`` axes)."""
     keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals",
-            "replicas", "price_traces")
+            "replicas", "price_traces", "faults")
     calls = [{k: t[k] for k in keys if t.get(k) is not None} for t in tasks]
     if warm and engine == "vector":  # compile outside the timed region
-        sweep_scenarios(calls, portfolio=portfolio)
+        sweep_scenarios(calls, portfolio=portfolio, retry=retry)
     t0 = time.perf_counter()
-    outs = sweep_scenarios(calls, portfolio=portfolio, engine=engine)
+    outs = sweep_scenarios(calls, portfolio=portfolio, engine=engine,
+                           retry=retry)
     dt = time.perf_counter() - t0
     chk = float(sum(o.makespan.sum() + o.cost_usd.sum() for o in outs))
     return dt, chk, sum(o.num_scenarios for o in outs)
@@ -179,8 +191,25 @@ def attach_price_traces(tasks, n_traces: int, providers: int):
     return tasks
 
 
+def attach_faults(tasks, rate: float):
+    """Give each app a 2-point ``faults=`` reliability axis: fault-free
+    plus a seeded chaos scenario (iid failures at ``rate``, one provider-0
+    outage window over the deadline horizon, 0.75-duration kills)."""
+    from repro.core.faults import FaultModel, RetryPolicy
+
+    for ai, t in enumerate(tasks):
+        J, M = t["pred"]["P_private"].shape
+        h = float(max(t["c_max_grid"]))
+        t["faults"] = [None, FaultModel.from_rate(
+            rate, J, M, max_attempts=3, seed=200 + ai,
+            outages=((0, 0.1 * h, 0.3 * h),), kill_frac=0.75)]
+    return tasks, RetryPolicy(max_attempts=3, backoff_s=0.2,
+                              jitter_frac=0.25)
+
+
 def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
-                  arrivals=None, replica_sweep=None, price_traces=None):
+                  arrivals=None, replica_sweep=None, price_traces=None,
+                  fault_rate=None):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
@@ -194,6 +223,9 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
             raise ValueError("--price-traces needs a portfolio")
         tasks = attach_price_traces(tasks, price_traces,
                                     portfolio.num_providers)
+    retry = None
+    if fault_rate is not None:
+        tasks, retry = attach_faults(tasks, fault_rate)
     point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
              "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
     if portfolio is not None:
@@ -204,6 +236,8 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
         point["replica_configs"] = replica_sweep
     if price_traces is not None:
         point["price_traces"] = price_traces
+    if fault_rate is not None:
+        point["fault_rate"] = fault_rate
     checks = {}
     for eng in engines:
         if eng == "seed":
@@ -215,13 +249,14 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                 raise ValueError("the frozen seed DES has no replica axis")
             dt, chk, n = run_serial(tasks, simulate_seed)
         elif eng == "des":
-            if replica_sweep is not None or price_traces is not None:
+            if (replica_sweep is not None or price_traces is not None
+                    or fault_rate is not None):
                 dt, chk, n = run_vector(tasks, portfolio=portfolio,
-                                        engine="des")
+                                        engine="des", retry=retry)
             else:
                 dt, chk, n = run_serial(tasks, simulate, portfolio=portfolio)
         else:
-            dt, chk, n = run_vector(tasks, portfolio=portfolio)
+            dt, chk, n = run_vector(tasks, portfolio=portfolio, retry=retry)
         checks[eng] = chk
         point["engines"][eng] = {
             "wall_s": round(dt, 4),
@@ -265,6 +300,11 @@ def main(argv=None):
                     help="add a time-dependent-pricing point: N spot-market "
                          "pricings of the portfolio per app batched on the "
                          "scenario axis (des/vector engines)")
+    ap.add_argument("--fault-rate", type=float, default=None, metavar="R",
+                    help="add a fault-injection point: fault-free vs a "
+                         "seeded chaos scenario (rate-R failures, an "
+                         "outage window, mid-stage kills) under a "
+                         "3-attempt retry policy (des/vector engines)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
@@ -303,6 +343,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(64, ("des", "vector"), portfolio=pf,
                               price_traces=args.price_traces))
+        if args.fault_rate is not None:
+            print(f"smoke: J=64, fault-injection sweep "
+                  f"(rate {args.fault_rate}), des+vector")
+            report["points"].append(
+                measure_point(64, ("des", "vector"), portfolio=pf,
+                              fault_rate=args.fault_rate))
     else:
         print("sweep 3 apps x 2 orders x 5 deadlines:")
         report["points"].append(
@@ -329,6 +375,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(512, ("des", "vector"), portfolio=pf,
                               price_traces=args.price_traces))
+        if args.fault_rate is not None:
+            print(f"fault-injection sweep (rate {args.fault_rate}, "
+                  "des/vector only):")
+            report["points"].append(
+                measure_point(512, ("des", "vector"), portfolio=pf,
+                              fault_rate=args.fault_rate))
         # large-J: seed is O(J^2 log J); one deadline keeps it bounded
         print("large-J point (1 deadline per app/order):")
         report["points"].append(

@@ -53,6 +53,7 @@ from .cost import (CostModel, LAMBDA_COST, PriceTrace, Provider,
                    diurnal_portfolio, lambda_cost, scaled_portfolio,
                    spot_portfolio, stage_costs)
 from .dag import APPS, AppDAG, Stage, image_app, matrix_app, video_app
+from .faults import FaultModel, RetryPolicy, as_fault_model
 from .greedy import (acd_sweep, acd_sweep_jax, init_offload, init_offload_jax,
                      offload_negative_acd, select_provider,
                      select_provider_jax, t_max)
@@ -73,6 +74,7 @@ __all__ = [
     "scaled_portfolio",
     "ArrivalProcess", "BatchArrivals", "TraceArrivals", "PoissonArrivals",
     "MMPPArrivals", "parse_arrivals", "resolve_release",
+    "FaultModel", "RetryPolicy", "as_fault_model",
     "init_offload", "init_offload_jax", "acd_sweep", "acd_sweep_jax",
     "offload_negative_acd", "select_provider", "select_provider_jax", "t_max",
     "MilpResult", "solve_milp", "johnson_makespan", "knapsack_lower_bound",

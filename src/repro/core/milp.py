@@ -20,6 +20,13 @@
   2-stage/1-replica all-private instances; a simulator ground truth.
 * :func:`knapsack_lower_bound` — the appendix "special case": with one
   stage the problem reduces to multiple knapsacks of size C_max.
+
+All three solvers model the **failure-free** problem. Under a
+:class:`.faults.FaultModel` the simulators bill retries, lost partial
+work and private fallbacks that no MILP variable accounts for, so the
+MILP optimum is a *lower bound* on the faulty engines' cost whose gap
+grows with the failure rate and outage coverage — compare against
+fault-free runs (``faults=None``) for the Fig.-3 optimality check.
 """
 from __future__ import annotations
 

@@ -135,6 +135,8 @@ class SkedulixScheduler:
         replicas=None,
         replica_speeds=None,
         price_traces=None,
+        faults=None,
+        retry=None,
         **sim_kwargs,
     ) -> VectorSimResult:
         """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
@@ -152,10 +154,13 @@ class SkedulixScheduler:
         slowdown arrays (Fig.-5-style robustness grids); ``price_traces``
         adds a pricing axis — portfolio variants or per-provider
         :class:`.cost.PriceTrace` lists (spot markets, diurnal tariffs)
-        swept against every deadline. All are scenario data in the
-        vector engine: the full ``orders x c_max x replicas x speeds x
-        traces`` grid is still one batched call on one compiled
-        executable.
+        swept against every deadline; ``faults`` adds a reliability
+        axis — :class:`.faults.FaultModel` configs, scalar failure
+        rates, or ``None`` entries, recovered under the ``retry``
+        :class:`.faults.RetryPolicy` (reliability-frontier grids). All
+        are scenario data in the vector engine: the full ``orders x
+        c_max x replicas x speeds x traces x faults`` grid is still one
+        batched call on one compiled executable.
         """
         if pred is None:
             pred = self.predict(base_features)
@@ -164,7 +169,7 @@ class SkedulixScheduler:
             cost_model=self.cost_model, portfolio=self.portfolio,
             engine=engine, arrivals=arrivals, replicas=replicas,
             replica_speeds=replica_speeds, price_traces=price_traces,
-            **sim_kwargs)
+            faults=faults, retry=retry, **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None,
                             arrivals: ArrivalsLike = None) -> SimResult:

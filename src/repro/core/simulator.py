@@ -64,6 +64,7 @@ from .arrivals import ArrivalsLike, resolve_release
 from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST,
                    ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
+from .faults import FaultLike, FaultModel, RetryPolicy, as_fault_model
 from .greedy import init_offload, t_max
 from .priority import ORDERS
 
@@ -81,6 +82,16 @@ class SimResult:
     absolute deadline is ``t0 + C_max``, under an arrival stream each job
     has its own, ``release[j] + C_max``. ``release`` records the stream
     (``None`` for the batch path, where every release is ``t0``).
+
+    Under a :class:`~.faults.FaultModel`, ``attempts``/``failed`` count
+    public invocation attempts per (job, stage) and ``abandoned`` marks
+    jobs whose recovery was impossible before their deadline: their
+    unfinished stages keep NaN ``end`` times, ``completion`` is NaN, and
+    the ``makespan`` is taken over completed jobs only (abandoned jobs
+    count as SLA misses in :meth:`sla_attainment`). Without faults the
+    fields are the trivial derivations (attempts = public_mask, failed =
+    0, abandoned = none), so engine-equivalence checks can always compare
+    them.
     """
 
     makespan: float
@@ -97,6 +108,9 @@ class SimResult:
     release: Optional[np.ndarray] = None   # [J] job release times (None=batch)
     replica: Optional[np.ndarray] = None   # [J, M] int: private replica, -1 = public
     segment: Optional[np.ndarray] = None   # [J, M] int: price segment, -1 = private
+    attempts: Optional[np.ndarray] = None  # [J, M] int: public attempts made
+    failed: Optional[np.ndarray] = None    # [J, M] int: failed public attempts
+    abandoned: Optional[np.ndarray] = None  # [J] bool: recovery was impossible
 
     @property
     def offload_fraction(self) -> float:
@@ -128,6 +142,13 @@ class SimResult:
         sla = self.deadline if sla_s is None else float(sla_s)
         return float((self.flow_time <= sla + 1e-9).mean())
 
+    @property
+    def abandoned_fraction(self) -> float:
+        """Fraction of jobs abandoned by the recovery layer (0 w/o faults)."""
+        if self.abandoned is None or not self.completion.size:
+            return 0.0
+        return float(self.abandoned.mean())
+
 
 class _Sim:
     def __init__(self, dag: AppDAG, pred: Dict[str, np.ndarray],
@@ -136,7 +157,10 @@ class _Sim:
                  init_phase: bool, adaptive: bool, t0: float,
                  replica_slowdown: Optional[Dict[Tuple[int, int], float]] = None,
                  portfolio: Optional[ProviderPortfolio] = None,
-                 release: Optional[np.ndarray] = None):
+                 release: Optional[np.ndarray] = None,
+                 faults: Optional[FaultModel] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 init_window: Optional[float] = None):
         self.dag = dag
         self.J, self.M = pred["P_private"].shape
         self.pred = pred
@@ -158,8 +182,26 @@ class _Sim:
         self.include_transfers = include_transfers
         self.adaptive = adaptive
         self.init_phase = init_phase
+        # None = classic Alg. 1 (whole trace visible at t0); a float gates
+        # init offload to jobs released within [t0, t0 + init_window]
+        self.init_window = init_window
         # (stage, replica_idx) -> multiplicative slowdown (straggler injection)
         self.replica_slowdown = replica_slowdown or {}
+        # fault layer: failures are scenario data (.faults), evaluated by
+        # retry re-enqueue heap events; the no-fault path below is the
+        # verbatim pre-fault code (the chain path reuses its expressions,
+        # so a zero FaultModel reproduces it bit-exactly)
+        self._faulty = faults is not None
+        if self._faulty:
+            self._retry = retry if retry is not None else RetryPolicy()
+            self._fail_g = faults.fail                        # [J, M, A]
+            self._delay_g = self._retry.delays(faults.jitter)  # [J, M, A]
+            self._A = faults.num_attempt_slots
+            self._kill_frac = float(faults.kill_frac)
+            self._fb_on = bool(self._retry.private_fallback)
+            self._outw = faults.outage_windows(
+                self.portfolio.num_providers)                 # [P, W, 2]
+            self._okill = bool(faults.outage_kills) and self._outw.shape[1] > 0
 
         # provider selection: each (job, stage), if offloaded, runs on the
         # cheapest feasible provider by *predicted* billed cost. Static
@@ -175,7 +217,10 @@ class _Sim:
         # provider switch penalty (single provider). Multi-provider
         # portfolios resolve placement at the offload epoch, where the
         # upstream providers (and so the egress penalty) are known.
-        self._static_prices = pf.is_static and pf.num_providers == 1
+        # Retry re-placement masks providers per attempt, so the fault
+        # layer always resolves placement at the attempt epoch too.
+        self._static_prices = (pf.is_static and pf.num_providers == 1
+                               and not self._faulty)
         down_pred = pred["download"] if include_transfers else None
         down_act = act["download"] if include_transfers else None
         sinkm = dag.is_sink if include_transfers else None
@@ -279,6 +324,9 @@ class _Sim:
         self.n_offloaded = 0
         self.per_stage_offloads = np.zeros(self.M, dtype=np.int64)
         self.n_init_off = 0
+        self.attempts = np.zeros((self.J, self.M), dtype=np.int64)
+        self.failed = np.zeros((self.J, self.M), dtype=np.int64)
+        self.abandoned = np.zeros(self.J, dtype=bool)
         self._heap: List[Tuple[float, int, Callable, tuple]] = []
         self._seq = itertools.count()
 
@@ -292,24 +340,48 @@ class _Sim:
         while heap:
             t, _, fn, args = heapq.heappop(heap)
             fn(t, *args)
-        makespan = float(np.max(self.completion) - self.t0) if self.J else 0.0
+        public_mask = self.loc != PRIVATE
+        completion = self.completion
+        if not self._faulty:
+            makespan = float(np.max(completion) - self.t0) if self.J else 0.0
+            attempts = public_mask.astype(np.int64)
+        else:
+            # abandoned jobs never complete: completion is NaN and the
+            # makespan is taken over the jobs that did finish
+            completion = completion.copy()
+            completion[self.abandoned] = np.nan
+            ok = ~self.abandoned
+            makespan = float(np.max(completion[ok]) - self.t0) \
+                if ok.any() else 0.0
+            attempts = self.attempts
         return SimResult(
             makespan=makespan, cost_usd=self.cost,
-            public_mask=self.loc != PRIVATE, start=self.start, end=self.end,
-            completion=self.completion, n_offloaded_stages=self.n_offloaded,
+            public_mask=public_mask, start=self.start, end=self.end,
+            completion=completion, n_offloaded_stages=self.n_offloaded,
             n_init_offloaded_jobs=self.n_init_off,
             per_stage_offloads=self.per_stage_offloads, deadline=self.c_max,
             provider=self.loc.astype(np.int64),
             release=None if self.release is None else self._rel.copy(),
             replica=self.replica.astype(np.int64),
-            segment=self.segment.astype(np.int64))
+            segment=self.segment.astype(np.int64),
+            attempts=attempts, failed=self.failed.copy(),
+            abandoned=self.abandoned.copy())
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
         if self.init_phase:
             C_total = self.pred["P_private"].sum(axis=1)
             cap = t_max(self.dag.replicas, self.c_max)
-            off = init_offload(C_total, self.job_keys, cap)
+            if self.init_window is not None:
+                # under arrivals the planner must not see the whole trace
+                # at t0: only jobs released within the first window are
+                # init-offload candidates (zeroed demand keeps the rest
+                # from consuming capacity in the prefix scan)
+                elig = self._rel <= self.t0 + self.init_window
+                off = init_offload(np.where(elig, C_total, 0.0),
+                                   self.job_keys, cap) & elig
+            else:
+                off = init_offload(C_total, self.job_keys, cap)
         else:
             off = np.zeros(self.J, dtype=bool)
         self.n_init_off = int(off.sum())
@@ -425,8 +497,33 @@ class _Sim:
                 self.forced_public[j, d] = True
         self._start_public(t, j, k)
 
+    def _selc_at(self, t: float, j: int, k: int):
+        """Decision-epoch selection costs [P] + active segments [P].
+
+        The argmin runs over each provider's price segment active at
+        ``t``, plus the provider-affinity penalty — placing stage k on a
+        provider other than a public predecessor's pays that
+        predecessor's (predicted) egress to move the edge, so cascades
+        prefer staying put unless the price gap covers the hop.
+        """
+        segs = (self._edges <= t).sum(axis=1) - 1              # [P]
+        selc = self._sel_pst[self._iota_P, segs, j, k]         # [P]
+        if self.include_transfers:
+            loc_j = self.loc[j]
+            seg_j = self.segment[j]
+            for u in self._pred_topo[k]:
+                lu = loc_j[u]
+                if lu >= 0:
+                    pen = (self._egress_seg[lu, seg_j[u]]
+                           * self._down_gb_pred[j][u])
+                    selc = selc + np.where(self._iota_P != lu, pen, 0.0)
+        return selc, segs
+
     def _start_public(self, t: float, j: int, k: int):
         self.status[j, k] = RUNNING
+        if self._faulty:
+            self._start_public_faulty(t, j, k)
+            return
         if self._static_prices:
             prov = self._prov_l[j][k]
             seg = 0
@@ -434,24 +531,9 @@ class _Sim:
             dur = self._act_pub[j][k]
             billed = self._cost_l[j][k]
         else:
-            # decision-epoch pricing: the argmin runs over each provider's
-            # price segment active *now*, plus the provider-affinity
-            # penalty — placing stage k on a provider other than a public
-            # predecessor's pays that predecessor's (predicted) egress to
-            # move the edge, so cascades prefer staying put unless the
-            # price gap covers the hop. (provider, segment) then lock for
-            # the whole stage even if execution spans a breakpoint.
-            segs = (self._edges <= t).sum(axis=1) - 1          # [P]
-            selc = self._sel_pst[self._iota_P, segs, j, k]     # [P]
-            if self.include_transfers:
-                loc_j = self.loc[j]
-                seg_j = self.segment[j]
-                for u in self._pred_topo[k]:
-                    lu = loc_j[u]
-                    if lu >= 0:
-                        pen = (self._egress_seg[lu, seg_j[u]]
-                               * self._down_gb_pred[j][u])
-                        selc = selc + np.where(self._iota_P != lu, pen, 0.0)
+            # (provider, segment) lock for the whole stage even if
+            # execution spans a price breakpoint
+            selc, segs = self._selc_at(t, j, k)
             prov = int(np.argmin(selc))
             seg = int(segs[prov])
             lm = self._lat_seg[prov, seg]
@@ -484,6 +566,124 @@ class _Sim:
         self._at(t + up + dur, self._public_done, j, k)
 
     def _public_done(self, t: float, j: int, k: int):
+        self.status[j, k] = DONE
+        self.end[j, k] = t
+        self._propagate_done(t, j, k)
+
+    # -- fault layer: attempt chains, retry events, degraded recovery ------
+    def _outage_at(self, t: float) -> np.ndarray:
+        """[P] bool: provider inside an outage window at ``t``."""
+        w = self._outw
+        return ((w[:, :, 0] <= t) & (t < w[:, :, 1])).any(axis=1)
+
+    def _selc_feasible(self, t: float, j: int, k: int, mask: np.ndarray):
+        """Selection costs with outage-dark and already-failed providers
+        masked to +inf (the same encoding mem-infeasibility uses)."""
+        selc, segs = self._selc_at(t, j, k)
+        selc = (selc + np.where(self._outage_at(t), np.inf, 0.0)
+                + np.where(mask, np.inf, 0.0))
+        return selc, segs
+
+    def _start_public_faulty(self, t: float, j: int, k: int):
+        """Offload epoch under a FaultModel: start the attempt chain."""
+        mask = np.zeros(self.portfolio.num_providers, dtype=bool)
+        selc, segs = self._selc_feasible(t, j, k, mask)
+        if not np.isfinite(selc).any():
+            # every provider dark/infeasible at the decision epoch: no
+            # attempt is even dispatched
+            self.start[j, k] = t
+            self._resolve_failed(t, j, k)
+            return
+        # inputs are staged once, before the first attempt (retries rerun
+        # from cloud storage) — the upload carries the first attempt's
+        # provider multiplier, exactly as the fault-free path would
+        prov = int(np.argmin(selc))
+        lm = self._lat_seg[prov, int(segs[prov])]
+        up = 0.0
+        if self.include_transfers:
+            preds = self._pred_l[k]
+            loc_j = self.loc[j]
+            needs_up = (not preds) or any(loc_j[p] == PRIVATE for p in preds)
+            if needs_up:
+                up = self._act_up_raw[j][k] * lm
+        self.start[j, k] = t + up
+        self._run_attempt(t, j, k, 0, mask, up)
+
+    def _retry_public(self, t: float, j: int, k: int, a: int,
+                      mask: np.ndarray):
+        """Backoff expired: re-enter the placement argmin (heap event)."""
+        self._run_attempt(t, j, k, a, mask, 0.0)
+
+    def _run_attempt(self, t_att: float, j: int, k: int, a: int,
+                     mask: np.ndarray, up: float):
+        selc, segs = self._selc_feasible(t_att, j, k, mask)
+        prov = int(np.argmin(selc))
+        seg = int(segs[prov])
+        lm = self._lat_seg[prov, seg]
+        dur = self._act_pub_raw[j][k] * lm
+        s = t_att + up
+        e = s + dur
+        billed = self._cost_pst[prov, seg, j, k]
+        self.attempts[j, k] += 1
+        # failure instant: the grid draw fires after kill_frac of the
+        # duration; an outage window *starting* strictly inside the
+        # execution interval reclaims the attempt at the window start
+        t_fail = s + self._kill_frac * dur if self._fail_g[j, k, a] \
+            else np.inf
+        if self._okill:
+            starts = self._outw[prov, :, 0]
+            hit = starts[(starts > s) & (starts < e)]
+            if hit.size:
+                t_fail = min(t_fail, float(hit.min()))
+        if not np.isfinite(t_fail):
+            # success: bill egress (predecessors in topo order) then the
+            # stage price — the fault-free path's accumulation order
+            self.loc[j, k] = prov
+            self.segment[j, k] = seg
+            self.n_offloaded += 1
+            self.per_stage_offloads[k] += 1
+            if self.include_transfers:
+                loc_j = self.loc[j]
+                for u in self._pred_topo[k]:
+                    lu = loc_j[u]
+                    if lu >= 0 and lu != prov:
+                        self.cost += (self._egress_seg[lu, self.segment[j, u]]
+                                      * self._down_gb[j][u])
+            self.cost += billed
+            self._at(e, self._public_done, j, k)
+            return
+        # lost work bills pro-rata on the consumed fraction; the provider
+        # is masked out of every later attempt of this (job, stage)
+        self.failed[j, k] += 1
+        self.cost += billed * ((t_fail - s) / dur if dur > 0.0 else 0.0)
+        mask = mask.copy()
+        mask[prov] = True
+        if a + 1 < self._A:
+            t_next = t_fail + self._delay_g[j, k, a + 1]
+            if t_next <= self.deadline_j[j]:
+                selc_n, _ = self._selc_feasible(t_next, j, k, mask)
+                if np.isfinite(selc_n).any():
+                    self._at(t_next, self._retry_public, j, k, a + 1, mask)
+                    return
+        self._resolve_failed(t_fail, j, k)
+
+    def _resolve_failed(self, t_res: float, j: int, k: int):
+        """Recovery terminal: degraded private slot, or abandon the job.
+
+        The fallback is availability over schedule quality — a dedicated
+        nominal-speed local slot outside the stage's replica pool (Alg.
+        1's queues are not re-entered mid-failure), taken only when it
+        can still start by the job's deadline. Otherwise the job is
+        abandoned: this stage never finishes (NaN end) and its
+        descendants never become ready.
+        """
+        if self._fb_on and t_res <= self.deadline_j[j]:
+            self.start[j, k] = t_res
+            self._at(t_res + self._act_priv[j][k], self._fallback_done, j, k)
+        else:
+            self.abandoned[j] = True
+
+    def _fallback_done(self, t: float, j: int, k: int):
         self.status[j, k] = DONE
         self.end[j, k] = t
         self._propagate_done(t, j, k)
@@ -540,6 +740,9 @@ def simulate(
     engine: str = "des",
     portfolio: Optional[ProviderPortfolio] = None,
     arrivals: ArrivalsLike = None,
+    faults: FaultLike = None,
+    retry: Optional[RetryPolicy] = None,
+    init_window: Optional[float] = None,
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
@@ -564,11 +767,23 @@ def simulate(
     (the slowdown of replica ``r`` binds to exactly the jobs dispatched
     to slot ``r``) and the per-(job, stage) replica assignment reported
     in ``SimResult.replica`` engine-exact, not just the timings.
+
+    ``faults``: a :class:`~.faults.FaultModel` (or a bare failure rate in
+    [0, 1], drawn at seed 0) enabling the fault-injection/recovery layer;
+    ``retry`` the :class:`~.faults.RetryPolicy` governing attempt budget,
+    backoff and re-placement (defaults to ``RetryPolicy()`` when faults
+    are given). ``init_window``: when set (and ``init_phase``), only jobs
+    released within ``t0 + init_window`` are init-offload candidates —
+    the non-clairvoyant variant for arrival streams.
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
     act = _with_transfer_defaults(act)
     release = resolve_release(arrivals, pred["P_private"].shape[0], t0)
+    fault_model = None
+    if faults is not None:
+        retry = retry if retry is not None else RetryPolicy()
+        fault_model = as_fault_model(faults, *pred["P_private"].shape, retry)
     if replica_slowdown:
         # shared validator (same errors as the vector engine's speeds
         # axis): both engines reject bad factors/stages identically
@@ -583,13 +798,16 @@ def simulate(
             init_phase=init_phase, adaptive=adaptive, t0=t0,
             portfolio=portfolio, arrivals=release,
             replica_speeds=None if not replica_slowdown
-            else [replica_slowdown])
+            else [replica_slowdown],
+            faults=None if fault_model is None else [fault_model],
+            retry=retry, init_window=init_window)
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")
     sim = _Sim(dag, pred, act, c_max, order, cost_model, include_transfers,
                init_phase, adaptive, t0, replica_slowdown, portfolio,
-               release=release)
+               release=release, faults=fault_model, retry=retry,
+               init_window=init_window)
     return sim.run()
 
 

@@ -96,6 +96,7 @@ from .arrivals import ArrivalsLike, resolve_release
 from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST, PriceTrace,
                    Provider, ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
+from .faults import RetryPolicy, max_outage_slots, normalize_fault_axis
 from .greedy import init_offload_jax
 from .priority import ORDERS
 
@@ -128,6 +129,10 @@ class VectorSimResult:
     replicas: Optional[np.ndarray] = None  # [S, M] per-scenario replica counts
     segment: Optional[np.ndarray] = None  # [S, J, M] int: price segment, -1 = private
     trace_idx: Optional[np.ndarray] = None  # [S] index into the price_traces axis
+    attempts: Optional[np.ndarray] = None  # [S, J, M] int: public attempts made
+    failed: Optional[np.ndarray] = None    # [S, J, M] int: failed attempts
+    abandoned: Optional[np.ndarray] = None  # [S, J] bool: recovery impossible
+    fault_idx: Optional[np.ndarray] = None  # [S] index into the faults axis
 
     @property
     def num_scenarios(self) -> int:
@@ -153,12 +158,16 @@ class VectorSimResult:
             provider=self.provider[s],
             release=None if self.release is None else self.release[s],
             replica=None if self.replica is None else self.replica[s],
-            segment=None if self.segment is None else self.segment[s])
+            segment=None if self.segment is None else self.segment[s],
+            attempts=None if self.attempts is None else self.attempts[s],
+            failed=None if self.failed is None else self.failed[s],
+            abandoned=None if self.abandoned is None else self.abandoned[s])
 
 
 @functools.lru_cache(maxsize=None)
 def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
-                  include_transfers: bool, init_phase: bool, adaptive: bool):
+                  include_transfers: bool, init_phase: bool, adaptive: bool,
+                  A_att: int = 0, W: int = 0, faulty: bool = False):
     """Trace the stage-decomposed event loop for one (stage count, replica
     bound, job count, provider count, price-segment count, flags) shape
     family. DAG structure arrives as data: ``A``/``desc`` are [M, M]
@@ -176,6 +185,17 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
     (provider, segment) pair is gathered per job — so one executable
     serves any portfolio of the same (P, S), static portfolios being the
     S=1 (or constant-trace) case of the same arithmetic.
+
+    With ``faulty``, the shape family grows a bounded **attempt axis**
+    (``A_att`` retry slots, ``W`` outage-window slots per provider) and
+    the per-stage placement unrolls into an attempt *chain*: failure
+    draws / backoff delays / outage windows are scenario data
+    (:mod:`.faults`), each attempt re-runs the masked placement argmin at
+    its own epoch, terminal failures resolve to a private fallback slot
+    or abandon the job, and dead stages propagate ``+inf`` ends so
+    downstream stages of an abandoned job never become eligible. The
+    degenerate chain (zero fault grid) reuses the fault-free expressions
+    term-for-term, so it is bit-exact vs the ``faulty=False`` engine.
     """
     iota_J = jnp.arange(J)
 
@@ -299,7 +319,12 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
     def run_one(P_pred, act_priv, pub_a, up_a, down_a, dgb_pred, cost_ps,
                 sel_ps, lat_ps, eg_ps, edges_ps,
                 stage_keys, job_keys, deadline, capacity, t0, release,
-                A, desc, sink, pinned, inert, speed):
+                init_elig, A, desc, sink, pinned, inert, speed,
+                *fault_args):
+        if faulty:
+            # scenario fault data: [J, M, A_att] failure draws + backoff
+            # delays, [P, W, 2] outage windows, and scalar knobs
+            fail_g, delay_g, outw, kill_frac, okill, fb_on = fault_args
         # per-stage critical-path remainder (reverse index order = reverse
         # topological order; edges go low -> high)
         rem_l: List[Optional[jax.Array]] = [None] * M
@@ -310,7 +335,13 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             rem_l[k] = P_pred[:, k] + best
 
         if init_phase:
-            off = init_offload_jax(P_pred.sum(axis=1), job_keys, capacity)
+            # init_elig gates the non-clairvoyant variant (init_window):
+            # ineligible jobs contribute zero demand to the prefix scan
+            # and are never marked; all-True reproduces the classic path
+            # bit-exactly
+            off = init_offload_jax(
+                jnp.where(init_elig, P_pred.sum(axis=1), 0.0),
+                job_keys, capacity) & init_elig
         else:
             off = jnp.zeros(J, dtype=bool)
 
@@ -323,11 +354,17 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
         rep_l: List[Optional[jax.Array]] = [None] * M
         down_l: List[Optional[jax.Array]] = [None] * M
         cost_l: List[Optional[jax.Array]] = [None] * M
+        att_l: List[Optional[jax.Array]] = [None] * M
+        failc_l: List[Optional[jax.Array]] = [None] * M
+        ab_j = jnp.zeros(J, dtype=bool)
+        lostc = jnp.zeros(())
         xegress = jnp.zeros(())
+        iota_P = jnp.arange(P)
         neg = jnp.full(J, -jnp.inf)
         for k in range(M):
             # source stages arrive at the job's release time (t0 for a
             # batch); downstream stages whenever their predecessors finish
+            # (an abandoned predecessor's +inf end makes the job dead here)
             a = neg
             for u in range(k):
                 a = jnp.maximum(a, jnp.where(A[u, k], end_l[u], -jnp.inf))
@@ -339,6 +376,9 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                 forced_k = forced_k | (desc[u, k] & evict_l[u])
             forced_k = forced_k & ~pinned[k]
             elig = ~forced_k & ~inert[k]
+            if faulty:
+                # dead jobs (abandoned upstream) never enter a queue
+                elig = elig & jnp.isfinite(a)
             acd_k = ~pinned[k]
             times_j, rep_j = run_stage(
                 k, a, forced_k, elig, speed[k], acd_k, P_pred[:, k],
@@ -351,63 +391,222 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             # a comparison-sum over the edge data, and the cheapest
             # feasible (provider, segment) is locked for the whole stage
             tau = jnp.where(forced_k, a, -times_j - 1.0)
-            seg_pj = jnp.maximum(
-                (edges_ps[:, :, None] <= tau[None, None, :]).sum(axis=1) - 1,
-                0)                                            # [P, J]
-            selc = jnp.take_along_axis(sel_ps[:, :, :, k],
-                                       seg_pj[:, None, :], axis=1)[:, 0, :]
-            if include_transfers:
-                # provider-affinity penalty: placing stage k on a provider
-                # other than a public predecessor's pays that
-                # predecessor's (predicted) egress to move the edge.
-                # Accumulated onto selc one predecessor at a time, in
-                # ascending topological order — the DES sums in the same
-                # order, so the floats associate identically and near-tie
-                # argmins cannot flip between engines.
-                iota_P = jnp.arange(P)
-                for u in range(k):
-                    pen_u = jnp.where(
-                        A[u, k] & loc_l[u],
-                        eg_ps[prov_l[u], seg_l[u]] * dgb_pred[:, u], 0.0)
-                    selc = selc + jnp.where(
-                        iota_P[:, None] != prov_l[u][None, :],
-                        pen_u[None, :], 0.0)
-            pidx_k = jnp.argmin(selc, axis=0)                 # [J]
-            seg_k = seg_pj[pidx_k, iota_J]                    # [J]
-            lm = lat_ps[pidx_k, seg_k]                        # [J]
-            cost_l[k] = cost_ps[pidx_k, seg_k, iota_J, k]
-            down_l[k] = down_a[:, k] * lm
-            prov_l[k] = pidx_k
-            seg_l[k] = seg_k
-            # upload needed iff some input of stage k lives in private
-            # storage (or the stage reads the original private input);
-            # an edge whose endpoints run public on *different* providers
-            # pays the upstream provider's egress (at the upstream stage's
-            # recorded segment) on the edge's un-multiplied volume
+
+            def placement_at(tq, k=k):
+                """[P, J] selection costs + active segments at epochs tq.
+
+                Provider-affinity penalty: placing stage k on a provider
+                other than a public predecessor's pays that predecessor's
+                (predicted) egress to move the edge. Accumulated onto
+                selc one predecessor at a time, in ascending topological
+                order — the DES sums in the same order, so the floats
+                associate identically and near-tie argmins cannot flip
+                between engines.
+                """
+                seg_pj = jnp.maximum(
+                    (edges_ps[:, :, None] <= tq[None, None, :]).sum(axis=1)
+                    - 1, 0)                                    # [P, J]
+                s = jnp.take_along_axis(sel_ps[:, :, :, k],
+                                        seg_pj[:, None, :], axis=1)[:, 0, :]
+                if include_transfers:
+                    for u in range(k):
+                        pen_u = jnp.where(
+                            A[u, k] & loc_l[u],
+                            eg_ps[prov_l[u], seg_l[u]] * dgb_pred[:, u],
+                            0.0)
+                        s = s + jnp.where(
+                            iota_P[:, None] != prov_l[u][None, :],
+                            pen_u[None, :], 0.0)
+                return s, seg_pj
+
+            if not faulty:
+                selc, seg_pj = placement_at(tau)
+                pidx_k = jnp.argmin(selc, axis=0)             # [J]
+                seg_k = seg_pj[pidx_k, iota_J]                # [J]
+                lm = lat_ps[pidx_k, seg_k]                    # [J]
+                cost_l[k] = cost_ps[pidx_k, seg_k, iota_J, k]
+                down_l[k] = down_a[:, k] * lm
+                prov_l[k] = pidx_k
+                seg_l[k] = seg_k
+                # upload needed iff some input of stage k lives in private
+                # storage (or the stage reads the original private input);
+                # an edge whose endpoints run public on *different*
+                # providers pays the upstream provider's egress (at the
+                # upstream stage's recorded segment) on the un-multiplied
+                # edge volume
+                if include_transfers:
+                    needs_up = jnp.zeros(J, dtype=bool)
+                    for u in range(k):
+                        needs_up = needs_up | (A[u, k] & ~loc_l[u])
+                        moved = (A[u, k] & loc_l[u] & locpub
+                                 & (prov_l[u] != pidx_k))
+                        rate_u = eg_ps[prov_l[u], seg_l[u]]
+                        xegress = xegress + jnp.where(
+                            moved,
+                            rate_u * (down_a[:, u] * EGRESS_GB_PER_S),
+                            0.0).sum()
+                    has_pred = A[:k, k].any() if k else jnp.asarray(False)
+                    needs_up = jnp.where(has_pred, needs_up, True)
+                    upk = jnp.where(needs_up, up_a[:, k] * lm, 0.0)
+                else:
+                    upk = jnp.zeros(J)
+                start = jnp.where(locpub, tau + upk, times_j)
+                # private durations run on the *assigned* replica's speed
+                # (the loop body already advanced the clock by the scaled
+                # duration)
+                priv_dur = act_priv[:, k] * speed[k][jnp.maximum(rep_j, 0)]
+                end = start + jnp.where(locpub, pub_a[:, k] * lm, priv_dur)
+                start_l[k], end_l[k] = start, end
+                loc_l[k], evict_l[k] = locpub, evicted
+                rep_l[k] = jnp.where(locpub, -1, rep_j)
+                continue
+
+            # ---- fault layer: unrolled attempt chain -------------------
+            # Same recovery semantics as the DES heap events: attempt a
+            # re-runs the placement argmin at its own epoch over providers
+            # that are feasible, not in outage and not yet failed for this
+            # (job, stage); a grid draw fails at kill_frac of the
+            # duration, an outage window starting inside the execution
+            # interval reclaims at the window start; lost work bills
+            # pro-rata; terminal failures fall back to a dedicated private
+            # slot by the deadline (fb_on) or abandon the job.
+            alive = jnp.isfinite(a)
+            fail_k = fail_g[:, k, :]                          # [J, A_att]
+            delay_k = delay_g[:, k, :]                        # [J, A_att]
+
+            def out_at(tq):
+                """[P, J] bool: provider inside an outage window at tq."""
+                return ((outw[:, :, 0, None] <= tq[None, None, :])
+                        & (tq[None, None, :] < outw[:, :, 1, None])
+                        ).any(axis=1)
+
+            def masked_placement(tq, maskPJ):
+                s, seg_pj = placement_at(tq)
+                s = (s + jnp.where(out_at(tq), jnp.inf, 0.0)
+                     + jnp.where(maskPJ, jnp.inf, 0.0))
+                return s, seg_pj
+
+            maskPJ = jnp.zeros((P, J), dtype=bool)
+            selc_cur, seg_cur = masked_placement(tau, maskPJ)
+            feas0 = jnp.isfinite(selc_cur).any(axis=0)
+            chain = alive & locpub
+            nf0 = chain & ~feas0   # nothing dispatchable at the epoch
+            pending = chain & feas0
+            # inputs are staged once, before the first attempt; the upload
+            # carries the first attempt's provider multiplier (identical
+            # to the fault-free expression when the chain is trivial)
+            p0 = jnp.argmin(selc_cur, axis=0)
+            lm0 = lat_ps[p0, seg_cur[p0, iota_J]]
             if include_transfers:
                 needs_up = jnp.zeros(J, dtype=bool)
                 for u in range(k):
                     needs_up = needs_up | (A[u, k] & ~loc_l[u])
-                    moved = (A[u, k] & loc_l[u] & locpub
-                             & (prov_l[u] != pidx_k))
+                has_pred = A[:k, k].any() if k else jnp.asarray(False)
+                needs_up = jnp.where(has_pred, needs_up, True)
+                upk = jnp.where(needs_up, up_a[:, k] * lm0, 0.0)
+            else:
+                upk = jnp.zeros(J)
+
+            t_att = tau
+            up_cur = upk
+            succ = jnp.zeros(J, dtype=bool)
+            term = jnp.zeros(J, dtype=bool)
+            p_fin = jnp.zeros(J, dtype=p0.dtype)
+            seg_fin = jnp.zeros(J, dtype=p0.dtype)
+            e_fin = jnp.zeros(J)
+            lm_fin = jnp.ones(J)
+            t_res = jnp.zeros(J)
+            cost_k = jnp.zeros(J)
+            att_cnt = jnp.zeros(J, dtype=jnp.int64)
+            fail_cnt = jnp.zeros(J, dtype=jnp.int64)
+            for ai in range(A_att):
+                p_a = jnp.argmin(selc_cur, axis=0)            # [J]
+                sg_a = seg_cur[p_a, iota_J]
+                lm_a = lat_ps[p_a, sg_a]
+                dur_a = pub_a[:, k] * lm_a
+                s_a = t_att + up_cur
+                e_a = s_a + dur_a
+                billed = cost_ps[p_a, sg_a, iota_J, k]
+                t_gf = jnp.where(fail_k[:, ai], s_a + kill_frac * dur_a,
+                                 jnp.inf)
+                if W > 0:
+                    w_st = outw[p_a, :, 0]                    # [J, W]
+                    cand = jnp.where((w_st > s_a[:, None])
+                                     & (w_st < e_a[:, None]), w_st, jnp.inf)
+                    t_kl = jnp.where(okill, cand.min(axis=1), jnp.inf)
+                else:
+                    t_kl = jnp.full(J, jnp.inf)
+                t_f = jnp.minimum(t_gf, t_kl)
+                failed_now = pending & jnp.isfinite(t_f)
+                ok = pending & ~jnp.isfinite(t_f)
+                att_cnt = att_cnt + pending.astype(att_cnt.dtype)
+                fail_cnt = fail_cnt + failed_now.astype(fail_cnt.dtype)
+                succ = succ | ok
+                p_fin = jnp.where(ok, p_a, p_fin)
+                seg_fin = jnp.where(ok, sg_a, seg_fin)
+                e_fin = jnp.where(ok, e_a, e_fin)
+                lm_fin = jnp.where(ok, lm_a, lm_fin)
+                cost_k = cost_k + jnp.where(ok, billed, 0.0)
+                frac = jnp.where(dur_a > 0.0, (t_f - s_a) / dur_a, 0.0)
+                lostc = lostc + jnp.where(failed_now, billed * frac,
+                                          0.0).sum()
+                maskPJ = maskPJ | (failed_now[None, :]
+                                   & (iota_P[:, None] == p_a[None, :]))
+                if ai + 1 < A_att:
+                    t_next = t_f + delay_k[:, ai + 1]
+                    selc_n, seg_n = masked_placement(t_next, maskPJ)
+                    feas_n = jnp.isfinite(selc_n).any(axis=0)
+                    retry = failed_now & (t_next <= deadline) & feas_n
+                    term_now = failed_now & ~retry
+                    pending = retry
+                    t_att = jnp.where(retry, t_next, t_att)
+                    up_cur = jnp.where(retry, 0.0, up_cur)
+                    selc_cur = jnp.where(retry[None, :], selc_n, selc_cur)
+                    seg_cur = jnp.where(retry[None, :], seg_n, seg_cur)
+                else:
+                    term_now = failed_now
+                    pending = jnp.zeros(J, dtype=bool)
+                term = term | term_now
+                t_res = jnp.where(term_now, t_f, t_res)
+
+            term_all = term | nf0
+            t_res = jnp.where(nf0, tau, t_res)
+            fb = term_all & fb_on & (t_res <= deadline)
+            ab = term_all & ~fb
+            ab_j = ab_j | ab
+
+            # fallback = dedicated nominal-speed private slot at t_res;
+            # abandoned stages never end (+inf, converted to NaN on
+            # output) and their descendants inherit the +inf arrival
+            end_pub = jnp.where(succ, e_fin,
+                                jnp.where(fb, t_res + act_priv[:, k],
+                                          jnp.inf))
+            start_pub = jnp.where(fb, t_res,
+                                  jnp.where(nf0, tau, tau + upk))
+            priv_dur = act_priv[:, k] * speed[k][jnp.maximum(rep_j, 0)]
+            start = jnp.where(~alive, jnp.nan,
+                              jnp.where(locpub, start_pub, times_j))
+            end = jnp.where(~alive, jnp.inf,
+                            jnp.where(locpub, end_pub, times_j + priv_dur))
+            # cascade billing reads *successful* placements only
+            if include_transfers:
+                for u in range(k):
+                    moved = (A[u, k] & loc_l[u] & succ
+                             & (prov_l[u] != p_fin))
                     rate_u = eg_ps[prov_l[u], seg_l[u]]
                     xegress = xegress + jnp.where(
                         moved,
                         rate_u * (down_a[:, u] * EGRESS_GB_PER_S),
                         0.0).sum()
-                has_pred = A[:k, k].any() if k else jnp.asarray(False)
-                needs_up = jnp.where(has_pred, needs_up, True)
-                upk = jnp.where(needs_up, up_a[:, k] * lm, 0.0)
-            else:
-                upk = jnp.zeros(J)
-            start = jnp.where(locpub, tau + upk, times_j)
-            # private durations run on the *assigned* replica's speed (the
-            # loop body already advanced the clock by the scaled duration)
-            priv_dur = act_priv[:, k] * speed[k][jnp.maximum(rep_j, 0)]
-            end = start + jnp.where(locpub, pub_a[:, k] * lm, priv_dur)
+            cost_l[k] = cost_k
+            down_l[k] = down_a[:, k] * lm_fin
+            prov_l[k] = p_fin
+            seg_l[k] = seg_fin
             start_l[k], end_l[k] = start, end
-            loc_l[k], evict_l[k] = locpub, evicted
+            loc_l[k], evict_l[k] = succ, evicted
             rep_l[k] = jnp.where(locpub, -1, rep_j)
+            att_l[k] = att_cnt
+            failc_l[k] = fail_cnt
 
         start = jnp.stack(start_l, axis=1)
         end = jnp.stack(end_l, axis=1)
@@ -422,17 +621,43 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             fin = fin + jnp.where(locpub, jnp.stack(down_l, axis=1), 0.0)
         completion = jnp.max(
             jnp.where(sink[None, :], fin, -jnp.inf), axis=1)
-        return dict(makespan=completion.max() - t0,
+        if not faulty:
+            return dict(makespan=completion.max() - t0,
+                        cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0))
+                        + xegress,
+                        public_mask=locpub, start=start, end=end,
+                        completion=completion,
+                        n_offloaded_stages=locpub.sum(),
+                        n_init_offloaded_jobs=off.sum(),
+                        per_stage_offloads=locpub.sum(axis=0),
+                        provider=jnp.where(locpub, prov_m, -1),
+                        replica=rep_m,
+                        segment=jnp.where(locpub, seg_m, -1),
+                        attempts=locpub.astype(jnp.int64),
+                        failed=jnp.zeros((J, M), dtype=jnp.int64),
+                        abandoned=jnp.zeros(J, dtype=bool))
+        # abandoned jobs never complete: NaN completion, NaN stage ends,
+        # makespan over completed jobs only (0 when none finish)
+        ok_j = ~ab_j
+        completion_out = jnp.where(ok_j, completion, jnp.nan)
+        makespan = jnp.where(
+            ok_j.any(),
+            jnp.max(jnp.where(ok_j, completion, -jnp.inf)) - t0, 0.0)
+        return dict(makespan=makespan,
                     cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0))
-                    + xegress,
-                    public_mask=locpub, start=start, end=end,
-                    completion=completion,
+                    + xegress + lostc,
+                    public_mask=locpub, start=start,
+                    end=jnp.where(jnp.isinf(end), jnp.nan, end),
+                    completion=completion_out,
                     n_offloaded_stages=locpub.sum(),
                     n_init_offloaded_jobs=off.sum(),
                     per_stage_offloads=locpub.sum(axis=0),
                     provider=jnp.where(locpub, prov_m, -1),
                     replica=rep_m,
-                    segment=jnp.where(locpub, seg_m, -1))
+                    segment=jnp.where(locpub, seg_m, -1),
+                    attempts=jnp.stack(att_l, axis=1),
+                    failed=jnp.stack(failc_l, axis=1),
+                    abandoned=ab_j)
 
     return run_one
 
@@ -440,11 +665,11 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
 @functools.lru_cache(maxsize=None)
 def _engine_fn(M: int, I_max: int, J: int, P: int, S: int,
                include_transfers: bool, init_phase: bool, adaptive: bool,
-               n_dev: int):
+               A_att: int, W: int, faulty: bool, n_dev: int):
     """jit(vmap) on one device; pmap(vmap) sharding the scenario axis
     across host devices when more are available."""
     run_one = _build_engine(M, I_max, J, P, S, include_transfers, init_phase,
-                            adaptive)
+                            adaptive, A_att, W, faulty)
     if n_dev > 1:
         return jax.pmap(jax.vmap(run_one))
     return jax.jit(jax.vmap(run_one))
@@ -682,6 +907,8 @@ class _Task:
                  arrivals: ArrivalsLike = None,
                  replicas=None, replica_speeds=None,
                  price_traces=None, S_seg: Optional[int] = None,
+                 faults=None, retry=None, init_window=None,
+                 A_att: int = 0, W: int = 0,
                  where: str = ""):
         from .simulator import _with_transfer_defaults
 
@@ -717,18 +944,28 @@ class _Task:
         trace_cfgs = [pf] if price_traces is None else list(price_traces)
         self.n_segments = (_max_segment_bound(trace_cfgs) if S_seg is None
                            else int(S_seg))
-        self.grid = [(b, o, float(c), r, g, tr)
+        # fault axis: pre-normalized list of FaultModel (sweep_scenarios
+        # handles the raw forms) or None — the one-point fault-free axis
+        fault_cfgs = [None] if faults is None else list(faults)
+        self.faulty = faults is not None
+        self.n_attempts = int(A_att)
+        self.n_windows = int(W)
+        self.grid = [(b, o, float(c), r, g, tr, f)
                      for b in range(B) for o in orders for c in c_max_grid
                      for r in range(len(repl_cfgs))
                      for g in range(len(speed_cfgs))
-                     for tr in range(len(trace_cfgs))]
+                     for tr in range(len(trace_cfgs))
+                     for f in range(len(fault_cfgs))]
         self.S = len(self.grid)
-        self.orders_out = tuple(o for (_, o, _, _, _, _) in self.grid)
-        self.c_max_out = np.array([c for (_, _, c, _, _, _) in self.grid])
-        self.batch_out = np.array([b for (b, _, _, _, _, _) in self.grid])
+        self.orders_out = tuple(o for (_, o, _, _, _, _, _) in self.grid)
+        self.c_max_out = np.array([c for (_, _, c, _, _, _, _) in self.grid])
+        self.batch_out = np.array([b for (b, _, _, _, _, _, _) in self.grid])
         self.repl_out = np.stack([repl_cfgs[r]
-                                  for (_, _, _, r, _, _) in self.grid])
-        self.trace_out = np.array([tr for (_, _, _, _, _, tr) in self.grid])
+                                  for (_, _, _, r, _, _, _) in self.grid])
+        self.trace_out = np.array(
+            [tr for (_, _, _, _, _, tr, _) in self.grid])
+        self.fault_out = np.array(
+            [f for (_, _, _, _, _, _, f) in self.grid])
         self.t0 = float(t0)
         # exogenous release stream (None = batch at t0); per-job absolute
         # deadlines are release + C_max, the batch deadline when no stream
@@ -762,7 +999,7 @@ class _Task:
         sel_bt: Dict[Tuple[int, int], np.ndarray] = {}
         cost_bt: Dict[Tuple[int, int], np.ndarray] = {}
         iota_P = np.arange(self.n_providers)
-        for b in sorted({b for (b, _, _, _, _, _) in self.grid}):
+        for b in sorted({b for (b, _, _, _, _, _, _) in self.grid}):
             down_pred = pred["download"][b] if include_transfers else None
             down_act = act["download"][b] if include_transfers else None
             for tr, tpf in enumerate(trace_cfgs):
@@ -782,23 +1019,23 @@ class _Task:
                                   for k in range(M)], axis=1),
                         key_fn(pred["P_private"][b], H, None))
         stage_keys = np.stack([uniq[(b, o, tr)][0]
-                               for (b, o, _, _, _, tr) in self.grid])
+                               for (b, o, _, _, _, tr, _) in self.grid])
         job_keys = np.stack([uniq[(b, o, tr)][1]
-                             for (b, o, _, _, _, tr) in self.grid])
+                             for (b, o, _, _, _, tr, _) in self.grid])
         bsel = self.batch_out
         sel_p = np.stack([sel_bt[(b, tr)]
-                          for (b, _, _, _, _, tr) in self.grid])
+                          for (b, _, _, _, _, tr, _) in self.grid])
         cost_p = np.stack([cost_bt[(b, tr)]
-                           for (b, _, _, _, _, tr) in self.grid])
+                           for (b, _, _, _, _, tr, _) in self.grid])
         lat_by_tr = [tpf.latency_mults_seg(S_seg) for tpf in trace_cfgs]
         eg_by_tr = [tpf.egress_seg(S_seg) for tpf in trace_cfgs]
         edges_by_tr = [tpf.segment_edges(S_seg) for tpf in trace_cfgs]
         lat_ps = np.stack([lat_by_tr[tr]
-                           for (_, _, _, _, _, tr) in self.grid])
+                           for (_, _, _, _, _, tr, _) in self.grid])
         eg_ps = np.stack([eg_by_tr[tr]
-                          for (_, _, _, _, _, tr) in self.grid])
+                          for (_, _, _, _, _, tr, _) in self.grid])
         edges_ps = np.stack([edges_by_tr[tr]
-                             for (_, _, _, _, _, tr) in self.grid])
+                             for (_, _, _, _, _, tr, _) in self.grid])
         # raw actual draws: the engine applies the locked (provider,
         # segment)'s latency multiplier after the placement resolves;
         # predicted download volumes (GB) feed the affinity penalty
@@ -840,13 +1077,45 @@ class _Task:
                     for r in range(len(repl_cfgs))
                     for g in range(len(speed_cfgs))}
         speed = np.stack([sp_by_rg[(r, g)]
-                          for (_, _, _, r, g, _) in self.grid])
+                          for (_, _, _, r, g, _, _) in self.grid])
         # capacity T_max = sum_k I_k * C_max follows the scenario's own
         # replica config (raw counts, as in the DES's t_max)
         capacity = np.array([float(repl_cfgs[r].sum()) * c
-                             for (_, _, c, r, _, _) in self.grid])
+                             for (_, _, c, r, _, _, _) in self.grid])
+
+        # windowed init offload: only jobs released within the window
+        # compete for the budget (all-True when no window — bit-exact)
+        init_elig = (np.ones(self.J, dtype=bool) if init_window is None
+                     else rel <= self.t0 + float(init_window))
 
         S = self.S
+
+        def pad_stage_mid(v: np.ndarray, fill) -> np.ndarray:
+            # [S, J, M, A] -> [S, J, M_pad, A], stages in topo order
+            out = np.full(v.shape[:2] + (M_pad,) + v.shape[3:], fill,
+                          dtype=v.dtype)
+            out[:, :, :M] = v[:, :, topo]
+            return out
+
+        fault_args: Tuple[np.ndarray, ...] = ()
+        if self.faulty:
+            rt = retry if retry is not None else RetryPolicy()
+            fail_s = pad_stage_mid(np.stack(
+                [cfg.fail for cfg in fault_cfgs])[self.fault_out], False)
+            delay_s = pad_stage_mid(np.stack(
+                [rt.delays(cfg.jitter)
+                 for cfg in fault_cfgs])[self.fault_out], 0.0)
+            outw_s = np.stack(
+                [cfg.outage_windows(self.n_providers,
+                                    num_slots=self.n_windows)
+                 for cfg in fault_cfgs])[self.fault_out]
+            kill_s = np.array([cfg.kill_frac
+                               for cfg in fault_cfgs])[self.fault_out]
+            okill_s = np.array([cfg.outage_kills for cfg in fault_cfgs],
+                               dtype=bool)[self.fault_out]
+            fb_s = np.full(S, bool(rt.private_fallback))
+            fault_args = (fail_s, delay_s, outw_s, kill_s, okill_s, fb_s)
+
         self.args = tuple(
             np.ascontiguousarray(x, dtype=x.dtype if x.dtype == bool
                                  else np.float64)
@@ -867,13 +1136,14 @@ class _Task:
                 capacity,
                 np.full(S, self.t0),
                 np.broadcast_to(rel, (S, self.J)),
+                np.broadcast_to(init_elig, (S, self.J)),
                 np.broadcast_to(A, (S,) + A.shape),
                 np.broadcast_to(desc, (S,) + desc.shape),
                 np.broadcast_to(sink, (S,) + sink.shape),
                 np.broadcast_to(pinned, (S,) + pinned.shape),
                 np.broadcast_to(inert, (S,) + inert.shape),
                 speed,
-            ))
+            ) + fault_args)
 
     def pack(self, out: Dict[str, np.ndarray]) -> VectorSimResult:
         """Slice this task's scenarios out of a (possibly concatenated)
@@ -895,7 +1165,11 @@ class _Task:
             replica=out["replica"][:, :, inv],
             replicas=self.repl_out.copy(),
             segment=out["segment"][:, :, inv],
-            trace_idx=self.trace_out.copy())
+            trace_idx=self.trace_out.copy(),
+            attempts=out["attempts"][:, :, inv],
+            failed=out["failed"][:, :, inv],
+            abandoned=out["abandoned"],
+            fault_idx=self.fault_out.copy())
 
 
 def _run_task(task: _Task, I_max: int, include_transfers: bool,
@@ -906,7 +1180,8 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
     n_dev = jax.local_device_count() if S > 1 else 1
     fn = _engine_fn(task.M_pad, I_max, task.J, task.n_providers,
                     task.n_segments, include_transfers, init_phase,
-                    adaptive, n_dev)
+                    adaptive, task.n_attempts, task.n_windows, task.faulty,
+                    n_dev)
     with enable_x64():
         if n_dev > 1:
             # strided scenario->device interleave balances heterogeneous
@@ -950,6 +1225,9 @@ def simulate_scenarios(
     replicas=None,
     replica_speeds=None,
     price_traces=None,
+    faults=None,
+    retry=None,
+    init_window: Optional[float] = None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
@@ -982,6 +1260,18 @@ def simulate_scenarios(
     [P, S, J, M] billing matrices, one executable per
     (M, I_max, J, P, S, flags) shape family); the DES replays each
     variant as its ``portfolio=``.
+
+    ``faults`` is a reliability axis: a list of failure configs — each a
+    :class:`.faults.FaultModel`, a scalar per-attempt failure rate (drawn
+    deterministically at seed = its axis index), or ``None`` (fault-free
+    entry); a bare model/scalar is a one-point axis, the default ``None``
+    axis is the pre-fault bit-exact path. ``retry`` (a
+    :class:`.faults.RetryPolicy`) sets attempt budgets and backoff for
+    every faulty scenario; the vector engine unrolls a bounded attempt
+    chain per offloaded stage (shape family grows an attempt axis) while
+    the DES replays failures via retry heap events. ``init_window``
+    restricts init-phase offloading to jobs released within that many
+    seconds of ``t0`` (``None`` = all jobs, the pre-window behavior).
     """
     from .simulator import _with_transfer_defaults, simulate
 
@@ -1011,19 +1301,25 @@ def simulate_scenarios(
                  for k in range(dag.num_stages) for i in range(I_max)
                  if sp[k, i] != 1.0} or None
                 for sp in speed_cfgs]
-        grid = [(b, o, float(c), r, g, tr)
+        retry_eff = retry if faults is None else (retry or RetryPolicy())
+        fault_cfgs = normalize_fault_axis(faults, J, dag.num_stages,
+                                          retry_eff) or [None]
+        grid = [(b, o, float(c), r, g, tr, f)
                 for b in range(B) for o in orders for c in c_max_grid
                 for r in range(len(repl_cfgs))
                 for g in range(len(speed_cfgs))
-                for tr in range(len(trace_cfgs))]
+                for tr in range(len(trace_cfgs))
+                for f in range(len(fault_cfgs))]
         sims = [simulate(dags[r], {k: v[b] for k, v in pred_d.items()},
                          {k: v[b] for k, v in act_d.items()},
                          c_max=c, order=o, cost_model=cost_model,
                          include_transfers=include_transfers,
                          init_phase=init_phase, adaptive=adaptive, t0=t0,
                          portfolio=trace_cfgs[tr], arrivals=release,
-                         replica_slowdown=slow[g])
-                for (b, o, c, r, g, tr) in grid]
+                         replica_slowdown=slow[g],
+                         faults=fault_cfgs[f], retry=retry_eff,
+                         init_window=init_window)
+                for (b, o, c, r, g, tr, f) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
             cost_usd=np.array([r.cost_usd for r in sims]),
@@ -1037,24 +1333,30 @@ def simulate_scenarios(
             per_stage_offloads=np.stack([r.per_stage_offloads for r in sims]),
             provider=np.stack([r.provider for r in sims]),
             deadline=np.array([r.deadline for r in sims]),
-            orders=tuple(o for (_, o, _, _, _, _) in grid),
-            c_max=np.array([c for (_, _, c, _, _, _) in grid]),
-            batch_idx=np.array([b for (b, _, _, _, _, _) in grid]),
+            orders=tuple(o for (_, o, _, _, _, _, _) in grid),
+            c_max=np.array([c for (_, _, c, _, _, _, _) in grid]),
+            batch_idx=np.array([b for (b, _, _, _, _, _, _) in grid]),
             release=None if release is None
             else np.broadcast_to(release, (len(grid), J)).copy(),
             replica=np.stack([r.replica for r in sims]),
-            replicas=np.stack([repl_cfgs[r] for (_, _, _, r, _, _) in grid]),
+            replicas=np.stack(
+                [repl_cfgs[r] for (_, _, _, r, _, _, _) in grid]),
             segment=np.stack([r.segment for r in sims]),
-            trace_idx=np.array([tr for (_, _, _, _, _, tr) in grid]))
+            trace_idx=np.array([tr for (_, _, _, _, _, tr, _) in grid]),
+            attempts=np.stack([r.attempts for r in sims]),
+            failed=np.stack([r.failed for r in sims]),
+            abandoned=np.stack([r.abandoned for r in sims]),
+            fault_idx=np.array([f for (_, _, _, _, _, _, f) in grid]))
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
     return sweep_scenarios(
         [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
               orders=orders, arrivals=arrivals, replicas=replicas,
-              replica_speeds=replica_speeds, price_traces=price_traces)],
+              replica_speeds=replica_speeds, price_traces=price_traces,
+              faults=faults)],
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
-        portfolio=portfolio)[0]
+        portfolio=portfolio, retry=retry, init_window=init_window)[0]
 
 
 def sweep_scenarios(
@@ -1066,6 +1368,8 @@ def sweep_scenarios(
     t0: float = 0.0,
     engine: str = "vector",
     portfolio: Optional[ProviderPortfolio] = None,
+    retry=None,
+    init_window: Optional[float] = None,
 ) -> List[VectorSimResult]:
     """Run several scenario grids — e.g. a whole Fig.-4 figure, one task per
     application — as one batched, device-parallel sweep.
@@ -1079,7 +1383,12 @@ def sweep_scenarios(
     [M, I] slowdown arrays; omitted = all healthy) and ``price_traces``
     (a pricing axis: portfolio variants / per-provider
     :class:`.cost.PriceTrace` lists; omitted = the sweep's
-    ``portfolio``); results come back in task order. Every task's
+    ``portfolio``) and ``faults`` (a reliability axis: a list of
+    :class:`.faults.FaultModel` / scalar failure rates / ``None``
+    entries, or a bare model/rate as a one-point axis; omitted =
+    fault-free, the pre-fault bit-exact path — the sweep-level ``retry``
+    policy governs every faulty scenario and the attempt-axis bound of
+    the shared shape family); results come back in task order. Every task's
     replica configs pad to the sweep's common ``I_max`` (absent slots
     are masked out) and every price trace to the common segment bound
     ``S`` (padded segments never activate), so the whole
@@ -1103,7 +1412,8 @@ def sweep_scenarios(
             portfolio=portfolio, arrivals=t.get("arrivals"),
             replicas=t.get("replicas"),
             replica_speeds=t.get("replica_speeds"),
-            price_traces=t.get("price_traces"))
+            price_traces=t.get("price_traces"),
+            faults=t.get("faults"), retry=retry, init_window=init_window)
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -1119,15 +1429,27 @@ def sweep_scenarios(
     # serves the whole sweep
     tasks = [dict(t) for t in tasks]
     base_pf = as_portfolio(portfolio, cost_model)
+    any_faulty = any(t.get("faults") is not None for t in tasks)
+    retry_eff = (retry or RetryPolicy()) if any_faulty else retry
     for i, t in enumerate(tasks):
         if t.get("replicas") is not None:
             t["replicas"] = _norm_replica_axis(t["replicas"], t["dag"],
                                                where=f"tasks[{i}]")
         t["price_traces"] = _norm_trace_axis(t.get("price_traces"), base_pf,
                                              where=f"tasks[{i}]")
+        if t.get("faults") is not None:
+            J_t = int(np.asarray(t["pred"]["P_private"]).shape[-2])
+            t["faults"] = normalize_fault_axis(
+                t["faults"], J_t, t["dag"].num_stages, retry_eff,
+                where=f"tasks[{i}]")
     I_max = max(_max_replica_bound(t["dag"], t.get("replicas"))
                 for t in tasks)
     S_seg = max(_max_segment_bound(t["price_traces"]) for t in tasks)
+    # attempt-axis and outage-window bounds of the sweep's shape family:
+    # zero when no task is faulty (the engine compiles the pre-fault graph)
+    A_att = retry_eff.max_attempts if any_faulty else 0
+    W = max([max_outage_slots(t["faults"]) for t in tasks
+             if t.get("faults") is not None] or [0])
     prepped = [_Task(t["dag"], t["pred"], t.get("act"),
                      t.get("c_max_grid", (60.0,)),
                      t.get("orders", ("spt",)), cost_model, t0, M_pad,
@@ -1137,6 +1459,8 @@ def sweep_scenarios(
                      replicas=t.get("replicas"),
                      replica_speeds=t.get("replica_speeds"),
                      price_traces=t["price_traces"], S_seg=S_seg,
+                     faults=t.get("faults"), retry=retry_eff,
+                     init_window=init_window, A_att=A_att, W=W,
                      where=f"tasks[{i}]")
                for i, t in enumerate(tasks)]
 
@@ -1164,7 +1488,11 @@ def sweep_scenarios(
                 replica=np.full((p.S, 0, p.M), -1, dtype=np.int64),
                 replicas=p.repl_out.copy(),
                 segment=np.full((p.S, 0, p.M), -1, dtype=np.int64),
-                trace_idx=p.trace_out.copy()))
+                trace_idx=p.trace_out.copy(),
+                attempts=np.zeros((p.S, 0, p.M), dtype=np.int64),
+                failed=np.zeros((p.S, 0, p.M), dtype=np.int64),
+                abandoned=np.zeros((p.S, 0), dtype=bool),
+                fault_idx=p.fault_out.copy()))
         else:
             results.append(_run_task(p, I_max, bool(include_transfers),
                                      bool(init_phase), bool(adaptive)))

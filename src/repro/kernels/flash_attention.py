@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# the TPU compiler-params dataclass was renamed across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 _NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
 _LANES = 128
 
@@ -114,7 +118,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, _LANES), jnp.float32),
             pltpu.VMEM((bq, _LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, kp, vp)

@@ -3,12 +3,12 @@
 # + costed elastic overflow; rolling-horizon online mode).
 from .engine import Completion, InferenceEngine, Request
 from .hybrid import (AutoscaleFrontier, HybridServingScheduler,
-                     OnlineReport, ServingLatencyModel, SpotFrontier,
-                     elastic_portfolio, pareto_mask, plan_batch_jax,
-                     serving_dag, spot_elastic_traces)
+                     OnlineReport, ReliabilityFrontier, ServingLatencyModel,
+                     SpotFrontier, elastic_portfolio, pareto_mask,
+                     plan_batch_jax, serving_dag, spot_elastic_traces)
 
 __all__ = ["InferenceEngine", "Request", "Completion",
            "HybridServingScheduler", "ServingLatencyModel", "serving_dag",
            "plan_batch_jax", "elastic_portfolio", "OnlineReport",
            "AutoscaleFrontier", "pareto_mask", "SpotFrontier",
-           "spot_elastic_traces"]
+           "spot_elastic_traces", "ReliabilityFrontier"]

@@ -207,29 +207,60 @@ class OnlineReport:
 
     @property
     def flow_time(self) -> np.ndarray:
-        """[J] request latency: completion minus *true* release."""
+        """[J] request latency: completion minus *true* release.
+
+        NaN for abandoned requests (under a fault model with exhausted
+        retry budgets) — they never complete.
+        """
         return self.result.completion - self.release
 
     @property
+    def abandoned(self) -> np.ndarray:
+        """[J] bool: requests the fault layer gave up on (all-False when
+        serving fault-free)."""
+        ab = self.result.abandoned
+        if ab is None:
+            return np.zeros(self.release.shape, dtype=bool)
+        return np.asarray(ab, dtype=bool)
+
+    @property
     def sla_attainment(self) -> float:
+        """Fraction of *all* requests finishing within the SLA — an
+        abandoned request counts as a miss (NaN flow compares False)."""
         if not self.release.size:
             return 1.0
-        return float((self.flow_time <= self.sla_s + 1e-9).mean())
+        flow = self.flow_time
+        with np.errstate(invalid="ignore"):
+            return float((flow <= self.sla_s + 1e-9).mean())
+
+    @property
+    def sla_attainment_served(self) -> float:
+        """SLA attainment over the requests that *were* served —
+        degradation quality separated from availability loss."""
+        ok = ~self.abandoned
+        if not ok.any():
+            return 1.0
+        flow = self.flow_time[ok]
+        with np.errstate(invalid="ignore"):
+            return float((flow <= self.sla_s + 1e-9).mean())
 
     def summary(self) -> Dict[str, float]:
         r = self.result
         n = max(len(self.release), 1)
-        flow = self.flow_time
+        served = self.flow_time[~self.abandoned]
         return {
             "requests": float(len(self.release)),
             "sla_s": float(self.sla_s),
             "replan_every_s": float(self.replan_every_s),
             "sla_attainment": self.sla_attainment,
+            "sla_attainment_served": self.sla_attainment_served,
+            "abandoned_frac": float(self.abandoned.mean())
+            if self.release.size else 0.0,
             "cost_usd": float(r.cost_usd),
             "cost_per_1k_req_usd": float(r.cost_usd) / n * 1000.0,
-            "mean_latency_s": float(flow.mean()) if flow.size else 0.0,
-            "p95_latency_s": float(np.percentile(flow, 95.0))
-            if flow.size else 0.0,
+            "mean_latency_s": float(served.mean()) if served.size else 0.0,
+            "p95_latency_s": float(np.percentile(served, 95.0))
+            if served.size else 0.0,
             "offload_frac": float(r.offload_fraction),
             "makespan_s": float(r.makespan),
         }
@@ -383,6 +414,55 @@ class SpotFrontier:
             lines.append(
                 f"{int(self.trace_idx[s]):>6} {self.c_max[s]:8.2f} "
                 f"{self.sla[s]:6.3f} {self.cost_usd[s]:10.5f}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class ReliabilityFrontier:
+    """One reliability sweep: fault configs x deadlines, Pareto-tagged.
+
+    Scenario ``s`` ran fault config ``fault_idx[s]`` (an index into the
+    ``fault_grid`` handed to
+    :meth:`HybridServingScheduler.reliability_frontier`) with scheduler
+    deadline ``c_max[s]``. ``availability`` is the fraction of requests
+    *served at all* (1 - abandoned fraction); ``sla`` is attainment
+    against the one fixed target ``sla_s`` with abandoned requests
+    counting as misses, so the two separate "did we answer" from "did we
+    answer in time". ``cost_usd`` includes retries' lost partial work —
+    failures are billed for the fraction executed before the kill.
+    ``pareto`` marks the non-dominated (cost, sla) points; ``result``
+    keeps the full batched :class:`VectorSimResult` (per-request
+    attempts, failures, abandonment) for drill-down.
+    """
+
+    fault_idx: np.ndarray     # [S] which fault config
+    c_max: np.ndarray         # [S] scheduler deadline knob
+    sla_s: float              # the fixed SLA target all points report on
+    sla: np.ndarray           # [S] attainment incl. abandonment misses
+    availability: np.ndarray  # [S] fraction of requests served at all
+    cost_usd: np.ndarray      # [S] elastic spend incl. lost work
+    makespan: np.ndarray      # [S] over the served requests
+    pareto: np.ndarray        # [S] bool: on the cost/SLA frontier
+    result: VectorSimResult
+
+    @property
+    def num_scenarios(self) -> int:
+        return int(self.cost_usd.shape[0])
+
+    def frontier(self) -> np.ndarray:
+        """Indices of the non-dominated points, cheapest first."""
+        idx = np.flatnonzero(self.pareto)
+        return idx[np.argsort(self.cost_usd[idx], kind="stable")]
+
+    def table(self) -> str:
+        """The frontier as an aligned text table (cheapest first)."""
+        lines = [f"{'fault':>6} {'c_max s':>8} {'SLA':>6} {'avail':>6} "
+                 f"{'cost $':>10}"]
+        for s in self.frontier():
+            lines.append(
+                f"{int(self.fault_idx[s]):>6} {self.c_max[s]:8.2f} "
+                f"{self.sla[s]:6.3f} {self.availability[s]:6.3f} "
+                f"{self.cost_usd[s]:10.5f}")
         return "\n".join(lines)
 
 
@@ -570,12 +650,65 @@ class HybridServingScheduler:
             cost_usd=res.cost_usd, makespan=res.makespan,
             pareto=pareto_mask(res.cost_usd, sla), result=res)
 
+    def reliability_frontier(self, prompt_len: np.ndarray,
+                             new_tokens: np.ndarray,
+                             fault_grid: Sequence,
+                             c_max_grid: Sequence[float],
+                             order: str = "spt", seed: int = 1,
+                             use_ridge: bool = True, engine: str = "vector",
+                             retry=None, sla_s: Optional[float] = None,
+                             t0: float = 0.0) -> ReliabilityFrontier:
+        """Sweep failure regimes against SLA deadlines in one batched call
+        and return the cost/SLA Pareto frontier.
+
+        ``fault_grid`` entries are failure configs of the elastic pools —
+        :class:`.core.faults.FaultModel` objects (per-provider outage
+        windows, seeded per-attempt failure draws), bare failure rates
+        in [0, 1] (drawn deterministically at seed = their grid index),
+        or ``None`` for the fault-free reference; ``c_max_grid`` sweeps
+        the scheduler's deadline knob, and every faulty scenario
+        recovers under the one ``retry``
+        :class:`.core.faults.RetryPolicy`. Failures are scenario *data*
+        in the vector engine (a bounded attempt axis in the shape
+        family), so the whole ``faults x deadlines`` grid runs as a
+        single device call — the reliability analogue of
+        :meth:`spot_frontier`, answering "how much does each nine of
+        availability cost, and does a looser SLA buy it back".
+        Attainment is measured against the fixed target ``sla_s``
+        (default: the tightest deadline of the grid) with abandoned
+        requests counting as misses; ``availability`` reports the
+        abandonment axis on its own.
+        """
+        fault_grid = list(fault_grid)
+        pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
+        res = self.sched.schedule_sweep(
+            c_max_grid, pred=pred, act=act, orders=(order,), engine=engine,
+            faults=fault_grid, retry=retry, t0=t0)
+        sla_s = float(min(c_max_grid) if sla_s is None else sla_s)
+        rel = (np.full_like(res.completion, t0) if res.release is None
+               else res.release)
+        flow = res.completion - rel
+        with np.errstate(invalid="ignore"):
+            sla = ((flow <= sla_s + 1e-9).mean(axis=1)
+                   if flow.shape[1] else np.ones(res.num_scenarios))
+        avail = (1.0 - res.abandoned.mean(axis=1)
+                 if res.abandoned is not None and res.abandoned.shape[1]
+                 else np.ones(res.num_scenarios))
+        return ReliabilityFrontier(
+            fault_idx=res.fault_idx, c_max=res.c_max, sla_s=sla_s, sla=sla,
+            availability=avail, cost_usd=res.cost_usd,
+            makespan=res.makespan, pareto=pareto_mask(res.cost_usd, sla),
+            result=res)
+
     def serve_online(self, prompt_len: np.ndarray, new_tokens: np.ndarray,
                      arrivals: ArrivalsLike, sla_s: float,
                      replan_every_s: float = 0.0, order: str = "spt",
                      seed: int = 1, use_ridge: bool = True,
                      engine: str = "vector",
-                     mode: str = "hybrid") -> OnlineReport:
+                     mode: str = "hybrid",
+                     faults=None, retry=None,
+                     init_offload: bool = False,
+                     replica_step_times=None) -> OnlineReport:
         """Continuous serving: requests arrive over time, each with an SLA.
 
         ``arrivals`` is any :mod:`repro.core.arrivals` stream (process,
@@ -592,13 +725,39 @@ class HybridServingScheduler:
         ``mode`` selects the policy: ``"hybrid"`` (Alg. 1's ACD eviction
         loop), ``"private"`` (never offload — requests queue on the
         pod), or ``"public"`` (every request straight to elastic
-        capacity). Hybrid mode is genuinely non-clairvoyant: the
-        clairvoyant initialization offload (which plans over the whole
-        trace at t0) is disabled, so every offload is an ACD eviction
-        decided from queue state and per-request deadlines at the
-        current epoch. SLA attainment in the report is against *true*
-        arrival times.
+        capacity). Hybrid mode is genuinely non-clairvoyant by default:
+        the clairvoyant initialization offload (which plans over the
+        whole trace at t0) is disabled, so every offload is an ACD
+        eviction decided from queue state and per-request deadlines at
+        the current epoch. ``init_offload=True`` re-enables the capacity
+        plan *gated to the first replan window* — only requests released
+        within ``replan_every_s`` of t0 (exactly the requests a live
+        controller has seen at its first epoch) compete for the
+        prefix-rule budget, keeping the controller causal. SLA
+        attainment in the report is against *true* arrival times.
+
+        Graceful degradation: ``faults`` (a
+        :class:`.core.faults.FaultModel` or scalar failure rate) injects
+        provider outages and per-attempt failures; interrupted requests
+        re-queue under the ``retry`` :class:`.core.faults.RetryPolicy` —
+        re-placed on the cheapest provider *outside* the outage, falling
+        back to a private slot when the budget is exhausted, and
+        reported as ``abandoned`` when even that cannot meet the SLA.
+        In-flight pinning still holds: a dispatched attempt is never
+        migrated, only its *failure* triggers re-placement. The report
+        separates availability loss (``abandoned_frac``) from served
+        quality (``sla_attainment_served``).
+
+        ``replica_step_times`` wires live pod telemetry into the plan: a
+        ``{(stage, replica): [step seconds...]}`` history, run through
+        the EWMA straggler detector
+        (:func:`repro.training.fault.straggler_slowdowns`); flagged
+        replicas enter the simulation slowed by their measured factor,
+        so queues on straggling replicas grow and the ACD sweep routes
+        around them.
         """
+        from ..training.fault import straggler_slowdowns
+
         prompt_len = np.asarray(prompt_len)
         J = prompt_len.shape[0]
         pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
@@ -609,15 +768,17 @@ class HybridServingScheduler:
             admitted = np.ceil(release / replan_every_s) * replan_every_s
         else:
             admitted = release.copy()
+        slow = (straggler_slowdowns(replica_step_times)
+                if replica_step_times else None)
         kw = dict(order=order, cost_model=self.cost_model,
                   portfolio=self.portfolio, arrivals=admitted,
-                  engine=engine)
+                  engine=engine, faults=faults, retry=retry,
+                  replica_slowdown=slow or None)
         if mode == "hybrid":
-            # init_phase=False: no whole-trace capacity plan at t0 —
-            # offloading happens only through the event-driven ACD, which
-            # sees nothing a live controller wouldn't
             res = simulate(self.dag, pred, act, c_max=sla_s,
-                           init_phase=False, **kw)
+                           init_phase=bool(init_offload),
+                           init_window=float(replan_every_s)
+                           if init_offload else None, **kw)
         elif mode == "private":
             res = simulate(self.dag, pred, act, c_max=sla_s,
                            init_phase=False, adaptive=False, **kw)

@@ -12,7 +12,9 @@ from __future__ import annotations
 
 import signal
 import time
-from typing import Callable, Optional, TypeVar
+from typing import Callable, Dict, Optional, Sequence, Tuple, TypeVar
+
+from ..core.faults import RetryPolicy
 
 T = TypeVar("T")
 
@@ -67,17 +69,53 @@ class StepTimer:
 
 def run_with_restarts(make_and_run: Callable[[int], T], max_restarts: int = 3,
                       backoff_s: float = 0.0,
-                      retryable=(RuntimeError, OSError)) -> T:
+                      retryable=(RuntimeError, OSError),
+                      policy: Optional[RetryPolicy] = None) -> T:
     """Run ``make_and_run(attempt)``; on a retryable failure, back off and
     re-invoke — the callee is expected to resume from its latest
-    checkpoint (see Trainer.fit). Non-retryable exceptions propagate."""
+    checkpoint (see Trainer.fit). Non-retryable exceptions propagate.
+
+    The backoff schedule is the scheduler core's
+    :meth:`.core.faults.RetryPolicy.backoff_delay` — the one exponential
+    schedule in the codebase, shared with the simulators' retry
+    re-placement; ``policy`` overrides the default built from
+    ``max_restarts``/``backoff_s``.
+    """
+    policy = policy or RetryPolicy(max_attempts=max_restarts + 1,
+                                   backoff_s=float(backoff_s))
     attempt = 0
     while True:
         try:
             return make_and_run(attempt)
         except retryable:
             attempt += 1
-            if attempt > max_restarts:
+            if attempt >= policy.max_attempts:
                 raise
-            if backoff_s:
-                time.sleep(backoff_s * (2 ** (attempt - 1)))
+            delay = policy.backoff_delay(attempt)
+            if delay > 1e-12:
+                time.sleep(delay)
+
+
+def straggler_slowdowns(
+    step_times: Dict[Tuple[int, int], Sequence[float]],
+    alpha: float = 0.1, threshold: float = 2.0,
+) -> Dict[Tuple[int, int], float]:
+    """EWMA straggler flags -> per-replica slowdown factors.
+
+    ``step_times`` maps ``(stage, replica)`` to that replica's observed
+    step-time history; each stream runs through a :class:`StepTimer` and
+    replicas whose *latest* step straggles (``> threshold x`` their own
+    EWMA baseline) report a slowdown factor ``last / ewma``. The result
+    is exactly the ``replica_slowdown=`` format the simulators take, so
+    online controllers can feed live telemetry straight into replanning
+    (see ``serve_online``'s ``replica_step_times=``).
+    """
+    out: Dict[Tuple[int, int], float] = {}
+    for key, times in step_times.items():
+        timer = StepTimer(alpha=alpha, threshold=threshold)
+        flagged = False
+        for dt in times:
+            flagged = timer.observe(float(dt))
+        if flagged and timer.ewma:
+            out[(int(key[0]), int(key[1]))] = float(timer.last / timer.ewma)
+    return out

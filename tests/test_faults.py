@@ -1,0 +1,480 @@
+"""Chaos suite: the fault-injection/recovery layer, DES vs vector exact.
+
+Failures are deterministic scenario data (seeded draws + outage windows),
+so the two engines must agree *exactly* — attempt counts, failure counts,
+abandonment, retries' lost-work billing, fallback placements — on
+multi-provider scenarios with outages and retry budgets. The degenerate
+configs (zero failure rate, one attempt slot) must be bit-exact against
+the pre-fault path, and the recovery semantics obey the monotonicity
+properties a retry layer should: more budget never abandons more (without
+fallback), wider outages never cost less (under uniform latencies).
+"""
+import numpy as np
+import pytest
+
+from repro.core import APPS, simulate
+from repro.core.cost import Provider, ProviderPortfolio, demo_portfolio
+from repro.core.faults import (FaultModel, RetryPolicy, as_fault_model,
+                               normalize_fault_axis)
+from repro.core.vectorsim import simulate_scenarios
+from repro.serving.hybrid import (HybridServingScheduler, elastic_portfolio,
+                                  serving_dag)
+from tests.test_vectorsim import (FIELDS, PINNED_DAG, assert_equivalent,
+                                  grid_for, workload)
+
+J = 11
+
+
+def chaos_model(dag, J, seed, rate=0.35, max_attempts=3,
+                outages=((0, 2.0, 6.0), (1, 4.0, 5.0))):
+    return FaultModel.from_rate(rate, J, dag.num_stages,
+                                max_attempts=max_attempts, seed=seed,
+                                outages=outages, kill_frac=0.6)
+
+
+class TestEquivalence:
+    """DES == vector on fault scenarios, including the new fields."""
+
+    @pytest.mark.parametrize("dag", [APPS["video"], APPS["image"],
+                                     serving_dag(), PINNED_DAG],
+                             ids=lambda d: d.name)
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_chaos_scenarios_match(self, dag, seed):
+        pred, act = workload(dag, J, seed)
+        retry = RetryPolicy(max_attempts=3, backoff_s=0.3, jitter_frac=0.4)
+        kw = dict(c_max_grid=grid_for(dag, pred, (0.25, 0.6)),
+                  orders=("spt", "hcf"), portfolio=demo_portfolio(3),
+                  faults=[None, 0.3, chaos_model(dag, J, seed)],
+                  retry=retry)
+        v = simulate_scenarios(dag, pred, act, **kw)
+        d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+        assert_equivalent(v, d)
+        assert (v.fault_idx == d.fault_idx).all()
+        # the chaos axis genuinely exercised the recovery machinery
+        assert v.failed.sum() > 0 and v.attempts.sum() > v.public_mask.sum()
+
+    def test_no_fallback_abandonment_matches(self):
+        dag = APPS["video"]
+        pred, act = workload(dag, J, 4)
+        kw = dict(c_max_grid=grid_for(dag, pred, (0.3,)), orders=("spt",),
+                  portfolio=demo_portfolio(3),
+                  faults=chaos_model(dag, J, 4, rate=0.5, max_attempts=2),
+                  retry=RetryPolicy(max_attempts=2, private_fallback=False))
+        v = simulate_scenarios(dag, pred, act, **kw)
+        d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+        assert_equivalent(v, d)
+        assert v.abandoned.any(), "chaos config should abandon something"
+        # abandoned jobs never report a completion, in either engine
+        assert np.isnan(v.completion[v.abandoned]).all()
+        assert np.isnan(d.completion[d.abandoned]).all()
+
+    def test_outage_kills_in_flight_work(self):
+        """An outage window opening mid-execution reclaims the attempt;
+        lost work is billed pro-rata and both engines agree on it."""
+        dag = APPS["image"]
+        pred, act = workload(dag, J, 6)
+        fm = FaultModel.from_rate(0.0, J, dag.num_stages, max_attempts=2,
+                                  outages=((0, 0.5, 8.0), (1, 1.0, 9.0)))
+        kw = dict(c_max_grid=grid_for(dag, pred, (0.3,)), orders=("spt",),
+                  portfolio=demo_portfolio(3), faults=fm,
+                  retry=RetryPolicy(max_attempts=2))
+        v = simulate_scenarios(dag, pred, act, **kw)
+        d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+        assert_equivalent(v, d)
+        no_kill = simulate_scenarios(
+            dag, pred, act, **{**kw, "faults": FaultModel.from_rate(
+                0.0, J, dag.num_stages, max_attempts=2,
+                outages=((0, 0.5, 8.0), (1, 1.0, 9.0)),
+                outage_kills=False)})
+        # with kills disabled the windows only mask placement epochs
+        assert no_kill.failed.sum() <= v.failed.sum()
+
+
+class TestDegenerate:
+    """Fault-free configs are bit-exact against the pre-fault path."""
+
+    @pytest.mark.parametrize("engine", ["des", "vector"])
+    def test_zero_model_bit_exact(self, engine):
+        dag = APPS["video"]
+        pred, act = workload(dag, J, 2)
+        kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt", "hcf"),
+                  portfolio=demo_portfolio(3), engine=engine)
+        base = simulate_scenarios(dag, pred, act, **kw)
+        zero = simulate_scenarios(
+            dag, pred, act, **kw,
+            faults=FaultModel.from_rate(0.0, J, dag.num_stages,
+                                        max_attempts=3),
+            retry=RetryPolicy(max_attempts=3, backoff_s=0.5))
+        for fld in FIELDS:
+            a = np.nan_to_num(np.asarray(getattr(base, fld), float), nan=-1)
+            b = np.nan_to_num(np.asarray(getattr(zero, fld), float), nan=-1)
+            assert np.array_equal(a, b), f"field {fld} not bit-exact"
+        assert not zero.abandoned.any() and zero.failed.sum() == 0
+        assert (zero.attempts == zero.public_mask.astype(int)).all()
+
+    @pytest.mark.parametrize("engine", ["des", "vector"])
+    def test_single_attempt_slot_bit_exact(self, engine):
+        """A=1, rate 0: the degenerate attempt axis replays the plain
+        engine verbatim (the acceptance gate for the chain refactor)."""
+        dag = APPS["matrix"]
+        pred, act = workload(dag, J, 3)
+        kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt",),
+                  portfolio=demo_portfolio(2), engine=engine)
+        base = simulate_scenarios(dag, pred, act, **kw)
+        one = simulate_scenarios(dag, pred, act, **kw,
+                                 faults=FaultModel.none(J, dag.num_stages),
+                                 retry=RetryPolicy(max_attempts=1))
+        for fld in ("makespan", "cost_usd", "completion", "start", "end"):
+            a = np.nan_to_num(np.asarray(getattr(base, fld), float), nan=-1)
+            b = np.nan_to_num(np.asarray(getattr(one, fld), float), nan=-1)
+            assert np.array_equal(a, b), f"field {fld} not bit-exact"
+
+    def test_init_window_none_is_bit_exact(self):
+        dag = APPS["image"]
+        pred, act = workload(dag, J, 5)
+        rel = np.linspace(0.0, 5.0, J)
+        for engine in ("des", "vector"):
+            kw = dict(c_max_grid=grid_for(dag, pred), orders=("spt",),
+                      arrivals=rel, engine=engine)
+            base = simulate_scenarios(dag, pred, act, **kw)
+            wide = simulate_scenarios(dag, pred, act, **kw,
+                                      init_window=1e9)
+            assert np.array_equal(base.makespan, wide.makespan)
+            assert np.array_equal(base.cost_usd, wide.cost_usd)
+            assert (base.public_mask == wide.public_mask).all()
+
+
+class TestInitWindow:
+    """Regression: the clairvoyant init offload must not plan over jobs
+    the controller has not seen yet (released after the first window)."""
+
+    def test_window_gates_late_releases(self):
+        dag = APPS["video"]
+        pred, act = workload(dag, J, 7)
+        rel = np.concatenate([np.zeros(3), np.full(J - 3, 50.0)])
+        grid = grid_for(dag, pred, (0.4,))
+        for engine in ("des", "vector"):
+            res = simulate_scenarios(dag, pred, act, c_max_grid=grid,
+                                     orders=("spt",), arrivals=rel,
+                                     init_window=1.0, engine=engine)
+            # late jobs can still be ACD-evicted, but never init-offloaded:
+            # with only 3 early jobs the init count is capped by them
+            assert int(res.n_init_offloaded_jobs.max()) <= 3
+        d = simulate_scenarios(dag, pred, act, c_max_grid=grid,
+                               orders=("spt",), arrivals=rel,
+                               init_window=1.0, engine="des")
+        v = simulate_scenarios(dag, pred, act, c_max_grid=grid,
+                               orders=("spt",), arrivals=rel,
+                               init_window=1.0, engine="vector")
+        assert_equivalent(v, d)
+
+    def test_serve_online_init_offload_is_causal(self):
+        from repro.configs import get_config
+        s = HybridServingScheduler(get_config("llama3-8b"),
+                                   portfolio=elastic_portfolio(2))
+        rng = np.random.default_rng(0)
+        Jr = 16
+        plen, ntok = rng.integers(64, 1024, Jr), rng.integers(16, 128, Jr)
+        rel = np.concatenate([np.zeros(4), np.full(Jr - 4, 30.0)])
+        rep = s.serve_online(plen, ntok, rel, sla_s=2.0, replan_every_s=1.0,
+                             init_offload=True)
+        assert int(rep.result.n_init_offloaded_jobs) <= 4
+
+
+class TestServeOnlineDegradation:
+    """Graceful degradation: outages never crash the controller and never
+    migrate in-flight work."""
+
+    def _sched(self, n=3):
+        from repro.configs import get_config
+        return HybridServingScheduler(get_config("llama3-8b"),
+                                      portfolio=elastic_portfolio(n))
+
+    def test_full_provider_outage_survives(self):
+        s = self._sched()
+        rng = np.random.default_rng(1)
+        Jr = 20
+        plen, ntok = rng.integers(64, 2048, Jr), rng.integers(16, 256, Jr)
+        fm = FaultModel.from_rate(0.3, Jr, 3, max_attempts=3, seed=2,
+                                  outages=tuple((p, 0.0, 1e9)
+                                                for p in range(3)))
+        rep = s.serve_online(plen, ntok, "poisson:4.0", sla_s=3.0,
+                             replan_every_s=1.0, faults=fm,
+                             retry=RetryPolicy(max_attempts=3))
+        summ = rep.summary()
+        # every provider dark the whole horizon: nothing lands public,
+        # everything serves privately or abandons — and nothing crashes
+        assert rep.result.public_mask.sum() == 0
+        assert np.isfinite(summ["cost_usd"])
+        assert 0.0 <= summ["abandoned_frac"] <= 1.0
+        assert 0.0 <= summ["sla_attainment"] <= summ["sla_attainment_served"]
+
+    def test_in_flight_pinning_under_outage(self):
+        """A successful attempt's provider was live at its start — work
+        already dispatched before a window opens is never migrated, only
+        killed (outage_kills) or left to finish."""
+        s = self._sched()
+        rng = np.random.default_rng(3)
+        Jr = 24
+        plen, ntok = rng.integers(64, 2048, Jr), rng.integers(16, 256, Jr)
+        out = ((0, 2.0, 30.0), (1, 3.0, 40.0))
+        fm = FaultModel.from_rate(0.25, Jr, 3, max_attempts=3, seed=5,
+                                  outages=out, outage_kills=False)
+        for engine in ("des", "vector"):
+            rep = s.serve_online(plen, ntok, "poisson:6.0", sla_s=3.0,
+                                 replan_every_s=0.5, faults=fm,
+                                 retry=RetryPolicy(max_attempts=3),
+                                 engine=engine)
+            res = rep.result
+            mask, prov, start = res.public_mask, res.provider, res.start
+            windows = {p: (a, b) for (p, a, b) in out}
+            jj, kk = np.nonzero(mask)
+            for j, k in zip(jj, kk):
+                w = windows.get(int(prov[j, k]))
+                if w is None:
+                    continue
+                # the *decision epoch* of the winning attempt was outside
+                # the provider's window (placement never picks a dark
+                # provider); with kills off it may *finish* inside one
+                assert not (w[0] <= start[j, k] < w[1]) or np.isnan(
+                    start[j, k])
+
+    def test_engines_agree_under_faults_online(self):
+        s = self._sched()
+        rng = np.random.default_rng(4)
+        Jr = 18
+        plen, ntok = rng.integers(64, 2048, Jr), rng.integers(16, 256, Jr)
+        reps = [s.serve_online(plen, ntok, "poisson:5.0", sla_s=2.5,
+                               replan_every_s=1.0, faults=0.3,
+                               engine=e, init_offload=True)
+                for e in ("des", "vector")]
+        a, b = (r.result for r in reps)
+        assert np.isclose(a.makespan, b.makespan, rtol=1e-9)
+        assert np.isclose(a.cost_usd, b.cost_usd, rtol=1e-9)
+        assert (a.public_mask == b.public_mask).all()
+        assert (a.attempts == b.attempts).all()
+        assert (a.abandoned == b.abandoned).all()
+
+    def test_reliability_frontier(self):
+        s = self._sched()
+        rng = np.random.default_rng(5)
+        Jr = 16
+        plen, ntok = rng.integers(64, 2048, Jr), rng.integers(16, 256, Jr)
+        fr = s.reliability_frontier(
+            plen, ntok, fault_grid=[None, 0.25], c_max_grid=(2.0, 4.0),
+            retry=RetryPolicy(max_attempts=2))
+        assert fr.num_scenarios == 4
+        assert fr.pareto.any()
+        assert (fr.availability >= 0).all() and (fr.availability <= 1).all()
+        assert len(fr.frontier()) == int(fr.pareto.sum())
+        assert "cost $" in fr.table()
+        # the fault-free reference scenarios are fully available
+        assert (fr.availability[fr.fault_idx == 0] == 1.0).all()
+
+
+class TestProperties:
+    """Deterministic property tests (seed-parametrized; the hypothesis
+    variants below fuzz the same invariants when hypothesis is present)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_more_retry_budget_never_abandons_more(self, seed):
+        """Without private fallback, a larger attempt budget can only
+        convert abandoned stages into served ones (the first A attempts
+        replay identically — failure draws are nested by construction)."""
+        dag = APPS["video"]
+        pred, act = workload(dag, J, seed)
+        rng = np.random.default_rng(100 + seed)
+        A_max = 4
+        fail = rng.random((J, dag.num_stages, A_max)) < 0.45
+        grid = grid_for(dag, pred, (0.3,))
+        prev = None
+        for A in range(1, A_max + 1):
+            fm = FaultModel(fail=fail[:, :, :A],
+                            jitter=np.zeros((J, dag.num_stages, A)))
+            res = simulate_scenarios(
+                dag, pred, act, c_max_grid=grid, orders=("spt",),
+                portfolio=demo_portfolio(3), faults=fm,
+                retry=RetryPolicy(max_attempts=A, backoff_s=0.1,
+                                  private_fallback=False))
+            n_ab = int(res.abandoned.sum())
+            if prev is not None:
+                assert n_ab <= prev, \
+                    f"budget {A} abandoned {n_ab} > {prev} at {A - 1}"
+            prev = n_ab
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_outage_widening_never_cheaper(self, seed):
+        """Uniform latencies, no transfers, kills off, one always-up
+        provider: widening an outage window only shrinks each placement
+        epoch's feasible set, so per-stage billed minima — and the total —
+        are non-decreasing, and durations (hence makespan) unchanged."""
+        dag = APPS["matrix"]
+        pred, act = workload(dag, J, seed)
+        pred["P_private"] = np.full((J, dag.num_stages), 1e9)
+        act = pred  # perfect predictions: billing tracks selection
+        rel = np.linspace(0.0, 6.0, J)
+        # uniform latency multipliers: placement moves cost, never timing
+        pf = ProviderPortfolio(tuple(
+            Provider(f"u{i}", quantum_ms=1.0,
+                     usd_per_gb_ms=r * 2.1e-9, latency_mult=1.0)
+            for i, r in enumerate((1.0, 0.8, 1.3))))
+        prev_cost, prev_mk = -np.inf, None
+        for widen in (1e-6, 2.0, 5.0, 20.0):
+            fm = FaultModel.from_rate(
+                0.0, J, dag.num_stages, max_attempts=1,
+                outages=((0, 1.0, 1.0 + widen), (1, 2.0, 2.0 + widen)),
+                outage_kills=False)
+            res = simulate_scenarios(
+                dag, pred, act, c_max_grid=(1e6,), orders=("spt",),
+                portfolio=pf, include_transfers=False, arrivals=rel,
+                faults=fm, retry=RetryPolicy(max_attempts=1))
+            cost, mk = float(res.cost_usd[0]), float(res.makespan[0])
+            assert cost >= prev_cost - 1e-12
+            if prev_mk is not None:
+                assert np.isclose(mk, prev_mk, rtol=1e-9)
+            prev_cost, prev_mk = cost, mk
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_zero_rate_is_identity(self, seed):
+        dag = APPS["image"]
+        pred, act = workload(dag, J, seed)
+        kw = dict(c_max_grid=grid_for(dag, pred, (0.5,)), orders=("spt",),
+                  portfolio=demo_portfolio(3))
+        base = simulate_scenarios(dag, pred, act, **kw)
+        zero = simulate_scenarios(dag, pred, act, **kw, faults=0.0,
+                                  retry=RetryPolicy(max_attempts=2))
+        assert np.array_equal(base.makespan, zero.makespan)
+        assert np.array_equal(base.cost_usd, zero.cost_usd)
+        assert (base.public_mask == zero.public_mask).all()
+
+
+class TestFaultModelAPI:
+    def test_retry_policy_schedule(self):
+        rp = RetryPolicy(max_attempts=4, backoff_s=0.5, backoff_mult=3.0,
+                         jitter_frac=0.5)
+        assert rp.backoff_delay(1) == pytest.approx(0.5)
+        assert rp.backoff_delay(2) == pytest.approx(1.5)
+        assert rp.backoff_delay(3, u=1.0) == pytest.approx(4.5 * 1.5)
+        d = rp.delays(np.zeros((2, 3, 4)))
+        assert d.shape == (2, 3, 4) and (d[..., 0] == 0).all()
+        assert np.allclose(d[..., 2], 1.5)
+
+    def test_from_rate_deterministic(self):
+        a = FaultModel.from_rate(0.3, 5, 4, max_attempts=3, seed=9)
+        b = FaultModel.from_rate(0.3, 5, 4, max_attempts=3, seed=9)
+        c = FaultModel.from_rate(0.3, 5, 4, max_attempts=3, seed=10)
+        assert np.array_equal(a.fail, b.fail)
+        assert np.array_equal(a.jitter, b.jitter)
+        assert not np.array_equal(a.fail, c.fail) or not np.array_equal(
+            a.jitter, c.jitter)
+
+    def test_padding_and_validation(self):
+        fm = FaultModel.from_rate(0.5, 3, 2, max_attempts=2)
+        padded = fm.padded(4)
+        assert padded.num_attempt_slots == 4
+        assert not padded.fail[:, :, 2:].any()
+        with pytest.raises(ValueError, match="attempt slots"):
+            as_fault_model(fm, 3, 2, RetryPolicy(max_attempts=1))
+        with pytest.raises(ValueError, match="jobs"):
+            fm.validate_workload(5, 2)
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            FaultModel.from_rate(1.5, 3, 2)
+        with pytest.raises(ValueError):
+            FaultModel.from_rate(0.2, 3, 2, outages=((0, 5.0, 4.0),))
+
+    def test_outage_windows_layout(self):
+        fm = FaultModel.from_rate(0.1, 2, 2, outages=((1, 0.0, 2.0),
+                                                      (1, 5.0, 6.0),
+                                                      (0, 1.0, 3.0)))
+        w = fm.outage_windows(3)
+        assert w.shape == (3, 2, 2)
+        assert np.isinf(w[2]).all()          # provider 2: no windows
+        assert np.isinf(w[0, 1]).all()       # provider 0: one window
+        with pytest.raises(ValueError, match="provider"):
+            fm.outage_windows(1)
+
+    def test_normalize_fault_axis(self):
+        rp = RetryPolicy(max_attempts=2)
+        cfgs = normalize_fault_axis([None, 0.4, FaultModel.none(3, 2)],
+                                    3, 2, rp)
+        assert len(cfgs) == 3
+        assert all(c.num_attempt_slots == 2 for c in cfgs)
+        assert cfgs[0].is_null and not cfgs[1].is_null
+        assert normalize_fault_axis(None, 3, 2, rp) is None
+        with pytest.raises(ValueError, match="empty"):
+            normalize_fault_axis([], 3, 2, rp)
+
+
+class TestTrainingReuse:
+    """Satellite: the training restart wrapper runs on the core backoff."""
+
+    def test_run_with_restarts_uses_policy_schedule(self, monkeypatch):
+        from repro.training import fault as tf
+        slept = []
+        monkeypatch.setattr(tf.time, "sleep", slept.append)
+        calls = []
+
+        def work(attempt):
+            calls.append(attempt)
+            if attempt < 3:
+                raise RuntimeError("boom")
+            return attempt
+
+        assert tf.run_with_restarts(work, max_restarts=3,
+                                    backoff_s=0.25) == 3
+        assert calls == [0, 1, 2, 3]
+        assert slept == pytest.approx([0.25, 0.5, 1.0])
+
+    def test_run_with_restarts_exhausts(self):
+        from repro.training.fault import run_with_restarts
+
+        def always(attempt):
+            raise RuntimeError("boom")
+
+        with pytest.raises(RuntimeError):
+            run_with_restarts(always, max_restarts=2, backoff_s=0.0)
+
+    def test_straggler_slowdowns(self):
+        from repro.training.fault import straggler_slowdowns
+        sl = straggler_slowdowns({(0, 1): [0.1] * 20 + [0.4],
+                                  (0, 0): [0.1] * 20,
+                                  (2, 3): [0.2] * 5 + [0.21]})
+        assert set(sl) == {(0, 1)}
+        assert 3.5 < sl[(0, 1)] < 4.5
+
+    def test_slowdowns_feed_simulation(self):
+        dag = APPS["matrix"]
+        pred, act = workload(dag, 6, 8)
+        from repro.training.fault import straggler_slowdowns
+        sl = straggler_slowdowns({(0, 0): [0.1] * 20 + [0.5]})
+        slowed = simulate(dag, pred, act, c_max=1e6,
+                          replica_slowdown=sl)
+        base = simulate(dag, pred, act, c_max=1e6)
+        assert slowed.makespan >= base.makespan - 1e-12
+
+
+try:        # optional: fuzz the same invariants when hypothesis is around
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    class TestFuzzedProperties:
+        @given(rate=st.floats(min_value=0.0, max_value=0.9),
+               seed=st.integers(min_value=0, max_value=50))
+        @settings(max_examples=15, deadline=None)
+        def test_engines_agree_fuzzed(self, rate, seed):
+            dag = APPS["matrix"]
+            pred, act = workload(dag, 6, seed)
+            kw = dict(c_max_grid=grid_for(dag, pred, (0.4,)),
+                      orders=("spt",), portfolio=demo_portfolio(2),
+                      faults=FaultModel.from_rate(rate, 6, dag.num_stages,
+                                                  max_attempts=2,
+                                                  seed=seed),
+                      retry=RetryPolicy(max_attempts=2))
+            v = simulate_scenarios(dag, pred, act, **kw)
+            d = simulate_scenarios(dag, pred, act, **kw, engine="des")
+            assert_equivalent(v, d)

@@ -16,7 +16,8 @@ from repro.serving.hybrid import serving_dag
 J = 17
 FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
           "n_offloaded_stages", "n_init_offloaded_jobs",
-          "per_stage_offloads", "provider", "replica", "segment")
+          "per_stage_offloads", "provider", "replica", "segment",
+          "attempts", "failed", "abandoned")
 
 PINNED_DAG = AppDAG(
     "pinned",

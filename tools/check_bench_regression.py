@@ -37,7 +37,8 @@ def point_key(point: dict) -> str:
     parts = [f"J{point['J']}"]
     for field, tag in (("providers", "prov"), ("arrivals", "arr"),
                        ("replica_configs", "repl"),
-                       ("price_traces", "traces")):
+                       ("price_traces", "traces"),
+                       ("fault_rate", "fault")):
         if point.get(field) is not None:
             parts.append(f"{tag}={point[field]}")
     parts.append(f"dl={point.get('deadlines')}")
