@@ -207,6 +207,66 @@ def attach_faults(tasks, rate: float):
                               jitter_frac=0.25)
 
 
+def peak_rss_mb() -> float:
+    """Process-lifetime peak RSS in MB (monotone; Linux reports KB)."""
+    import resource
+
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return ru / 1024.0 if sys.platform.startswith("linux") else ru / 2**20
+
+
+def measure_azure_point(J: int, engines, chunk_jobs: int = 4096,
+                        c_max: float = 60.0, day: str = "tue"):
+    """Streaming bench point: one azure-trace invocation day at scale J.
+
+    The job axis is *paged* — the vector engine streams fixed-shape
+    chunks (compile cache keyed on the chunk family, per-replica clocks
+    carried across pages) and the DES admits arrival epochs in windows —
+    so the point measures the memory-bounded regime the monolithic
+    shape family cannot reach (J=1e5..1e6). One app, one order, one
+    deadline keeps the serial DES replay CI-affordable. Reports
+    process peak RSS alongside throughput; the smoke assertion requires
+    it to stay under 4 GB.
+    """
+    from repro.core.vectorsim import _LAST_PAGE_STATS, simulate_scenarios
+
+    dag = APPS["image"]
+    spec = f"azure:day={day},scale={J}"
+    point = {"J": J, "apps": 1, "orders": 1, "deadlines": 1,
+             "workload": f"azure:day={day}", "chunk_jobs": chunk_jobs,
+             "engines": {}}
+    checks = {}
+    for eng in engines:
+        t0 = time.perf_counter()
+        out = simulate_scenarios(
+            dag, None, workload=spec, c_max_grid=(c_max,),
+            orders=("spt",), engine=eng, chunk_jobs=chunk_jobs)
+        dt = time.perf_counter() - t0
+        checks[eng] = float(out.makespan.sum() + out.cost_usd.sum())
+        rss = peak_rss_mb()
+        point["engines"][eng] = {
+            "wall_s": round(dt, 4),
+            "scenarios_per_sec": round(1.0 / dt, 5),
+            "jobs_per_sec": round(J / dt, 1),
+            "peak_rss_mb": round(rss, 1),
+        }
+        extra = ""
+        if eng == "vector":
+            point["pages"] = _LAST_PAGE_STATS.get("pages")
+            extra = f"  {point['pages']} pages"
+        print(f"  J={J:>6} {eng:>6}: {dt:8.3f}s  "
+              f"{J / dt:10.0f} jobs/s  rss {rss:7.1f} MB{extra}")
+    ref = next(iter(checks.values()))
+    for eng, chk in checks.items():
+        if not np.isclose(chk, ref, rtol=1e-6):
+            raise AssertionError(
+                f"engine {eng} diverged on the azure point: "
+                f"checksum {chk} vs {ref}")
+    assert peak_rss_mb() < 4096.0, \
+        f"azure streaming point exceeded 4 GB peak RSS ({peak_rss_mb():.0f} MB)"
+    return point
+
+
 def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                   arrivals=None, replica_sweep=None, price_traces=None,
                   fault_rate=None):
@@ -305,6 +365,15 @@ def main(argv=None):
                          "seeded chaos scenario (rate-R failures, an "
                          "outage window, mid-stage kills) under a "
                          "3-attempt retry policy (des/vector engines)")
+    ap.add_argument("--workload", default=None, metavar="FAM",
+                    help="add a streaming trace-workload point (currently "
+                         "'azure': one paged invocation day, des+vector, "
+                         "peak-RSS reporting, <4 GB assertion)")
+    ap.add_argument("--jobs", type=int, default=100000, metavar="J",
+                    help="invocation count for the --workload point "
+                         "(default 100000)")
+    ap.add_argument("--chunk-jobs", type=int, default=4096, metavar="N",
+                    help="streaming page size for the --workload point")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_scheduler.json"))
     args = ap.parse_args(argv)
@@ -349,6 +418,15 @@ def main(argv=None):
             report["points"].append(
                 measure_point(64, ("des", "vector"), portfolio=pf,
                               fault_rate=args.fault_rate))
+        if args.workload:
+            if args.workload != "azure":
+                raise SystemExit(f"unknown --workload {args.workload!r} "
+                                 "(supported: azure)")
+            print(f"smoke: streaming azure day, J={args.jobs}, "
+                  f"chunk={args.chunk_jobs}, des+vector")
+            report["points"].append(
+                measure_azure_point(args.jobs, ("des", "vector"),
+                                    chunk_jobs=args.chunk_jobs))
     else:
         print("sweep 3 apps x 2 orders x 5 deadlines:")
         report["points"].append(
@@ -381,6 +459,15 @@ def main(argv=None):
             report["points"].append(
                 measure_point(512, ("des", "vector"), portfolio=pf,
                               fault_rate=args.fault_rate))
+        if args.workload:
+            if args.workload != "azure":
+                raise SystemExit(f"unknown --workload {args.workload!r} "
+                                 "(supported: azure)")
+            print(f"streaming azure day (J={args.jobs}, "
+                  f"chunk={args.chunk_jobs}, des/vector only):")
+            report["points"].append(
+                measure_azure_point(args.jobs, ("des", "vector"),
+                                    chunk_jobs=args.chunk_jobs))
         # large-J: seed is O(J^2 log J); one deadline keeps it bounded
         print("large-J point (1 deadline per app/order):")
         report["points"].append(

@@ -24,6 +24,10 @@ Layout (one module per concern):
     Exogenous release streams (:class:`PoissonArrivals`,
     :class:`MMPPArrivals`, :class:`TraceArrivals`) generalizing the
     paper's batch-at-``t0`` to continuous serving.
+``workloads``
+    Trace-derived workload families: the ``azure:`` spec samples
+    whole invocation days (heavy-tailed durations, diurnal releases)
+    from the committed Azure-2019-calibrated extract at any scale.
 ``greedy``
     The vectorized Alg.-1 math: capacity-prefix initialization offload,
     ACD sweeps, provider selection — numpy and jit twins.
@@ -65,6 +69,8 @@ from .scheduler import BatchReport, SkedulixScheduler
 from .simulator import (SimResult, simulate, simulate_all_private,
                         simulate_all_public)
 from .vectorsim import VectorSimResult, simulate_scenarios, sweep_scenarios
+from .workloads import (AzureWorkload, load_azure_sample, parse_workload,
+                        resolve_workload)
 
 __all__ = [
     "AppDAG", "Stage", "APPS", "matrix_app", "video_app", "image_app",
@@ -84,4 +90,6 @@ __all__ = [
     "SkedulixScheduler", "BatchReport",
     "SimResult", "simulate", "simulate_all_public", "simulate_all_private",
     "VectorSimResult", "simulate_scenarios", "sweep_scenarios",
+    "AzureWorkload", "parse_workload", "resolve_workload",
+    "load_azure_sample",
 ]

@@ -100,6 +100,7 @@ class SkedulixScheduler:
         act: Optional[Dict[str, np.ndarray]] = None,
         order: str = "spt",
         arrivals: ArrivalsLike = None,
+        workload=None,
         **sim_kwargs,
     ) -> BatchReport:
         """Schedule one workload at one (order, C_max) point.
@@ -109,11 +110,22 @@ class SkedulixScheduler:
         the batch-at-``t0`` regime to an exogenous release stream — an
         :class:`.arrivals.ArrivalProcess`, a spec string like
         ``"poisson:4.0"``, or an explicit ``[J]`` release-time vector;
-        each job then has its own deadline ``release + c_max``. Extra
-        keyword arguments (``engine=``, ``t0=``, flags) forward to
-        :func:`.simulator.simulate`.
+        each job then has its own deadline ``release + c_max``.
+        ``workload`` replaces ``pred`` with a trace-derived spec
+        (:mod:`.workloads`, e.g. ``"azure:day=tue,scale=1e5"``) whose
+        release stream becomes the default arrivals. Extra keyword
+        arguments (``engine=``, ``chunk_jobs=``, ``t0=``, flags) forward
+        to :func:`.simulator.simulate`.
         """
-        if pred is None:
+        if workload is not None:
+            if pred is not None:
+                raise ValueError("pass either pred or workload=, not both")
+            from .workloads import resolve_workload
+            pred, act, wl_release = resolve_workload(
+                workload, self.dag, sim_kwargs.get("t0", 0.0))
+            if arrivals is None:
+                arrivals = wl_release
+        elif pred is None:
             pred = self.predict(base_features)
         res = simulate(self.dag, pred, act, c_max=c_max, order=order,
                        cost_model=self.cost_model, portfolio=self.portfolio,
@@ -137,6 +149,9 @@ class SkedulixScheduler:
         price_traces=None,
         faults=None,
         retry=None,
+        workload=None,
+        chunk_jobs: Optional[int] = None,
+        egress_lookahead: bool = False,
         **sim_kwargs,
     ) -> VectorSimResult:
         """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
@@ -161,15 +176,26 @@ class SkedulixScheduler:
         are scenario data in the vector engine: the full ``orders x
         c_max x replicas x speeds x traces x faults`` grid is still one
         batched call on one compiled executable.
+
+        ``workload`` replaces ``pred``/``base_features`` with a trace-
+        derived workload spec (:mod:`.workloads`, e.g.
+        ``"azure:day=tue,scale=1e5"``) whose release stream becomes the
+        default arrivals; ``chunk_jobs`` pages the job axis through
+        fixed-shape streaming chunks (both engines, results equivalent
+        to the monolithic path — the scale knob for ``1e5``..``1e6``-job
+        days); ``egress_lookahead`` adds the one-edge downstream-egress
+        recourse term to the placement argmin.
         """
-        if pred is None:
+        if pred is None and workload is None:
             pred = self.predict(base_features)
         return simulate_scenarios(
             self.dag, pred, act, c_max_grid=c_max_grid, orders=orders,
             cost_model=self.cost_model, portfolio=self.portfolio,
             engine=engine, arrivals=arrivals, replicas=replicas,
             replica_speeds=replica_speeds, price_traces=price_traces,
-            faults=faults, retry=retry, **sim_kwargs)
+            faults=faults, retry=retry, workload=workload,
+            chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
+            **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None,
                             arrivals: ArrivalsLike = None) -> SimResult:

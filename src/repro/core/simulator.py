@@ -160,7 +160,9 @@ class _Sim:
                  release: Optional[np.ndarray] = None,
                  faults: Optional[FaultModel] = None,
                  retry: Optional[RetryPolicy] = None,
-                 init_window: Optional[float] = None):
+                 init_window: Optional[float] = None,
+                 chunk_jobs: Optional[int] = None,
+                 egress_lookahead: bool = False):
         self.dag = dag
         self.J, self.M = pred["P_private"].shape
         self.pred = pred
@@ -185,6 +187,14 @@ class _Sim:
         # None = classic Alg. 1 (whole trace visible at t0); a float gates
         # init offload to jobs released within [t0, t0 + init_window]
         self.init_window = init_window
+        # windowed event admission: arrival epochs enter the heap in pages
+        # of >= chunk_jobs jobs (the same page boundaries the vector
+        # engine's streaming path uses); None keeps the whole horizon in
+        # the heap up front
+        if chunk_jobs is not None and int(chunk_jobs) < 1:
+            raise ValueError("chunk_jobs must be >= 1")
+        self._chunk = None if chunk_jobs is None else int(chunk_jobs)
+        self._lookahead = bool(egress_lookahead)
         # (stage, replica_idx) -> multiplicative slowdown (straggler injection)
         self.replica_slowdown = replica_slowdown or {}
         # fault layer: failures are scenario data (.faults), evaluated by
@@ -299,6 +309,8 @@ class _Sim:
         _pos = {s: i for i, s in enumerate(dag.topo_order())}
         self._pred_topo = [sorted(ps, key=_pos.__getitem__)
                            for ps in dag.pred_lists]
+        self._succ_topo = [sorted(ss, key=_pos.__getitem__)
+                           for ss in dag.succ_lists]
         self._desc = dag.descendant_lists
         self._is_sink = set(dag.sink_ids)
         self._repl = [max(int(r), 1) for r in dag.replicas]
@@ -399,11 +411,35 @@ class _Sim:
         later = np.flatnonzero(~at_t0)
         if later.size:
             times = self._rel[later]
-            for t_r in np.unique(times):
-                jobs = tuple(int(j) for j in later[times == t_r])
-                self._at(float(t_r), self._arrival_epoch, jobs)
+            epochs = [(float(t_r), tuple(int(j) for j in later[times == t_r]))
+                      for t_r in np.unique(times)]
+            if self._chunk is None:
+                for t_r, jobs in epochs:
+                    self._at(t_r, self._arrival_epoch, jobs)
+            else:
+                # windowed admission: the heap only ever holds ~chunk_jobs
+                # future arrival epochs; the last epoch of each window
+                # admits the next when it fires (its time strictly
+                # precedes every epoch it admits, so heap order is
+                # preserved). Tied release groups share an epoch and are
+                # never split across windows.
+                self._epochs = epochs
+                self._epoch_pos = 0
+                self._admit_window()
 
-    def _arrival_epoch(self, t: float, jobs: Tuple[int, ...]):
+    def _admit_window(self):
+        start = self._epoch_pos
+        n = 0
+        while self._epoch_pos < len(self._epochs) and n < self._chunk:
+            n += len(self._epochs[self._epoch_pos][1])
+            self._epoch_pos += 1
+        last = self._epoch_pos - 1
+        for i in range(start, self._epoch_pos):
+            t_r, jobs = self._epochs[i]
+            self._at(t_r, self._arrival_epoch, jobs, i == last)
+
+    def _arrival_epoch(self, t: float, jobs: Tuple[int, ...],
+                       chain_next: bool = False):
         """Release epoch: arriving jobs enqueue at their source stages (or
         go straight public if the initialization phase marked them), then
         the ACD sweep re-runs over each source queue. Jobs sharing a
@@ -413,6 +449,8 @@ class _Sim:
         :meth:`_propagate_done` uses for forced-public downstream stages
         (and the one the vector engine's eligibility-filtered arrival
         stream encodes)."""
+        if chain_next and self._epoch_pos < len(self._epochs):
+            self._admit_window()
         for j in jobs:
             for k in self.dag.source_ids:
                 self._stage_ready(t, j, k)
@@ -505,6 +543,16 @@ class _Sim:
         provider other than a public predecessor's pays that
         predecessor's (predicted) egress to move the edge, so cascades
         prefer staying put unless the price gap covers the hop.
+
+        With ``egress_lookahead`` each candidate additionally carries a
+        one-edge downstream recourse term: per unpinned successor edge
+        (k, v), the candidate provider's own egress rate (at its active
+        segment) times the predicted edge volume — the cost the schedule
+        will pay to move stage k's output *off* that provider if v lands
+        elsewhere (or back to private storage). Successor terms accumulate
+        after the predecessor terms, in ascending topological order, the
+        same float association as the vector engine. Plan-time priority
+        keys exclude the term (it is a decision-epoch quantity).
         """
         segs = (self._edges <= t).sum(axis=1) - 1              # [P]
         selc = self._sel_pst[self._iota_P, segs, j, k]         # [P]
@@ -517,6 +565,11 @@ class _Sim:
                     pen = (self._egress_seg[lu, seg_j[u]]
                            * self._down_gb_pred[j][u])
                     selc = selc + np.where(self._iota_P != lu, pen, 0.0)
+            if self._lookahead:
+                egc = self._egress_seg[self._iota_P, segs]     # [P]
+                for v in self._succ_topo[k]:
+                    if not self._pinned[v]:
+                        selc = selc + egc * self._down_gb_pred[j][k]
         return selc, segs
 
     def _start_public(self, t: float, j: int, k: int):
@@ -743,6 +796,8 @@ def simulate(
     faults: FaultLike = None,
     retry: Optional[RetryPolicy] = None,
     init_window: Optional[float] = None,
+    chunk_jobs: Optional[int] = None,
+    egress_lookahead: bool = False,
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
@@ -775,6 +830,18 @@ def simulate(
     are given). ``init_window``: when set (and ``init_phase``), only jobs
     released within ``t0 + init_window`` are init-offload candidates —
     the non-clairvoyant variant for arrival streams.
+
+    ``chunk_jobs``: streaming page size. The DES admits arrival epochs
+    into the event heap in windows of at least ``chunk_jobs`` jobs (the
+    heap holds the active window instead of the whole horizon); the
+    vector engine pages jobs through fixed-shape chunks in release order
+    (compile cache keyed on the chunk family, not total J) with
+    per-replica clocks carried across pages. Results are equivalent to
+    the monolithic path on tie-free draws (bit-exact per page when no
+    page's work overlaps the next page's releases — the engine verifies
+    this and falls back to larger pages otherwise). ``egress_lookahead``
+    adds a one-edge downstream-egress recourse term to the placement
+    argmin (see ``_Sim._selc_at``), identically in both engines.
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
@@ -800,14 +867,16 @@ def simulate(
             replica_speeds=None if not replica_slowdown
             else [replica_slowdown],
             faults=None if fault_model is None else [fault_model],
-            retry=retry, init_window=init_window)
+            retry=retry, init_window=init_window,
+            chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead)
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")
     sim = _Sim(dag, pred, act, c_max, order, cost_model, include_transfers,
                init_phase, adaptive, t0, replica_slowdown, portfolio,
                release=release, faults=fault_model, retry=retry,
-               init_window=init_window)
+               init_window=init_window, chunk_jobs=chunk_jobs,
+               egress_lookahead=egress_lookahead)
     return sim.run()
 
 

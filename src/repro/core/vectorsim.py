@@ -166,8 +166,9 @@ class VectorSimResult:
 
 @functools.lru_cache(maxsize=None)
 def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
-                  include_transfers: bool, init_phase: bool, adaptive: bool,
-                  A_att: int = 0, W: int = 0, faulty: bool = False):
+                  include_transfers: bool, init_mode: int, adaptive: bool,
+                  A_att: int = 0, W: int = 0, faulty: bool = False,
+                  lookahead: bool = False):
     """Trace the stage-decomposed event loop for one (stage count, replica
     bound, job count, provider count, price-segment count, flags) shape
     family. DAG structure arrives as data: ``A``/``desc`` are [M, M]
@@ -199,17 +200,20 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
     """
     iota_J = jnp.arange(J)
 
-    def run_stage(k, a, forced_k, elig, speed_k, acd_k, P_k, rem_k,
-                  dur_k, keys_k, deadline, t0):
+    def run_stage(k, a, forced_k, elig, speed_k, clock0_k, acd_k, P_k,
+                  rem_k, dur_k, keys_k, deadline, t0):
         """Run stage k's event loop given per-job arrival times ``a`` [J].
 
         ``deadline`` is the per-job absolute deadline [J] (release + C_max;
         a constant vector for batch workloads). ``speed_k`` [I_max] holds
-        the stage's replica pool. Returns (times, replica) in job coords:
-        ``times`` holds the dispatch instant of private jobs and
-        ``-(eviction instant) - 1`` of evicted ones (NaN = never exited);
-        placement/pricing happen in the caller, where the offload epoch
-        is known.
+        the stage's replica pool, ``clock0_k`` [I_max] the busy-until
+        clock each present replica starts from (``t0`` for a monolithic
+        run; a previous page's final clocks when paging the job axis).
+        Returns (times, replica, clocks) in job coords: ``times`` holds
+        the dispatch instant of private jobs and ``-(eviction instant)
+        - 1`` of evicted ones (NaN = never exited); ``clocks`` the final
+        per-replica busy-until vector. Placement/pricing happen in the
+        caller, where the offload epoch is known.
         """
         # queue coordinates: stable sort by stage key, ties by job id
         perm = jnp.argsort(keys_k, stable=True)
@@ -306,21 +310,21 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                                 t_new + dur_q[pos_x] * speed_k[sidx]), svr)
             return (t_new, ap, exited, svr, times, rep, ~has_viol, it + 1)
 
-        svr0 = jnp.where(jnp.isfinite(speed_k), t0, jnp.inf)  # absent slots
+        svr0 = jnp.where(jnp.isfinite(speed_k), clock0_k, jnp.inf)  # absent
         carry = (jnp.asarray(t0, jnp.float64), ap0, jnp.zeros((J,), bool),
                  svr0, jnp.full((J,), jnp.nan),
                  jnp.full((J,), -1, jnp.int32),
                  jnp.zeros((), bool), jnp.zeros((), jnp.int32))
         carry = jax.lax.while_loop(cond, body, carry)
-        _, _, _, _, times, rep, _, _ = carry
+        _, _, _, svr, times, rep, _, _ = carry
         # back to job coordinates
-        return times[inv], rep[inv]
+        return times[inv], rep[inv], svr
 
     def run_one(P_pred, act_priv, pub_a, up_a, down_a, dgb_pred, cost_ps,
                 sel_ps, lat_ps, eg_ps, edges_ps,
                 stage_keys, job_keys, deadline, capacity, t0, release,
-                init_elig, A, desc, sink, pinned, inert, speed,
-                *fault_args):
+                init_elig, live, A, desc, sink, pinned, inert, speed,
+                clock0, *fault_args):
         if faulty:
             # scenario fault data: [J, M, A_att] failure draws + backoff
             # delays, [P, W, 2] outage windows, and scalar knobs
@@ -334,7 +338,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                 best = jnp.maximum(best, jnp.where(A[k, v], rem_l[v], 0.0))
             rem_l[k] = P_pred[:, k] + best
 
-        if init_phase:
+        if init_mode == 1:
             # init_elig gates the non-clairvoyant variant (init_window):
             # ineligible jobs contribute zero demand to the prefix scan
             # and are never marked; all-True reproduces the classic path
@@ -342,6 +346,11 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             off = init_offload_jax(
                 jnp.where(init_elig, P_pred.sum(axis=1), 0.0),
                 job_keys, capacity) & init_elig
+        elif init_mode == 2:
+            # paged runs: the capacity-prefix rule is *global* over the
+            # job axis, so the driver resolves it over the full job set
+            # up front and feeds the resulting mask page by page
+            off = init_elig & live
         else:
             off = jnp.zeros(J, dtype=bool)
 
@@ -356,9 +365,13 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
         cost_l: List[Optional[jax.Array]] = [None] * M
         att_l: List[Optional[jax.Array]] = [None] * M
         failc_l: List[Optional[jax.Array]] = [None] * M
+        qexit_l: List[Optional[jax.Array]] = [None] * M
+        clocks_l: List[Optional[jax.Array]] = [None] * M
         ab_j = jnp.zeros(J, dtype=bool)
-        lostc = jnp.zeros(())
-        xegress = jnp.zeros(())
+        # per-job accumulators (host-side canonical-order reductions make
+        # monolithic and paged runs bit-identical)
+        lost_j = jnp.zeros(J)
+        xeg_j = jnp.zeros(J)
         iota_P = jnp.arange(P)
         neg = jnp.full(J, -jnp.inf)
         for k in range(M):
@@ -375,14 +388,17 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             for u in range(k):
                 forced_k = forced_k | (desc[u, k] & evict_l[u])
             forced_k = forced_k & ~pinned[k]
-            elig = ~forced_k & ~inert[k]
+            elig = ~forced_k & ~inert[k] & live
             if faulty:
                 # dead jobs (abandoned upstream) never enter a queue
                 elig = elig & jnp.isfinite(a)
             acd_k = ~pinned[k]
-            times_j, rep_j = run_stage(
-                k, a, forced_k, elig, speed[k], acd_k, P_pred[:, k],
-                rem_l[k], act_priv[:, k], stage_keys[:, k], deadline, t0)
+            times_j, rep_j, svr_k = run_stage(
+                k, a, forced_k, elig, speed[k], clock0[k], acd_k,
+                P_pred[:, k], rem_l[k], act_priv[:, k], stage_keys[:, k],
+                deadline, t0)
+            qexit_l[k] = times_j
+            clocks_l[k] = svr_k
             evicted = times_j < -0.5  # NaN (never exited) compares False
             locpub = forced_k | evicted
             # decision-epoch pricing: the offload epoch is the stage's
@@ -417,6 +433,20 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                         s = s + jnp.where(
                             iota_P[:, None] != prov_l[u][None, :],
                             pen_u[None, :], 0.0)
+                if include_transfers and lookahead:
+                    # one-edge downstream recourse: placing stage k on a
+                    # candidate provider commits its successor edges to
+                    # pay that provider's egress if they ever move, so
+                    # the argmin sees (predicted edge volume) x (the
+                    # candidate's egress rate at the epoch's segment).
+                    # Successor terms add after the predecessor penalty,
+                    # in ascending topological order — the DES sums in
+                    # the same order (identical float association).
+                    eg_cand = jnp.take_along_axis(eg_ps, seg_pj, axis=1)
+                    for v in range(k + 1, M):
+                        s = s + jnp.where(
+                            A[k, v] & ~pinned[v],
+                            eg_cand * dgb_pred[:, k][None, :], 0.0)
                 return s, seg_pj
 
             if not faulty:
@@ -441,10 +471,10 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                         moved = (A[u, k] & loc_l[u] & locpub
                                  & (prov_l[u] != pidx_k))
                         rate_u = eg_ps[prov_l[u], seg_l[u]]
-                        xegress = xegress + jnp.where(
+                        xeg_j = xeg_j + jnp.where(
                             moved,
                             rate_u * (down_a[:, u] * EGRESS_GB_PER_S),
-                            0.0).sum()
+                            0.0)
                     has_pred = A[:k, k].any() if k else jnp.asarray(False)
                     needs_up = jnp.where(has_pred, needs_up, True)
                     upk = jnp.where(needs_up, up_a[:, k] * lm, 0.0)
@@ -548,8 +578,7 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                 lm_fin = jnp.where(ok, lm_a, lm_fin)
                 cost_k = cost_k + jnp.where(ok, billed, 0.0)
                 frac = jnp.where(dur_a > 0.0, (t_f - s_a) / dur_a, 0.0)
-                lostc = lostc + jnp.where(failed_now, billed * frac,
-                                          0.0).sum()
+                lost_j = lost_j + jnp.where(failed_now, billed * frac, 0.0)
                 maskPJ = maskPJ | (failed_now[None, :]
                                    & (iota_P[:, None] == p_a[None, :]))
                 if ai + 1 < A_att:
@@ -594,10 +623,10 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                     moved = (A[u, k] & loc_l[u] & succ
                              & (prov_l[u] != p_fin))
                     rate_u = eg_ps[prov_l[u], seg_l[u]]
-                    xegress = xegress + jnp.where(
+                    xeg_j = xeg_j + jnp.where(
                         moved,
                         rate_u * (down_a[:, u] * EGRESS_GB_PER_S),
-                        0.0).sum()
+                        0.0)
             cost_l[k] = cost_k
             down_l[k] = down_a[:, k] * lm_fin
             prov_l[k] = p_fin
@@ -621,37 +650,38 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             fin = fin + jnp.where(locpub, jnp.stack(down_l, axis=1), 0.0)
         completion = jnp.max(
             jnp.where(sink[None, :], fin, -jnp.inf), axis=1)
+        # per-job cost (stage billing in fixed [J, M] reduction order +
+        # cross-provider egress and lost-work accumulated per job in the
+        # stage loop above); the scalar totals — makespan, cost_usd, the
+        # offload counters — reduce on the *host* over canonical job
+        # order, so a paged run sums the exact same array as a monolithic
+        # one. qexit (raw sign-encoded queue-exit times) and clocks (the
+        # final per-replica busy-until vectors) exist for the pager: the
+        # former drives the page-safety check, the latter is the carry.
+        qexit = jnp.stack(qexit_l, axis=1)
+        clocks = jnp.stack(clocks_l, axis=0)
         if not faulty:
-            return dict(makespan=completion.max() - t0,
-                        cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0))
-                        + xegress,
+            cost_j = jnp.sum(jnp.where(locpub, cost_m, 0.0), axis=1) + xeg_j
+            return dict(cost_j=cost_j, init_off=off,
+                        qexit=qexit, clocks=clocks,
                         public_mask=locpub, start=start, end=end,
                         completion=completion,
-                        n_offloaded_stages=locpub.sum(),
-                        n_init_offloaded_jobs=off.sum(),
-                        per_stage_offloads=locpub.sum(axis=0),
                         provider=jnp.where(locpub, prov_m, -1),
                         replica=rep_m,
                         segment=jnp.where(locpub, seg_m, -1),
                         attempts=locpub.astype(jnp.int64),
                         failed=jnp.zeros((J, M), dtype=jnp.int64),
                         abandoned=jnp.zeros(J, dtype=bool))
-        # abandoned jobs never complete: NaN completion, NaN stage ends,
-        # makespan over completed jobs only (0 when none finish)
+        # abandoned jobs never complete: NaN completion, NaN stage ends
         ok_j = ~ab_j
         completion_out = jnp.where(ok_j, completion, jnp.nan)
-        makespan = jnp.where(
-            ok_j.any(),
-            jnp.max(jnp.where(ok_j, completion, -jnp.inf)) - t0, 0.0)
-        return dict(makespan=makespan,
-                    cost_usd=jnp.sum(jnp.where(locpub, cost_m, 0.0))
-                    + xegress + lostc,
+        cost_j = (jnp.sum(jnp.where(locpub, cost_m, 0.0), axis=1)
+                  + xeg_j + lost_j)
+        return dict(cost_j=cost_j, init_off=off,
+                    qexit=qexit, clocks=clocks,
                     public_mask=locpub, start=start,
                     end=jnp.where(jnp.isinf(end), jnp.nan, end),
                     completion=completion_out,
-                    n_offloaded_stages=locpub.sum(),
-                    n_init_offloaded_jobs=off.sum(),
-                    per_stage_offloads=locpub.sum(axis=0),
                     provider=jnp.where(locpub, prov_m, -1),
                     replica=rep_m,
                     segment=jnp.where(locpub, seg_m, -1),
@@ -664,12 +694,13 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
 
 @functools.lru_cache(maxsize=None)
 def _engine_fn(M: int, I_max: int, J: int, P: int, S: int,
-               include_transfers: bool, init_phase: bool, adaptive: bool,
-               A_att: int, W: int, faulty: bool, n_dev: int):
+               include_transfers: bool, init_mode: int, adaptive: bool,
+               A_att: int, W: int, faulty: bool, lookahead: bool,
+               n_dev: int):
     """jit(vmap) on one device; pmap(vmap) sharding the scenario axis
     across host devices when more are available."""
-    run_one = _build_engine(M, I_max, J, P, S, include_transfers, init_phase,
-                            adaptive, A_att, W, faulty)
+    run_one = _build_engine(M, I_max, J, P, S, include_transfers, init_mode,
+                            adaptive, A_att, W, faulty, lookahead)
     if n_dev > 1:
         return jax.pmap(jax.vmap(run_one))
     return jax.jit(jax.vmap(run_one))
@@ -1137,13 +1168,64 @@ class _Task:
                 np.full(S, self.t0),
                 np.broadcast_to(rel, (S, self.J)),
                 np.broadcast_to(init_elig, (S, self.J)),
+                np.ones((S, self.J), dtype=bool),           # live
                 np.broadcast_to(A, (S,) + A.shape),
                 np.broadcast_to(desc, (S,) + desc.shape),
                 np.broadcast_to(sink, (S,) + sink.shape),
                 np.broadcast_to(pinned, (S,) + pinned.shape),
                 np.broadcast_to(inert, (S,) + inert.shape),
                 speed,
+                np.full((S, M_pad, self.I_max), self.t0),   # clock0
             ) + fault_args)
+
+    # engine-arg positions carrying a job axis (position -> axis), for the
+    # job pager; fault args (fail/delay grids) follow at _N_BASE_ARGS
+    _PAGE_J_AXES = {0: 1, 1: 1, 2: 1, 3: 1, 4: 1, 5: 1, 6: 3, 7: 3,
+                    11: 1, 12: 1, 13: 1, 16: 1, 17: 1, 18: 1}
+    _N_BASE_ARGS = 26
+    _IDX_DEADLINE, _IDX_RELEASE = 13, 16
+    _IDX_INIT_ELIG, _IDX_LIVE, _IDX_CLOCK0 = 17, 18, 25
+
+    def page_args(self, idx: np.ndarray, J_fam: int, init_mask: np.ndarray,
+                  clocks: np.ndarray) -> tuple:
+        """Slice one page of jobs out of the full arg tuple.
+
+        ``idx`` are ascending job ids; the page pads to the family size
+        ``J_fam`` with inert pad jobs (``live=False``, infinite deadline —
+        never eligible anywhere, so the executable's arithmetic on them is
+        dead). ``init_mask`` [S, n] is the page's slice of the globally
+        resolved init-offload mask (consumed as ``init_elig`` by the
+        ``init_mode=2`` engine); ``clocks`` [S, M_pad, I_max] the carried
+        per-replica busy-until vectors from the previous pages.
+        """
+        n = len(idx)
+        pad = J_fam - n
+        j_axes = dict(self._PAGE_J_AXES)
+        for i in range(self._N_BASE_ARGS, len(self.args)):
+            if i - self._N_BASE_ARGS in (0, 1):  # fail / delay grids
+                j_axes[i] = 1
+        out = []
+        for i, a in enumerate(self.args):
+            ax = j_axes.get(i)
+            if ax is None:
+                out.append(a)
+                continue
+            v = np.take(a, idx, axis=ax)
+            if pad:
+                fill = (np.inf if i == self._IDX_DEADLINE
+                        else self.t0 if i == self._IDX_RELEASE else 0)
+                shape = v.shape[:ax] + (pad,) + v.shape[ax + 1:]
+                v = np.concatenate(
+                    [v, np.full(shape, fill, dtype=v.dtype)], axis=ax)
+            out.append(v)
+        ini = np.zeros((self.S, J_fam), dtype=bool)
+        ini[:, :n] = init_mask
+        live = np.zeros((self.S, J_fam), dtype=bool)
+        live[:, :n] = True
+        out[self._IDX_INIT_ELIG] = ini
+        out[self._IDX_LIVE] = live
+        out[self._IDX_CLOCK0] = clocks
+        return tuple(out)
 
     def pack(self, out: Dict[str, np.ndarray]) -> VectorSimResult:
         """Slice this task's scenarios out of a (possibly concatenated)
@@ -1172,16 +1254,9 @@ class _Task:
             fault_idx=self.fault_out.copy())
 
 
-def _run_task(task: _Task, I_max: int, include_transfers: bool,
-              init_phase: bool, adaptive: bool) -> VectorSimResult:
-    """Run one task's scenario grid through the engine, sharding the
-    scenario axis over host devices when available."""
-    S = task.S
-    n_dev = jax.local_device_count() if S > 1 else 1
-    fn = _engine_fn(task.M_pad, I_max, task.J, task.n_providers,
-                    task.n_segments, include_transfers, init_phase,
-                    adaptive, task.n_attempts, task.n_windows, task.faulty,
-                    n_dev)
+def _dispatch(fn, args, S: int, n_dev: int) -> Dict[str, np.ndarray]:
+    """Run a compiled engine over scenario-axis args, sharding across
+    host devices, and return the output tree as numpy arrays."""
     with enable_x64():
         if n_dev > 1:
             # strided scenario->device interleave balances heterogeneous
@@ -1194,7 +1269,7 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
                 x = np.ascontiguousarray(x[perm])
                 return jnp.asarray(x.reshape((n_dev, -1) + x.shape[1:]))
 
-            out = fn(*[shard(a) for a in task.args])
+            out = fn(*[shard(a) for a in args])
             # position of each original scenario in the device-major output
             # (padding duplicates a few scenarios; any occurrence works)
             pos = np.empty(S, dtype=np.int64)
@@ -1203,9 +1278,159 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
                 lambda x: np.asarray(x).reshape(
                     (-1,) + x.shape[2:])[pos], out)
         else:
-            out = fn(*[jnp.asarray(a) for a in task.args])
+            out = fn(*[jnp.asarray(a) for a in args])
             out = jax.tree_util.tree_map(np.asarray, out)
-    return task.pack(out)
+    return out
+
+
+def _finalize(task: _Task, out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Host-side canonical reductions of the engine's per-job outputs.
+
+    Scalar fields (makespan, cost_usd, the offload counters) reduce over
+    the canonical job order here rather than on-device, so a paged run —
+    which assembles the very same per-job arrays page by page — sums
+    bit-identical floats in bit-identical order to a monolithic run.
+    """
+    t0 = task.t0
+    comp = out["completion"]
+    if task.faulty:
+        ok = ~out["abandoned"]
+        safe = np.where(ok, np.where(np.isnan(comp), -np.inf, comp),
+                        -np.inf)
+        out["makespan"] = np.where(ok.any(axis=1),
+                                   safe.max(axis=1) - t0, 0.0)
+    else:
+        out["makespan"] = comp.max(axis=1) - t0
+    locpub = out["public_mask"]
+    out["cost_usd"] = out.pop("cost_j").sum(axis=1)
+    out["n_offloaded_stages"] = locpub.sum(axis=(1, 2))
+    out["n_init_offloaded_jobs"] = out.pop("init_off").sum(axis=1)
+    out["per_stage_offloads"] = locpub.sum(axis=1)
+    out.pop("qexit", None)
+    out.pop("clocks", None)
+    return out
+
+
+def _host_init_offload(task: _Task) -> np.ndarray:
+    """Resolve the global capacity-prefix init-offload mask [S, J] on the
+    host, mirroring the in-engine computation (``init_mode=1``) op for op
+    so a paged run (``init_mode=2``) reproduces the monolithic mask."""
+    P_pred, job_keys = task.args[0], task.args[12]
+    capacity, init_elig = task.args[14], task.args[17]
+    with enable_x64():
+        fn = jax.jit(jax.vmap(
+            lambda Pp, keys, cap, elig: init_offload_jax(
+                jnp.where(elig, Pp.sum(axis=1), 0.0), keys, cap) & elig))
+        return np.asarray(fn(jnp.asarray(P_pred), jnp.asarray(job_keys),
+                             jnp.asarray(capacity), jnp.asarray(init_elig)))
+
+
+# most recent paged run's page/retry counts (observability hook for the
+# streaming tests and the throughput bench; not part of the result API)
+_LAST_PAGE_STATS: Dict[str, int] = {}
+
+
+def _run_paged(task: _Task, I_max: int, include_transfers: bool,
+               init_phase: bool, adaptive: bool, lookahead: bool,
+               chunk: int, n_dev: int) -> Dict[str, np.ndarray]:
+    """Page the job axis through fixed-J compiled executables.
+
+    Jobs are paged in release order (whole tied-release groups per page,
+    page members in ascending canonical job order); each page starts from
+    the previous pages' final per-replica clocks. The decomposition is
+    *checked*, not assumed: if any committed job's queue exit (dispatch
+    or eviction instant, at any stage) lands at or after the next page's
+    first release, the two pages could have co-resided in a stage queue
+    — the page retries at double size (a saturated retry is the
+    monolithic computation, so the fallback is always exact). Pages pad
+    to the ``chunk * 2**k`` family sizes, so the compile cache is keyed
+    on the chunk size, not the total job count. Init offload — a global
+    capacity-prefix rule — resolves host-side over the full job set
+    before any paging.
+    """
+    S, J = task.S, task.J
+    rel = task.release
+    order = np.argsort(rel, kind="stable")
+    rel_sorted = rel[order]
+    off_full = (_host_init_offload(task) if init_phase
+                else np.zeros((S, J), dtype=bool))
+    bufs: Optional[Dict[str, np.ndarray]] = None
+    clocks = task.args[task._IDX_CLOCK0]
+    pos, size = 0, int(chunk)
+    n_pages = n_retries = 0
+    while pos < J:
+        end = min(pos + size, J)
+        # never split a tied-release group across pages: an epoch's jobs
+        # admit together before the sweep in both engines
+        while end < J and rel_sorted[end] == rel_sorted[end - 1]:
+            end += 1
+        idx = np.sort(order[pos:end])
+        n = len(idx)
+        J_fam = int(chunk)
+        while J_fam < n:
+            J_fam *= 2
+        T_next = rel_sorted[end] if end < J else np.inf
+        args = task.page_args(idx, J_fam, off_full[:, idx], clocks)
+        fn = _engine_fn(task.M_pad, I_max, J_fam, task.n_providers,
+                        task.n_segments, include_transfers,
+                        2 if init_phase else 0, adaptive,
+                        task.n_attempts, task.n_windows, task.faulty,
+                        lookahead, n_dev)
+        out = _dispatch(fn, args, S, n_dev)
+        qx = out["qexit"][:, :n, :]
+        with np.errstate(invalid="ignore"):
+            exit_t = np.where(qx < -0.5, -qx - 1.0, qx)
+            unsafe = bool(np.any(exit_t >= T_next))  # NaN compares False
+        if unsafe and end < J:
+            # grow the page to the stream's next quiet point: every job
+            # released before the latest in-page queue exit must share
+            # the page. Strictly increasing (the violating exit is at or
+            # past the next release), and it jumps straight to natural
+            # burst boundaries — a dense stream whose exits overlap all
+            # later releases saturates to the monolithic run in one
+            # retry.
+            t_quiet = float(np.nanmax(exit_t))
+            size = int(np.searchsorted(rel_sorted, t_quiet,
+                                       side="right")) - pos
+            n_retries += 1
+            continue
+        if bufs is None:
+            bufs = {name: np.empty((S, J) + v.shape[2:], dtype=v.dtype)
+                    for name, v in out.items() if name != "clocks"}
+        for name, v in out.items():
+            if name != "clocks":
+                bufs[name][:, idx] = v[:, :n]
+        clocks = out["clocks"]
+        pos, size = end, int(chunk)
+        n_pages += 1
+    assert bufs is not None
+    # observability (tests / bench reporting): pages committed + safety
+    # retries of the most recent paged run
+    _LAST_PAGE_STATS.update(pages=n_pages, retries=n_retries)
+    return bufs
+
+
+def _run_task(task: _Task, I_max: int, include_transfers: bool,
+              init_phase: bool, adaptive: bool, lookahead: bool = False,
+              chunk_jobs: Optional[int] = None) -> VectorSimResult:
+    """Run one task's scenario grid through the engine, sharding the
+    scenario axis over host devices when available. ``chunk_jobs`` pages
+    the job axis (``None`` / a batch workload / small J = monolithic)."""
+    S = task.S
+    n_dev = jax.local_device_count() if S > 1 else 1
+    chunked = (chunk_jobs is not None and task.release is not None
+               and int(chunk_jobs) < task.J)
+    if chunked:
+        out = _run_paged(task, I_max, include_transfers, init_phase,
+                         adaptive, lookahead, int(chunk_jobs), n_dev)
+    else:
+        fn = _engine_fn(task.M_pad, I_max, task.J, task.n_providers,
+                        task.n_segments, include_transfers,
+                        1 if init_phase else 0, adaptive,
+                        task.n_attempts, task.n_windows, task.faulty,
+                        lookahead, n_dev)
+        out = _dispatch(fn, task.args, S, n_dev)
+    return task.pack(_finalize(task, out))
 
 
 def simulate_scenarios(
@@ -1228,6 +1453,9 @@ def simulate_scenarios(
     faults=None,
     retry=None,
     init_window: Optional[float] = None,
+    chunk_jobs: Optional[int] = None,
+    egress_lookahead: bool = False,
+    workload=None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
@@ -1272,9 +1500,30 @@ def simulate_scenarios(
     the DES replays failures via retry heap events. ``init_window``
     restricts init-phase offloading to jobs released within that many
     seconds of ``t0`` (``None`` = all jobs, the pre-window behavior).
+
+    ``chunk_jobs`` turns the job axis into a *paged* dimension: the
+    vector engine runs arrival windows of at most that many jobs per
+    fixed-J compiled executable (carrying per-replica clocks between
+    pages, with a queue-overlap safety check that falls back to larger
+    pages), and the DES admits arrival epochs into its heap one window
+    at a time — results are identical to the monolithic path on
+    tie-free streams. ``egress_lookahead`` adds a one-edge downstream
+    egress term to the placement argmin (predicted successor-edge
+    volume x the candidate provider's egress rate), identically in both
+    engines. ``workload`` is a :mod:`.workloads` spec (e.g.
+    ``"azure:day=tue,scale=1e5"``) deriving ``pred``/``act`` and the
+    release stream from the committed Azure-calibrated trace sample —
+    pass ``pred=None`` with it.
     """
     from .simulator import _with_transfer_defaults, simulate
+    from .workloads import resolve_workload
 
+    if workload is not None:
+        if pred is not None:
+            raise ValueError("pass either pred or workload=, not both")
+        pred, act, wl_release = resolve_workload(workload, dag, t0)
+        if arrivals is None:
+            arrivals = wl_release
     if engine == "des":
         act_d = act if act is not None else pred
         _validate_workload_axes(pred, act_d)
@@ -1318,7 +1567,8 @@ def simulate_scenarios(
                          portfolio=trace_cfgs[tr], arrivals=release,
                          replica_slowdown=slow[g],
                          faults=fault_cfgs[f], retry=retry_eff,
-                         init_window=init_window)
+                         init_window=init_window, chunk_jobs=chunk_jobs,
+                         egress_lookahead=egress_lookahead)
                 for (b, o, c, r, g, tr, f) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
@@ -1356,7 +1606,8 @@ def simulate_scenarios(
               faults=faults)],
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
-        portfolio=portfolio, retry=retry, init_window=init_window)[0]
+        portfolio=portfolio, retry=retry, init_window=init_window,
+        chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead)[0]
 
 
 def sweep_scenarios(
@@ -1370,6 +1621,8 @@ def sweep_scenarios(
     portfolio: Optional[ProviderPortfolio] = None,
     retry=None,
     init_window: Optional[float] = None,
+    chunk_jobs: Optional[int] = None,
+    egress_lookahead: bool = False,
 ) -> List[VectorSimResult]:
     """Run several scenario grids — e.g. a whole Fig.-4 figure, one task per
     application — as one batched, device-parallel sweep.
@@ -1405,7 +1658,7 @@ def sweep_scenarios(
     """
     if engine == "des":
         return [simulate_scenarios(
-            t["dag"], t["pred"], t.get("act"),
+            t["dag"], t.get("pred"), t.get("act"),
             t.get("c_max_grid", (60.0,)), t.get("orders", ("spt",)),
             cost_model=cost_model, include_transfers=include_transfers,
             init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des",
@@ -1413,7 +1666,9 @@ def sweep_scenarios(
             replicas=t.get("replicas"),
             replica_speeds=t.get("replica_speeds"),
             price_traces=t.get("price_traces"),
-            faults=t.get("faults"), retry=retry, init_window=init_window)
+            faults=t.get("faults"), retry=retry, init_window=init_window,
+            chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
+            workload=t.get("workload"))
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -1421,6 +1676,8 @@ def sweep_scenarios(
         # the engine sign-encodes eviction times as -t - 1, so the clock
         # must stay non-negative (the DES has no such restriction)
         raise ValueError("engine='vector' requires t0 >= 0")
+    if chunk_jobs is not None and int(chunk_jobs) < 1:
+        raise ValueError(f"chunk_jobs must be >= 1, got {chunk_jobs}")
 
     M_pad = max(t["dag"].num_stages for t in tasks)
     # normalize each task's replica and price-trace axes once (validates
@@ -1432,6 +1689,15 @@ def sweep_scenarios(
     any_faulty = any(t.get("faults") is not None for t in tasks)
     retry_eff = (retry or RetryPolicy()) if any_faulty else retry
     for i, t in enumerate(tasks):
+        if t.get("workload") is not None:
+            from .workloads import resolve_workload
+            if t.get("pred") is not None:
+                raise ValueError(
+                    f"tasks[{i}]: pass either pred or workload=, not both")
+            t["pred"], t["act"], wl_release = resolve_workload(
+                t["workload"], t["dag"], t0)
+            if t.get("arrivals") is None:
+                t["arrivals"] = wl_release
         if t.get("replicas") is not None:
             t["replicas"] = _norm_replica_axis(t["replicas"], t["dag"],
                                                where=f"tasks[{i}]")
@@ -1494,6 +1760,8 @@ def sweep_scenarios(
                 abandoned=np.zeros((p.S, 0), dtype=bool),
                 fault_idx=p.fault_out.copy()))
         else:
-            results.append(_run_task(p, I_max, bool(include_transfers),
-                                     bool(init_phase), bool(adaptive)))
+            results.append(_run_task(
+                p, I_max, bool(include_transfers), bool(init_phase),
+                bool(adaptive), lookahead=bool(egress_lookahead),
+                chunk_jobs=None if chunk_jobs is None else int(chunk_jobs)))
     return results

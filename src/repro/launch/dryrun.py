@@ -135,9 +135,12 @@ def _lower_and_compile(cfg: ModelConfig, shape: ShapeSpec, mesh,
     """Build the real step for one cell and compile it under the mesh."""
     rules = ShardingRules(cfg, mesh, fold_model=fold_model,
                           moe_token_gather=moe_token_gather, w2d=w2d)
+    # scan_serving: the dry run needs the scanned (O(1)-HLO) body — the
+    # loop-trip cost correction below assumes the while-loop counts one
+    # super-block, and unrolled 100+-layer decode graphs compile slowly
     model = Model(cfg, shard=MeshSharder(rules), use_pallas=False,
                   remat=remat, loss_chunk=loss_chunk_for(cfg, mesh),
-                  moe_dispatch=moe_dispatch)
+                  moe_dispatch=moe_dispatch, scan_serving=True)
     with mesh:
         key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
         params_spec = jax.eval_shape(model.init, key_spec)
@@ -195,6 +198,8 @@ def _lower_and_compile(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
 def _cost_coll(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax >= 0.4.30: one dict per device
+        ca = ca[0] if ca else {}
     out = {"flops": float(ca.get("flops", 0.0)),
            "bytes accessed": float(ca.get("bytes accessed", 0.0))}
     out.update(collective_bytes(compiled.as_text()))

@@ -1,9 +1,11 @@
 """Decoder-only / encoder-decoder LM assembly for all 10 architectures.
 
 Layers are grouped into *super-blocks* of ``cfg.block_pattern`` period and
-scanned (lax.scan) so HLO size is O(1) in depth — heterogeneous stacks
-(RecurrentGemma's rglru/rglru/attn) scan over the period, with any
-remainder layers unrolled.
+scanned (lax.scan) in train mode so HLO size is O(1) in depth —
+heterogeneous stacks (RecurrentGemma's rglru/rglru/attn) scan over the
+period, with any remainder layers unrolled. Serving modes unroll the
+super-block loop by default so incremental decode is bit-exact against
+the full forward (see ``Model.scan_serving``).
 
 Modes:
   train   — full-sequence forward, chunked softmax-CE loss (the [B,S,V]
@@ -230,6 +232,15 @@ class Model:
     remat: bool = True
     loss_chunk: int = 512
     moe_dispatch: str = "einsum"      # einsum | scatter (see moe.py)
+    # Serving modes (prefill/decode) unroll the super-block loop by
+    # default: inside a compiled scan body XLA may keep bf16
+    # intermediates in fp32 (excess precision), and it elides different
+    # casts in the S-token prefill body than in the 1-token decode body
+    # — so prefill(S)+decode would drift ~1 ulp from prefill(S+1).
+    # Unrolled, every op boundary materializes in the storage dtype and
+    # the two paths are bit-exact. Set True to keep the O(1)-HLO scan
+    # (dry-run cost analysis, very deep stacks).
+    scan_serving: bool = False
 
     # ---- init ----
     def init(self, key: jax.Array) -> Params:
@@ -335,15 +346,27 @@ class Model:
             scan_params = params["scan_layers"]
             scan_caches = caches["scan"] if caches else None
 
-            def body(carry, xs):
-                slot_params, slot_caches = xs
-                y, new_c = sb(carry, slot_params, slot_caches)
-                return y, new_c
+            if mode == "train" or self.scan_serving:
+                def body(carry, xs):
+                    slot_params, slot_caches = xs
+                    y, new_c = sb(carry, slot_params, slot_caches)
+                    return y, new_c
 
-            xs = (scan_params, scan_caches)
-            if scan_caches is None:
-                xs = (scan_params, None)
-            x, scan_cache_new = jax.lax.scan(body, x, xs)
+                xs = (scan_params, scan_caches)
+                if scan_caches is None:
+                    xs = (scan_params, None)
+                x, scan_cache_new = jax.lax.scan(body, x, xs)
+            else:
+                # unrolled serving: same stacked cache layout as the scan
+                per_block = []
+                for bi in range(n_super):
+                    bp = jax.tree_util.tree_map(lambda a: a[bi], scan_params)
+                    bc = None if scan_caches is None else \
+                        jax.tree_util.tree_map(lambda a: a[bi], scan_caches)
+                    x, new_c = sb(x, bp, bc)
+                    per_block.append(new_c)
+                scan_cache_new = jax.tree_util.tree_map(
+                    lambda *cs: jnp.stack(cs), *per_block)
             new_cache_out["scan"] = scan_cache_new
         rest_new = []
         for i, lp in enumerate(params["rest_layers"]):

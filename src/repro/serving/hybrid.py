@@ -708,7 +708,10 @@ class HybridServingScheduler:
                      mode: str = "hybrid",
                      faults=None, retry=None,
                      init_offload: bool = False,
-                     replica_step_times=None) -> OnlineReport:
+                     replica_step_times=None,
+                     workload=None,
+                     chunk_jobs: Optional[int] = None,
+                     egress_lookahead: bool = True) -> OnlineReport:
         """Continuous serving: requests arrive over time, each with an SLA.
 
         ``arrivals`` is any :mod:`repro.core.arrivals` stream (process,
@@ -755,12 +758,38 @@ class HybridServingScheduler:
         replicas enter the simulation slowed by their measured factor,
         so queues on straggling replicas grow and the ACD sweep routes
         around them.
+
+        Scale-out: ``workload`` (a :mod:`repro.core.workloads` spec like
+        ``"azure:day=tue,scale=1e5"``) replaces ``arrivals`` with the
+        trace-derived release stream — its ``scale`` must equal the
+        request count, the durations still come from the serving perf
+        model. ``chunk_jobs`` pages the job axis through streaming
+        chunks in either engine (the rolling-horizon replan grid and
+        the page boundaries compose: pages follow release order, replan
+        windows quantize the releases). ``egress_lookahead`` (default
+        on — the placement-myopia fix) makes every offload's argmin
+        charge the candidate provider's own egress against the
+        request's downstream edges, so multi-provider serving stops
+        parking fat intermediate results on cheap-compute/expensive-
+        egress providers; with a single provider the term is
+        argmin-neutral, leaving solo serving byte-identical.
         """
         from ..training.fault import straggler_slowdowns
 
         prompt_len = np.asarray(prompt_len)
         J = prompt_len.shape[0]
         pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
+        if workload is not None:
+            if arrivals is not None:
+                raise ValueError("pass either arrivals or workload=, "
+                                 "not both")
+            from ..core.workloads import parse_workload, resolve_workload
+            wl = parse_workload(workload)
+            if int(wl.scale) != J:
+                raise ValueError(
+                    f"workload scale ({int(wl.scale)}) must match the "
+                    f"request count ({J})")
+            _, _, arrivals = resolve_workload(wl, self.dag, 0.0)
         release = resolve_release(arrivals, J, 0.0)
         if release is None:
             release = np.zeros(J)
@@ -773,7 +802,8 @@ class HybridServingScheduler:
         kw = dict(order=order, cost_model=self.cost_model,
                   portfolio=self.portfolio, arrivals=admitted,
                   engine=engine, faults=faults, retry=retry,
-                  replica_slowdown=slow or None)
+                  replica_slowdown=slow or None, chunk_jobs=chunk_jobs,
+                  egress_lookahead=egress_lookahead)
         if mode == "hybrid":
             res = simulate(self.dag, pred, act, c_max=sla_s,
                            init_phase=bool(init_offload),

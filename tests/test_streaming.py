@@ -1,0 +1,277 @@
+"""Streaming/paged job axis: chunked == monolithic, DES == vector.
+
+The paged path must be *indistinguishable* from the monolithic one: the
+vector engine pages jobs through fixed-shape chunks (per-replica clocks
+carried across pages, safety-checked decomposition with doubling
+fallback) and the DES admits arrival epochs in windows — neither may
+change a single field of the result. The suite pins:
+
+* chunked vs monolithic bit-exactness on the vector engine
+  (``chunk_jobs`` in {J, J/2, 17}), every SimResult field including
+  provider/segment/replica/attempts, with multi-page execution actually
+  exercised (page-stats hook);
+* DES windowed admission bit-exact vs the monolithic DES, and
+  DES == vector at every chunk size tested;
+* the paged path under the full scenario stack (portfolio, price
+  traces, faults, init offload);
+* the ``azure:`` workload family: spec parsing, determinism,
+  day-of-week variation, end-to-end equivalence through both engines;
+* the ``egress_lookahead`` placement term: engines agree, solo
+  portfolios are invariant, and it flips the "myopic portfolio loses
+  to solo" regime;
+* a hypothesis property: total cost and makespan are invariant to the
+  chunk size.
+"""
+import numpy as np
+import pytest
+
+from repro.core import APPS, AppDAG, Stage, simulate
+from repro.core import vectorsim
+from repro.core.cost import Provider, ProviderPortfolio
+from repro.core.vectorsim import simulate_scenarios
+from repro.core.workloads import (AzureWorkload, day_counts, parse_workload,
+                                  resolve_workload)
+from tests.test_vectorsim import FIELDS, assert_equivalent, workload
+
+J = 64
+
+
+def burst_workload(dag, J, seed, burst=8, gap=1000.0):
+    """Bursts of ``burst`` jobs separated by ``gap`` seconds — every
+    burst drains long before the next releases, so pages at any chunk
+    size >= burst are provably safe (multi-page execution guaranteed)."""
+    pred, act = workload(dag, J, seed)
+    rng = np.random.default_rng(seed + 77)
+    release = (np.arange(J) // burst) * gap + rng.uniform(0.0, 5.0, J)
+    return pred, act, release
+
+
+def assert_bit_exact(a, b):
+    for fld in FIELDS + ("public_mask",):
+        x = np.nan_to_num(np.asarray(getattr(a, fld), float), nan=-1.0)
+        y = np.nan_to_num(np.asarray(getattr(b, fld), float), nan=-1.0)
+        np.testing.assert_array_equal(x, y, err_msg=f"field {fld}")
+
+
+def run_vec(dag, pred, act, release, chunk, **kw):
+    return simulate_scenarios(
+        dag, pred, act, arrivals=release, chunk_jobs=chunk,
+        engine="vector", **kw)
+
+
+# -- chunked vs monolithic, vector engine -------------------------------
+
+@pytest.mark.parametrize("chunk", [J, J // 2, 17])
+def test_chunked_bit_exact_vs_monolithic(chunk):
+    dag = APPS["image"]
+    pred, act, release = burst_workload(dag, J, seed=3)
+    kw = dict(c_max_grid=(8.0, 40.0), orders=("spt", "hcf"))
+    mono = run_vec(dag, pred, act, release, None, **kw)
+    vectorsim._LAST_PAGE_STATS.clear()
+    paged = run_vec(dag, pred, act, release, chunk, **kw)
+    assert_bit_exact(paged, mono)
+    if chunk < J:
+        assert vectorsim._LAST_PAGE_STATS["pages"] > 1
+
+
+@pytest.mark.parametrize("chunk", [J, J // 2, 17])
+def test_chunked_matches_des(chunk):
+    dag = APPS["image"]
+    pred, act, release = burst_workload(dag, J, seed=5)
+    kw = dict(c_max=20.0, order="spt", arrivals=release, chunk_jobs=chunk)
+    d = simulate(dag, pred, act, engine="des", **kw)
+    v = simulate(dag, pred, act, engine="vector", **kw)
+    assert_equivalent(v, d)
+    # DES windowed admission replays the exact monolithic event order
+    d_mono = simulate(dag, pred, act, c_max=20.0, order="spt",
+                      arrivals=release)
+    assert_bit_exact(d, d_mono)
+
+
+def test_unsafe_pages_fall_back_by_doubling():
+    """A dense stream (every page's work overlaps the next release) must
+    still be exact: the safety check retries at doubled page size."""
+    dag = APPS["image"]
+    pred, act = workload(dag, 32, seed=9)
+    release = np.linspace(0.0, 1.0, 32)  # far denser than the service rate
+    mono = run_vec(dag, pred, act, release, None, c_max_grid=(15.0,))
+    vectorsim._LAST_PAGE_STATS.clear()
+    paged = run_vec(dag, pred, act, release, 4, c_max_grid=(15.0,))
+    assert_bit_exact(paged, mono)
+    assert vectorsim._LAST_PAGE_STATS["retries"] > 0
+
+
+def test_chunked_full_scenario_stack():
+    """Pages carry every axis shipped so far: multi-provider portfolio,
+    fault grids + retry, init offload (the external-mask path)."""
+    from repro.core.cost import demo_portfolio
+    dag = APPS["image"]
+    pred, act, release = burst_workload(dag, 48, seed=11)
+    kw = dict(c_max_grid=(10.0,), orders=("spt",),
+              portfolio=demo_portfolio(3), faults=[0.25], retry=None,
+              init_phase=True, arrivals=release)
+    mono = simulate_scenarios(dag, pred, act, **kw)
+    paged = simulate_scenarios(dag, pred, act, chunk_jobs=16, **kw)
+    assert_bit_exact(paged, mono)
+    # and the DES agrees at the same chunk size
+    d = simulate(dag, pred, act, c_max=10.0, order="spt", faults=0.25,
+                 arrivals=release, chunk_jobs=16, engine="des")
+    v = simulate(dag, pred, act, c_max=10.0, order="spt", faults=0.25,
+                 arrivals=release, chunk_jobs=16, engine="vector")
+    assert_equivalent(v, d)
+
+
+def test_chunk_jobs_validation():
+    dag = APPS["image"]
+    pred, act, release = burst_workload(dag, 16, seed=1)
+    with pytest.raises(ValueError, match="chunk_jobs"):
+        simulate(dag, pred, act, arrivals=release, chunk_jobs=0)
+    with pytest.raises(ValueError, match="chunk_jobs"):
+        simulate_scenarios(dag, pred, act, arrivals=release, chunk_jobs=0)
+
+
+# -- azure workload family ----------------------------------------------
+
+def test_parse_workload_specs():
+    wl = parse_workload("azure:day=tue,scale=1e5,seed=3,noise=0.1")
+    assert wl == AzureWorkload(day="tue", scale=100000, seed=3, noise=0.1)
+    assert parse_workload("azure") == AzureWorkload()
+    assert parse_workload(wl) is wl
+    with pytest.raises(ValueError, match="workload family"):
+        parse_workload("gcp:scale=10")
+    with pytest.raises(ValueError, match="unknown key"):
+        parse_workload("azure:jobs=10")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_workload("azure:day")
+    with pytest.raises(ValueError, match="unknown day"):
+        parse_workload("azure:day=xyz")
+    with pytest.raises(ValueError, match="scale"):
+        parse_workload("azure:scale=0")
+    with pytest.raises(TypeError):
+        parse_workload(42)
+
+
+def test_workload_sampling_properties():
+    dag = APPS["image"]
+    wl = "azure:day=wed,scale=500,horizon=3600"
+    p1, a1, r1 = resolve_workload(wl, dag)
+    p2, a2, r2 = resolve_workload(wl, dag)
+    np.testing.assert_array_equal(r1, r2)          # deterministic
+    np.testing.assert_array_equal(p1["P_private"], p2["P_private"])
+    assert r1.shape == (500,) and p1["P_private"].shape == (500, 3)
+    assert (r1 >= 0).all() and (r1 <= 3600).all()
+    assert len(np.unique(r1)) == 500               # continuous: tie-free
+    assert (a1["P_private"] != p1["P_private"]).any()  # default model error
+    _, act0, _ = resolve_workload("azure:scale=50,noise=0", dag)
+    # different seeds/days resample
+    _, _, r3 = resolve_workload("azure:day=thu,scale=500,horizon=3600", dag)
+    assert not np.array_equal(r1, r3)
+    # weekend dip scales traffic down, same function set
+    assert day_counts(AzureWorkload(day="sat")).sum() \
+        < day_counts(AzureWorkload(day="mon")).sum()
+
+
+def test_workload_excludes_pred():
+    dag = APPS["image"]
+    pred, act = workload(dag, 8, seed=0)
+    with pytest.raises(ValueError, match="not both"):
+        simulate_scenarios(dag, pred, act, workload="azure:scale=8")
+
+
+def test_azure_end_to_end_chunked():
+    dag = APPS["image"]
+    kw = dict(c_max_grid=(30.0,), orders=("spt",),
+              workload="azure:day=tue,scale=300,horizon=600,noise=0")
+    mono = simulate_scenarios(dag, None, engine="vector", **kw)
+    paged = simulate_scenarios(dag, None, engine="vector", chunk_jobs=64,
+                               **kw)
+    assert_bit_exact(paged, mono)
+    des = simulate_scenarios(dag, None, engine="des", chunk_jobs=64, **kw)
+    assert_equivalent(paged.scenario(0), des.scenario(0))
+
+
+# -- egress lookahead ----------------------------------------------------
+
+def lookahead_setup():
+    """Two chains: a->b (public sink, fat edges) and d->e (pinned sink).
+
+    Provider "leaky" has the cheaper compute but a punitive egress rate;
+    "safe" is slightly pricier with free egress. Myopic placement puts
+    stage a on "leaky" (its selection cost ignores where a's fat output
+    must go next) and then pays leaky egress either way at b; lookahead
+    charges the candidate's own egress against a's downstream edge and
+    routes a to "safe" — while stage d (pinned successor: no egress
+    consequence, no lookahead term) still harvests leaky's discount.
+    """
+    dag = AppDAG(
+        "lookahead",
+        (Stage("a", 1), Stage("b", 1), Stage("d", 1),
+         Stage("e", 1, must_private=True)),
+        ((0, 1), (2, 3)))
+    rng = np.random.default_rng(21)
+    Jn, M = 12, 4
+    P_priv = rng.uniform(1.0, 2.0, (Jn, M))
+    pred = dict(P_private=P_priv,
+                P_public=P_priv * rng.uniform(0.9, 1.1, (Jn, M)),
+                upload=np.full((Jn, M), 0.01),
+                download=np.full((Jn, M), 0.5))
+    safe = Provider("safe", usd_per_gb_ms=3e-8, egress_usd_per_gb=0.0)
+    leaky = Provider("leaky", usd_per_gb_ms=2e-8, egress_usd_per_gb=50.0)
+    duo = ProviderPortfolio((safe, leaky))
+    solo = ProviderPortfolio((safe,))
+    return dag, pred, duo, solo
+
+
+@pytest.mark.parametrize("engine", ["des", "vector"])
+def test_lookahead_flips_portfolio_vs_solo(engine):
+    dag, pred, duo, solo = lookahead_setup()
+    # c_max ~ 0: the init phase offloads every job, every unpinned stage
+    def run(pf, look):
+        return simulate(dag, pred, c_max=1e-6, engine=engine, portfolio=pf,
+                        egress_lookahead=look)
+    myopic, aware = run(duo, False), run(duo, True)
+    base = run(solo, False)
+    assert myopic.cost_usd > base.cost_usd      # the pinned losing regime
+    assert aware.cost_usd < base.cost_usd       # lookahead flips it
+    # solo portfolios are argmin-invariant under the lookahead term
+    assert run(solo, True).cost_usd == base.cost_usd
+
+
+def test_lookahead_engines_agree():
+    dag, pred, duo, _ = lookahead_setup()
+    for look in (False, True):
+        d = simulate(dag, pred, c_max=1e-6, engine="des", portfolio=duo,
+                     egress_lookahead=look)
+        v = simulate(dag, pred, c_max=1e-6, engine="vector", portfolio=duo,
+                     egress_lookahead=look)
+        assert_equivalent(v, d)
+    # and on a streamed, chunked run
+    rel = (np.arange(12) // 4) * 500.0
+    d = simulate(dag, pred, c_max=1e-6, engine="des", portfolio=duo,
+                 arrivals=rel, chunk_jobs=4, egress_lookahead=True)
+    v = simulate(dag, pred, c_max=1e-6, engine="vector", portfolio=duo,
+                 arrivals=rel, chunk_jobs=4, egress_lookahead=True)
+    assert_equivalent(v, d)
+
+
+# -- hypothesis: chunk-size invariance ----------------------------------
+
+def test_chunk_size_invariance_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    dag = APPS["image"]
+    Jp = 24
+    pred, act, release = burst_workload(dag, Jp, seed=2, burst=4, gap=400.0)
+    mono = run_vec(dag, pred, act, release, None, c_max_grid=(12.0,))
+
+    @settings(max_examples=8, deadline=None)
+    @given(chunk=st.sampled_from([1, 3, 5, 8, 13, 24]))
+    def prop(chunk):
+        paged = run_vec(dag, pred, act, release, chunk, c_max_grid=(12.0,))
+        assert float(np.asarray(paged.cost_usd).sum()) \
+            == float(np.asarray(mono.cost_usd).sum())
+        assert float(np.asarray(paged.makespan).max()) \
+            == float(np.asarray(mono.makespan).max())
+
+    prop()

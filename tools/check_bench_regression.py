@@ -38,7 +38,9 @@ def point_key(point: dict) -> str:
     for field, tag in (("providers", "prov"), ("arrivals", "arr"),
                        ("replica_configs", "repl"),
                        ("price_traces", "traces"),
-                       ("fault_rate", "fault")):
+                       ("fault_rate", "fault"),
+                       ("workload", "wl"),
+                       ("chunk_jobs", "chunk")):
         if point.get(field) is not None:
             parts.append(f"{tag}={point[field]}")
     parts.append(f"dl={point.get('deadlines')}")
