@@ -53,6 +53,16 @@ outage windows), so the vector engine unrolls a bounded attempt axis in
 the same device call and the des/vector checksum assertion covers the
 recovery path too. CI's smoke run passes ``--fault-rate 0.3``.
 
+``--coldstart W`` adds a load-dependent-latency point: the same sweep
+with per-provider concurrency caps of 2 slots (dispatch beyond the cap
+queues FIFO and the wait bills) and a cold-start/keep-alive model
+(``W``-second warm-up, keep-alive window of ``2*W``, scale-to-zero
+pools). These are per-call configs shared by every scenario of the
+grid — not new axes — so the grid size is unchanged but every start
+time flows through the congestion machinery; the des/vector checksum
+assertion covers the capped+cold path. The seed DES predates the load
+model and sits it out. CI's smoke run passes ``--coldstart 0.5``.
+
 Emits ``BENCH_scheduler.json`` next to this file (or ``--out``):
 absolute wall times, jobs-scheduled/sec, scenarios/sec, and speedups vs
 the seed baseline at each job count. ``--smoke`` runs a tiny instance and
@@ -133,18 +143,19 @@ def run_serial(tasks, sim_fn, portfolio=None):
 
 
 def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector",
-               retry=None):
+               retry=None, **sweep_kw):
     """Whole-sweep runner: one batched call per app on ``vector``, a
     serial scenario-grid replay on ``des`` (the path that understands the
-    ``replicas=``/``price_traces=``/``faults=`` axes)."""
+    ``replicas=``/``price_traces=``/``faults=`` axes). Per-call sweep
+    configs (``concurrency=``/``coldstart=``) pass through ``sweep_kw``."""
     keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals",
             "replicas", "price_traces", "faults")
     calls = [{k: t[k] for k in keys if t.get(k) is not None} for t in tasks]
     if warm and engine == "vector":  # compile outside the timed region
-        sweep_scenarios(calls, portfolio=portfolio, retry=retry)
+        sweep_scenarios(calls, portfolio=portfolio, retry=retry, **sweep_kw)
     t0 = time.perf_counter()
     outs = sweep_scenarios(calls, portfolio=portfolio, engine=engine,
-                           retry=retry)
+                           retry=retry, **sweep_kw)
     dt = time.perf_counter() - t0
     chk = float(sum(o.makespan.sum() + o.cost_usd.sum() for o in outs))
     return dt, chk, sum(o.num_scenarios for o in outs)
@@ -269,7 +280,7 @@ def measure_azure_point(J: int, engines, chunk_jobs: int = 4096,
 
 def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                   arrivals=None, replica_sweep=None, price_traces=None,
-                  fault_rate=None):
+                  fault_rate=None, coldstart=None):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
@@ -286,6 +297,17 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
     retry = None
     if fault_rate is not None:
         tasks, retry = attach_faults(tasks, fault_rate)
+    sweep_kw = {}
+    if coldstart is not None:
+        # per-call load configs (not scenario axes): 2-slot provider
+        # caps + a W-second warm-up with a 2W keep-alive window
+        from repro.core.coldstart import ColdStartModel
+
+        sweep_kw = dict(
+            concurrency=2,
+            coldstart=ColdStartModel(warm_up_s=float(coldstart),
+                                     keep_alive_s=2.0 * float(coldstart),
+                                     scale_to_zero=True))
     point = {"J": J, "apps": len(tasks), "orders": len(ORDERS),
              "deadlines": len(tasks[0]["c_max_grid"]), "engines": {}}
     if portfolio is not None:
@@ -298,6 +320,8 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
         point["price_traces"] = price_traces
     if fault_rate is not None:
         point["fault_rate"] = fault_rate
+    if coldstart is not None:
+        point["coldstart"] = coldstart
     checks = {}
     for eng in engines:
         if eng == "seed":
@@ -307,16 +331,20 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                 raise ValueError("the frozen seed DES is batch-only")
             if replica_sweep is not None:
                 raise ValueError("the frozen seed DES has no replica axis")
+            if coldstart is not None:
+                raise ValueError("the frozen seed DES has no load model")
             dt, chk, n = run_serial(tasks, simulate_seed)
         elif eng == "des":
             if (replica_sweep is not None or price_traces is not None
-                    or fault_rate is not None):
+                    or fault_rate is not None or coldstart is not None):
                 dt, chk, n = run_vector(tasks, portfolio=portfolio,
-                                        engine="des", retry=retry)
+                                        engine="des", retry=retry,
+                                        **sweep_kw)
             else:
                 dt, chk, n = run_serial(tasks, simulate, portfolio=portfolio)
         else:
-            dt, chk, n = run_vector(tasks, portfolio=portfolio, retry=retry)
+            dt, chk, n = run_vector(tasks, portfolio=portfolio, retry=retry,
+                                    **sweep_kw)
         checks[eng] = chk
         point["engines"][eng] = {
             "wall_s": round(dt, 4),
@@ -365,6 +393,11 @@ def main(argv=None):
                          "seeded chaos scenario (rate-R failures, an "
                          "outage window, mid-stage kills) under a "
                          "3-attempt retry policy (des/vector engines)")
+    ap.add_argument("--coldstart", type=float, default=None, metavar="W",
+                    help="add a load-dependent-latency point: 2-slot "
+                         "provider concurrency caps plus a W-second "
+                         "warm-up / 2W keep-alive cold-start model as "
+                         "per-call configs (des/vector engines)")
     ap.add_argument("--workload", default=None, metavar="FAM",
                     help="add a streaming trace-workload point (currently "
                          "'azure': one paged invocation day, des+vector, "
@@ -418,6 +451,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(64, ("des", "vector"), portfolio=pf,
                               fault_rate=args.fault_rate))
+        if args.coldstart is not None:
+            print(f"smoke: J=64, capped+cold load model "
+                  f"(warm-up {args.coldstart}s), des+vector")
+            report["points"].append(
+                measure_point(64, ("des", "vector"), portfolio=pf,
+                              coldstart=args.coldstart))
         if args.workload:
             if args.workload != "azure":
                 raise SystemExit(f"unknown --workload {args.workload!r} "
@@ -459,6 +498,12 @@ def main(argv=None):
             report["points"].append(
                 measure_point(512, ("des", "vector"), portfolio=pf,
                               fault_rate=args.fault_rate))
+        if args.coldstart is not None:
+            print(f"capped+cold load-model sweep (warm-up "
+                  f"{args.coldstart}s, des/vector only):")
+            report["points"].append(
+                measure_point(512, ("des", "vector"), portfolio=pf,
+                              coldstart=args.coldstart))
         if args.workload:
             if args.workload != "azure":
                 raise SystemExit(f"unknown --workload {args.workload!r} "

@@ -28,6 +28,12 @@ Layout (one module per concern):
     Trace-derived workload families: the ``azure:`` spec samples
     whole invocation days (heavy-tailed durations, diurnal releases)
     from the committed Azure-2019-calibrated extract at any scale.
+``coldstart``
+    Load-dependent latency configs: :class:`ColdStartModel` (warm-up /
+    keep-alive / scale-to-zero), :class:`PoolTrace` (time-varying
+    private pool sizes) and concurrency-cap normalization — the
+    ``concurrency=`` / ``coldstart=`` / ``pool_trace=`` keywords both
+    engines accept.
 ``greedy``
     The vectorized Alg.-1 math: capacity-prefix initialization offload,
     ACD sweeps, provider selection — numpy and jit twins.
@@ -52,6 +58,8 @@ Layout (one module per concern):
 from .arrivals import (ArrivalProcess, BatchArrivals, MMPPArrivals,
                        PoissonArrivals, TraceArrivals, parse_arrivals,
                        resolve_release)
+from .coldstart import (ColdStartModel, PoolTrace, as_coldstart,
+                        as_pool_trace, queue_wait_ewma)
 from .cost import (CostModel, LAMBDA_COST, PriceTrace, Provider,
                    ProviderPortfolio, as_portfolio, demo_portfolio,
                    diurnal_portfolio, lambda_cost, scaled_portfolio,
@@ -81,6 +89,8 @@ __all__ = [
     "ArrivalProcess", "BatchArrivals", "TraceArrivals", "PoissonArrivals",
     "MMPPArrivals", "parse_arrivals", "resolve_release",
     "FaultModel", "RetryPolicy", "as_fault_model",
+    "ColdStartModel", "PoolTrace", "as_coldstart", "as_pool_trace",
+    "queue_wait_ewma",
     "init_offload", "init_offload_jax", "acd_sweep", "acd_sweep_jax",
     "offload_negative_acd", "select_provider", "select_provider_jax", "t_max",
     "MilpResult", "solve_milp", "johnson_makespan", "knapsack_lower_bound",

@@ -208,6 +208,16 @@ class Provider:
     static). ``effective_trace()`` is the single pricing source both
     engines read: a traced provider returns its trace, a static provider a
     1-segment trace of its scalar fields — bit-identical arithmetic.
+
+    ``max_concurrency`` caps how many invocations of one *function*
+    (stage) the provider runs at once — the account-level reserved
+    concurrency of real FaaS platforms, binding per (provider, stage).
+    ``None`` means an unbounded fleet (the pre-congestion model): a
+    dispatch never waits and never finds a cold slot. A capped provider
+    exposes ``max_concurrency`` FIFO slots per stage; dispatch beyond the
+    cap queues, and the queueing delay is billed as occupancy (linear at
+    the segment's $/GB-s rate — a held slot is paid-for capacity, not a
+    quantized execution) and fed into the placement argmin.
     """
 
     name: str
@@ -218,6 +228,16 @@ class Provider:
     min_quantums: float = MIN_QUANTUMS
     max_mem_mb: Optional[float] = None
     trace: Optional[PriceTrace] = None
+    max_concurrency: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_concurrency is not None:
+            mc = int(self.max_concurrency)
+            if mc < 1:
+                raise ValueError(
+                    f"max_concurrency must be >= 1 (or None = unbounded), "
+                    f"got {self.max_concurrency}")
+            object.__setattr__(self, "max_concurrency", mc)
 
     def cost_model(self) -> CostModel:
         """The provider's scalar execution-billing model."""
@@ -275,6 +295,31 @@ class ProviderPortfolio:
         the segmented pipeline reads :meth:`latency_mults_seg` instead)."""
         return np.array([p.latency_mult for p in self.providers],
                         dtype=np.float64)
+
+    @property
+    def concurrency_caps(self) -> np.ndarray:
+        """[P] per-stage concurrency cap of each provider (``+inf`` for an
+        unbounded fleet). Float so capped/uncapped batch into one array;
+        the engines compare ``np.isfinite`` to pick the queued path."""
+        return np.array([np.inf if p.max_concurrency is None
+                         else float(p.max_concurrency)
+                         for p in self.providers], dtype=np.float64)
+
+    def np_occupancy_rates_seg(self, mem_mb: np.ndarray,
+                               num_segments: Optional[int] = None
+                               ) -> np.ndarray:
+        """[P, S, M] $/second of *held* capacity per (provider, segment,
+        stage): ``usd_per_gb_ms * 1e3 * mem_mb / 1024``.
+
+        This is the linear (un-quantized) rate that prices queueing delay
+        and cold-start warm-up: a slot waiting for or warming a function
+        is paid-for occupancy, not a rounded execution, so no quantum
+        applies. Shared float64 numpy so the DES argmin term, the vector
+        engine's data array and the billed totals are byte-identical.
+        """
+        mem = np.asarray(mem_mb, dtype=np.float64)
+        rates = np.stack([r for (_, r, _, _) in self._seg(num_segments)])
+        return rates[:, :, None] * 1e3 * (mem[None, None, :] / 1024.0)
 
     # -- time-dependent pricing (segment-indexed data) ---------------------
 

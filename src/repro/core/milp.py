@@ -37,6 +37,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
+from .coldstart import as_pool_trace
 from .cost import CostModel, LAMBDA_COST, ProviderPortfolio, as_portfolio
 from .dag import AppDAG
 
@@ -66,6 +67,9 @@ def solve_milp(
     time_limit_s: float = 120.0,
     mip_rel_gap: float = 1e-3,
     portfolio: Optional[ProviderPortfolio] = None,
+    concurrency=None,
+    coldstart=None,
+    pool_trace=None,
 ) -> MilpResult:
     """Build and solve the appendix MILP, provider- and segment-indexed.
 
@@ -79,7 +83,23 @@ def solve_milp(
     the offload epoch, i.e. before upload), so the bound stays valid for
     every executable schedule; a static portfolio has one segment per
     provider and the rows vanish.
+
+    Load-dependent latency (``concurrency``/``coldstart``/``pool_trace``,
+    the :mod:`.coldstart` configs of the simulators) is accepted for API
+    symmetry but **relaxed away**: the MILP models every public provider
+    as uncapped (no FIFO queueing delay) and every replica as always
+    warm (no warm-up penalty) — both effects only *add* time and billed
+    cost to an executable schedule, so dropping them keeps the optimum a
+    valid lower bound, with a gap that grows with congestion. A
+    ``pool_trace`` provisions the pod at the trace's per-stage *maximum*
+    for the whole horizon (strictly more private capacity than any
+    executable schedule ever has), the same relaxation direction.
     """
+    ptr = as_pool_trace(pool_trace)
+    if ptr is not None:
+        dag = dag.with_replicas(
+            ptr.materialize(dag.num_stages).max(axis=0))
+    del concurrency, coldstart  # relaxed away (see docstring)
     P_priv = np.asarray(P_private, dtype=np.float64)
     P_pub = np.asarray(P_public, dtype=np.float64)
     J, M = P_priv.shape

@@ -152,6 +152,9 @@ class SkedulixScheduler:
         workload=None,
         chunk_jobs: Optional[int] = None,
         egress_lookahead: bool = False,
+        concurrency=None,
+        coldstart=None,
+        pool_trace=None,
         **sim_kwargs,
     ) -> VectorSimResult:
         """Run Alg. 1 over the whole ``orders x c_max_grid`` scenario grid.
@@ -185,6 +188,13 @@ class SkedulixScheduler:
         to the monolithic path — the scale knob for ``1e5``..``1e6``-job
         days); ``egress_lookahead`` adds the one-edge downstream-egress
         recourse term to the placement argmin.
+
+        ``concurrency``/``coldstart``/``pool_trace`` switch on the
+        load-dependent latency model (per-provider concurrency caps with
+        FIFO queueing, keep-alive/cold-start warm-up penalties, and
+        piecewise-constant private pool sizes); they are per-call
+        configs shared by every scenario of the grid, not new axes —
+        see :mod:`.coldstart`.
         """
         if pred is None and workload is None:
             pred = self.predict(base_features)
@@ -195,7 +205,8 @@ class SkedulixScheduler:
             replica_speeds=replica_speeds, price_traces=price_traces,
             faults=faults, retry=retry, workload=workload,
             chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
-            **sim_kwargs)
+            concurrency=concurrency, coldstart=coldstart,
+            pool_trace=pool_trace, **sim_kwargs)
 
     def baseline_all_public(self, pred, act=None,
                             arrivals: ArrivalsLike = None) -> SimResult:

@@ -61,6 +61,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .arrivals import ArrivalsLike, resolve_release
+from .coldstart import (ColdStartLike, ColdStartModel, ConcurrencyLike,
+                        PoolTraceLike, as_coldstart, as_pool_trace,
+                        norm_concurrency, validate_load_kwargs)
 from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST,
                    ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
@@ -111,6 +114,8 @@ class SimResult:
     attempts: Optional[np.ndarray] = None  # [J, M] int: public attempts made
     failed: Optional[np.ndarray] = None    # [J, M] int: failed public attempts
     abandoned: Optional[np.ndarray] = None  # [J] bool: recovery was impossible
+    queue_wait: Optional[np.ndarray] = None  # [J, M] capped-slot FIFO wait (s)
+    cold: Optional[np.ndarray] = None      # [J, M] bool: paid a cold start
 
     @property
     def offload_fraction(self) -> float:
@@ -162,7 +167,10 @@ class _Sim:
                  retry: Optional[RetryPolicy] = None,
                  init_window: Optional[float] = None,
                  chunk_jobs: Optional[int] = None,
-                 egress_lookahead: bool = False):
+                 egress_lookahead: bool = False,
+                 caps: Optional[np.ndarray] = None,
+                 coldstart: Optional[ColdStartModel] = None,
+                 pool: Optional[Tuple[np.ndarray, np.ndarray]] = None):
         self.dag = dag
         self.J, self.M = pred["P_private"].shape
         self.pred = pred
@@ -229,8 +237,10 @@ class _Sim:
         # upstream providers (and so the egress penalty) are known.
         # Retry re-placement masks providers per attempt, so the fault
         # layer always resolves placement at the attempt epoch too.
+        # concurrency caps need the segmented [P, S] matrices too: the
+        # occupancy term re-prices providers at every offload epoch
         self._static_prices = (pf.is_static and pf.num_providers == 1
-                               and not self._faulty)
+                               and not self._faulty and caps is None)
         down_pred = pred["download"] if include_transfers else None
         down_act = act["download"] if include_transfers else None
         sinkm = dag.is_sink if include_transfers else None
@@ -339,6 +349,52 @@ class _Sim:
         self.attempts = np.zeros((self.J, self.M), dtype=np.int64)
         self.failed = np.zeros((self.J, self.M), dtype=np.int64)
         self.abandoned = np.zeros(self.J, dtype=bool)
+        self.queue_wait = np.zeros((self.J, self.M))
+        self.coldarr = np.zeros((self.J, self.M), dtype=bool)
+
+        # load-dependent latency state (.coldstart): per-(stage, provider)
+        # FIFO slot pools under concurrency caps, per-replica/slot idle
+        # timestamps under a cold-start model, per-slot availability
+        # windows under a pool trace. All gated so degenerate configs run
+        # the verbatim pre-change code above.
+        self._caps = caps
+        self._capped = caps is not None
+        self._cs = coldstart
+        self._pool = pool
+        if self._capped or self._cs is not None:
+            # $/s of held capacity per (provider, segment, stage): prices
+            # queueing delay and warm-up into the argmin and the bill
+            self._occ_psm = pf.np_occupancy_rates_seg(mem)     # [P, S, M]
+        if self._cs is not None:
+            self._wu_pub = self._cs.provider_warm_ups(pf.num_providers)
+            self._wu_priv = self._cs.warm_up_s
+            self._ka = self._cs.keep_alive_s
+            s2z = self._cs.scale_to_zero
+        if self._capped:
+            self._slotc: Dict[Tuple[int, int], np.ndarray] = {}
+            self._slot_idle: Dict[Tuple[int, int], np.ndarray] = {}
+            idle0 = -np.inf if (self._cs is not None
+                                and self._cs.scale_to_zero) else float(t0)
+            for k in range(self.M):
+                for p in range(pf.num_providers):
+                    if np.isfinite(caps[p]):
+                        c = int(caps[p])
+                        self._slotc[(k, p)] = np.full(c, float(t0))
+                        self._slot_idle[(k, p)] = np.full(c, idle0)
+        if self._cs is not None:
+            # private replicas: idle-since timestamps (turn-on instant for
+            # late pool slots, -inf under scale-to-zero)
+            self._idle_priv = []
+            for k in range(self.M):
+                n_k = len(self.free_replicas[k])
+                if s2z:
+                    self._idle_priv.append(np.full(n_k, -np.inf))
+                elif pool is not None:
+                    self._idle_priv.append(
+                        np.maximum(float(t0), pool[0][k][:n_k]).astype(
+                            np.float64))
+                else:
+                    self._idle_priv.append(np.full(n_k, float(t0)))
         self._heap: List[Tuple[float, int, Callable, tuple]] = []
         self._seq = itertools.count()
 
@@ -377,7 +433,8 @@ class _Sim:
             replica=self.replica.astype(np.int64),
             segment=self.segment.astype(np.int64),
             attempts=attempts, failed=self.failed.copy(),
-            abandoned=self.abandoned.copy())
+            abandoned=self.abandoned.copy(),
+            queue_wait=self.queue_wait.copy(), cold=self.coldarr.copy())
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
@@ -397,6 +454,22 @@ class _Sim:
         else:
             off = np.zeros(self.J, dtype=bool)
         self.n_init_off = int(off.sum())
+        if self._pool is not None:
+            # pool-trace turn-ons: slots not yet active at t0 leave the
+            # free pool and re-enter via heap events at their turn-on
+            # instants (the vector engine's clock0 = max(t0, on) twin);
+            # turn-offs are checked lazily at dispatch time
+            on_w = self._pool[0]
+            for k in range(self.M):
+                late = [r for r in self.free_replicas[k]
+                        if on_w[k][r] > self.t0]
+                if late:
+                    drop = set(late)
+                    self.free_replicas[k] = [
+                        r for r in self.free_replicas[k] if r not in drop]
+                    for r in late:
+                        self._at(float(on_w[k][r]), self._pool_on_event,
+                                 k, r)
         pinned = self.dag.must_private_mask
         self.forced_public[off[:, None] & ~pinned[None, :]] = True
         # the t0 batch keeps the seed's direct path (enqueue all, then one
@@ -501,34 +574,70 @@ class _Sim:
         # the deterministic tie-break shared with the vector engine, which
         # makes the replica *assignment* (not just timings) engine-exact
         free = self.free_replicas[k]
-        while free and q:
-            _, j = q.pop(0)
-            r = free.pop(0)
-            self._start_private(t, j, k, r)
+        if self._pool is not None:
+            # lazy slot retirement: a slot whose window closed stops
+            # accepting work (it drains gracefully — a running job keeps
+            # its completion event) and is dropped from the pool for good
+            off_k = self._pool[1][k]
+            while free and q:
+                r = free[0]
+                if t >= off_k[r]:
+                    free.pop(0)
+                    continue
+                _, j = q.pop(0)
+                free.pop(0)
+                self._start_private(t, j, k, r)
+        else:
+            while free and q:
+                _, j = q.pop(0)
+                r = free.pop(0)
+                self._start_private(t, j, k, r)
 
     # -- private execution ----------------------------------------------
     def _start_private(self, t: float, j: int, k: int, r: int):
         self.status[j, k] = RUNNING
         self.loc[j, k] = PRIVATE
         self.replica[j, k] = r
-        self.start[j, k] = t
+        start = t
+        if self._cs is not None:
+            # cold start: the replica was idle longer than the keep-alive
+            # window (or never used, under scale-to-zero) — the warm-up
+            # penalty is additive, not scaled by straggler slowdowns
+            idle = self._idle_priv[k][r]
+            if t - idle > self._ka or idle == -np.inf:
+                self.coldarr[j, k] = True
+                start = t + self._wu_priv
+        self.start[j, k] = start
         dur = self._act_priv[j][k]
         if self.replica_slowdown:
             dur *= self.replica_slowdown.get((k, r), 1.0)
-        self._at(t + dur, self._private_done, j, k, r)
+        self._at(start + dur, self._private_done, j, k, r)
 
     def _private_done(self, t: float, j: int, k: int, r: int):
         self.status[j, k] = DONE
         self.end[j, k] = t
+        if self._cs is not None:
+            self._idle_priv[k][r] = t
         # sorted re-insert keeps the lowest-index-free dispatch rule exact
         bisect.insort(self.free_replicas[k], r)
         self._propagate_done(t, j, k)
+        self._on_queue_change(t, k)
+
+    def _pool_on_event(self, t: float, k: int, r: int):
+        """Pool-trace slot turn-on: join the pool, re-run the sweep."""
+        bisect.insort(self.free_replicas[k], r)
         self._on_queue_change(t, k)
 
     # -- public execution -------------------------------------------------
     def _offload_now(self, t: float, j: int, k: int):
         """Job j evicted from queue k: stage k + all descendants go public
         (privacy-pinned stages excepted, constraint (12))."""
+        # the vector engine carries eviction instants sign-encoded as
+        # -t - 1 inside its queue state; the encode/decode roundtrip can
+        # shave one ulp when t + 1 crosses a binade, so the offload epoch
+        # here passes through the identical (idempotent) expression —
+        # both engines then price and start the eviction at the same float
+        t = -(-t - 1.0) - 1.0
         self.forced_public[j, k] = True
         for d in self._desc[k]:
             if not self._pinned[d]:
@@ -572,10 +681,83 @@ class _Sim:
                         selc = selc + egc * self._down_gb_pred[j][k]
         return selc, segs
 
+    def _start_public_capped(self, t: float, j: int, k: int):
+        """Offload epoch under concurrency caps.
+
+        Each capped provider exposes ``cap`` FIFO slots for stage k (one
+        function's reserved concurrency); the dispatch would take the
+        earliest-free slot (lowest index on ties), waiting
+        ``max(0, slot_clock - ready)`` if all are busy, plus the
+        provider's warm-up when that slot has been idle past the
+        keep-alive window. Both delays are priced as occupancy (the
+        segment's $/GB-s rate times the stage's memory) and added to the
+        candidate's selection cost, so a congested or cold provider
+        prices itself out of the argmin; the chosen provider's wait and
+        warm-up then also delay the start and join the bill. Uncapped
+        providers model an unbounded warm fleet: zero wait, never cold.
+        """
+        selc, segs = self._selc_at(t, j, k)
+        pf = self.portfolio
+        P = pf.num_providers
+        lm = self._lat_seg[self._iota_P, segs]                 # [P]
+        up_raw = 0.0
+        if self.include_transfers:
+            preds = self._pred_l[k]
+            loc_j = self.loc[j]
+            if (not preds) or any(loc_j[p] == PRIVATE for p in preds):
+                up_raw = self._act_up_raw[j][k]
+        ready = t + up_raw * lm                                # [P]
+        wait = np.zeros(P)
+        cold = np.zeros(P, dtype=bool)
+        slot = np.zeros(P, dtype=np.int64)
+        for p in range(P):
+            sc = self._slotc.get((k, p))
+            if sc is None:
+                continue  # unbounded fleet: always a warm slot free
+            s_i = int(np.argmin(sc))
+            slot[p] = s_i
+            wait[p] = max(0.0, sc[s_i] - ready[p])
+            if self._cs is not None:
+                idle = self._slot_idle[(k, p)][s_i]
+                cold[p] = (ready[p] + wait[p] - idle > self._ka
+                           or idle == -np.inf)
+        wu = self._wu_pub if self._cs is not None else np.zeros(P)
+        occ = self._occ_psm[self._iota_P, segs, k]             # [P]
+        prov = int(np.argmin(selc + occ * (wait + cold * wu)))
+        seg = int(segs[prov])
+        self.loc[j, k] = prov
+        self.segment[j, k] = seg
+        self.n_offloaded += 1
+        self.per_stage_offloads[k] += 1
+        if self.include_transfers:
+            loc_j = self.loc[j]
+            for u in self._pred_topo[k]:
+                lu = loc_j[u]
+                if lu >= 0 and lu != prov:
+                    self.cost += (self._egress_seg[lu, self.segment[j, u]]
+                                  * self._down_gb[j][u])
+        start = ready[prov] + wait[prov] + cold[prov] * wu[prov]
+        end = start + self._act_pub_raw[j][k] * lm[prov]
+        self.start[j, k] = start
+        self.queue_wait[j, k] = wait[prov]
+        if cold[prov]:
+            self.coldarr[j, k] = True
+        self.cost += (self._cost_pst[prov, seg, j, k]
+                      + occ[prov] * (wait[prov] + cold[prov] * wu[prov]))
+        sc = self._slotc.get((k, prov))
+        if sc is not None:
+            sc[slot[prov]] = end
+            if self._cs is not None:
+                self._slot_idle[(k, prov)][slot[prov]] = end
+        self._at(end, self._public_done, j, k)
+
     def _start_public(self, t: float, j: int, k: int):
         self.status[j, k] = RUNNING
         if self._faulty:
             self._start_public_faulty(t, j, k)
+            return
+        if self._capped:
+            self._start_public_capped(t, j, k)
             return
         if self._static_prices:
             prov = self._prov_l[j][k]
@@ -798,6 +980,9 @@ def simulate(
     init_window: Optional[float] = None,
     chunk_jobs: Optional[int] = None,
     egress_lookahead: bool = False,
+    concurrency: ConcurrencyLike = None,
+    coldstart: ColdStartLike = None,
+    pool_trace: PoolTraceLike = None,
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
@@ -842,6 +1027,20 @@ def simulate(
     this and falls back to larger pages otherwise). ``egress_lookahead``
     adds a one-edge downstream-egress recourse term to the placement
     argmin (see ``_Sim._selc_at``), identically in both engines.
+
+    Load-dependent latency (:mod:`.coldstart`, both engines, identical
+    results): ``concurrency`` caps a provider's parallelism per stage
+    (``None`` reads the providers' own ``max_concurrency``; an int, a
+    per-provider list, or a name/index override dict) — dispatch beyond
+    the cap queues FIFO, and the queueing delay enters the placement
+    argmin and the bill as occupancy; ``coldstart`` (a
+    :class:`~.coldstart.ColdStartModel`, kwargs dict, or bare warm-up
+    float) makes the first dispatch to a replica/slot idle past the
+    keep-alive window pay a warm-up penalty; ``pool_trace`` (a
+    :class:`~.coldstart.PoolTrace`) scales the private pool mid-horizon.
+    Degenerate configs (uncapped, zero penalty, constant pool) are
+    bit-exact vs the pre-change path. Not combinable with ``faults``,
+    ``chunk_jobs``, or (for ``pool_trace``) a ``replicas`` axis.
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
@@ -851,6 +1050,24 @@ def simulate(
     if faults is not None:
         retry = retry if retry is not None else RetryPolicy()
         fault_model = as_fault_model(faults, *pred["P_private"].shape, retry)
+    # load-dependent latency config (shared normalization/validation so
+    # both engines accept and reject inputs identically)
+    caps_vec = norm_concurrency(concurrency, as_portfolio(portfolio,
+                                                          cost_model))
+    caps = caps_vec if np.isfinite(caps_vec).any() else None
+    cs = as_coldstart(coldstart)
+    ptr = as_pool_trace(pool_trace)
+    validate_load_kwargs(caps is not None, cs, ptr,
+                         faulty=fault_model is not None,
+                         chunk_jobs=chunk_jobs)
+    pool = None
+    if ptr is not None:
+        # the provisioned pool is the trace's per-stage max: ACD slack,
+        # t_max capacity and replica identities all see the max counts,
+        # and the slot windows mask availability inside them
+        on_w, off_w, _ = ptr.slot_windows(dag.num_stages)
+        dag = dag.with_replicas(ptr.materialize(dag.num_stages).max(axis=0))
+        pool = (on_w, off_w)
     if replica_slowdown:
         # shared validator (same errors as the vector engine's speeds
         # axis): both engines reject bad factors/stages identically
@@ -868,7 +1085,9 @@ def simulate(
             else [replica_slowdown],
             faults=None if fault_model is None else [fault_model],
             retry=retry, init_window=init_window,
-            chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead)
+            chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
+            concurrency=concurrency, coldstart=coldstart,
+            pool_trace=pool_trace)
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")
@@ -876,7 +1095,8 @@ def simulate(
                init_phase, adaptive, t0, replica_slowdown, portfolio,
                release=release, faults=fault_model, retry=retry,
                init_window=init_window, chunk_jobs=chunk_jobs,
-               egress_lookahead=egress_lookahead)
+               egress_lookahead=egress_lookahead,
+               caps=caps, coldstart=cs, pool=pool)
     return sim.run()
 
 

@@ -93,6 +93,9 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from .arrivals import ArrivalsLike, resolve_release
+from .coldstart import (ColdStartLike, ConcurrencyLike, PoolTraceLike,
+                        as_coldstart, as_pool_trace, norm_concurrency,
+                        validate_load_kwargs)
 from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST, PriceTrace,
                    Provider, ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
@@ -133,6 +136,8 @@ class VectorSimResult:
     failed: Optional[np.ndarray] = None    # [S, J, M] int: failed attempts
     abandoned: Optional[np.ndarray] = None  # [S, J] bool: recovery impossible
     fault_idx: Optional[np.ndarray] = None  # [S] index into the faults axis
+    queue_wait: Optional[np.ndarray] = None  # [S, J, M] capped-slot FIFO wait
+    cold: Optional[np.ndarray] = None       # [S, J, M] bool: paid a cold start
 
     @property
     def num_scenarios(self) -> int:
@@ -161,14 +166,18 @@ class VectorSimResult:
             segment=None if self.segment is None else self.segment[s],
             attempts=None if self.attempts is None else self.attempts[s],
             failed=None if self.failed is None else self.failed[s],
-            abandoned=None if self.abandoned is None else self.abandoned[s])
+            abandoned=None if self.abandoned is None else self.abandoned[s],
+            queue_wait=None if self.queue_wait is None
+            else self.queue_wait[s],
+            cold=None if self.cold is None else self.cold[s])
 
 
 @functools.lru_cache(maxsize=None)
 def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                   include_transfers: bool, init_mode: int, adaptive: bool,
                   A_att: int = 0, W: int = 0, faulty: bool = False,
-                  lookahead: bool = False):
+                  lookahead: bool = False, capped: bool = False,
+                  cold: bool = False, pooled: bool = False, C: int = 0):
     """Trace the stage-decomposed event loop for one (stage count, replica
     bound, job count, provider count, price-segment count, flags) shape
     family. DAG structure arrives as data: ``A``/``desc`` are [M, M]
@@ -197,11 +206,28 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
     downstream stages of an abandoned job never become eligible. The
     degenerate chain (zero fault grid) reuses the fault-free expressions
     term-for-term, so it is bit-exact vs the ``faulty=False`` engine.
+
+    ``capped``/``cold``/``pooled`` grow the graph with load-dependent
+    latency (:mod:`.coldstart`): ``capped`` adds per-(provider, stage)
+    FIFO slot pools of width ``C`` — public dispatches replay
+    sequentially in the DES's chronological event order, each pricing
+    its queueing delay (and warm-up, under ``cold``) into the placement
+    argmin and the bill as occupancy $/s; ``cold`` threads per-replica
+    idle timestamps through the private event loop (a dispatch after an
+    idle gap longer than the keep-alive window pays the warm-up
+    additively, *not* scaled by straggler slowdowns); ``pooled`` masks
+    replica availability by per-slot [on, off) windows while keeping
+    retired-slot completions as sweep time points (the DES's
+    ``_private_done`` events still fire for draining slots). All three
+    are build flags: a degenerate config compiles the pre-change graph,
+    so uncapped / zero-penalty / constant-pool runs stay bit-exact.
     """
+    loaded = capped or cold or pooled
     iota_J = jnp.arange(J)
 
     def run_stage(k, a, forced_k, elig, speed_k, clock0_k, acd_k, P_k,
-                  rem_k, dur_k, keys_k, deadline, t0):
+                  rem_k, dur_k, keys_k, deadline, t0,
+                  off_k=None, csd=None):
         """Run stage k's event loop given per-job arrival times ``a`` [J].
 
         ``deadline`` is the per-job absolute deadline [J] (release + C_max;
@@ -239,7 +265,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
         slack_c = I_k * dl_q  # hoisted per-job term of the ACD slack
 
         def cond(c):
-            t, ap, exited, svr, times, rep, clean, it = c
+            t, ap, exited, svr = c[0], c[1], c[2], c[3]
+            it = c[7]
             return ((ap < n_arr) | ((arr_rank < ap) & ~exited).any()) \
                 & (it < 4 * J + 16)
 
@@ -257,7 +284,10 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             # -t - 1; run_stage requires t0 >= 0) and a sentinel-index
             # scatter (J + mode="drop" = no-op) commits the conditional
             # write without a full-width select.
-            t, ap, exited, svr, times, rep, clean, it = c
+            if cold:
+                t, ap, exited, svr, times, rep, clean, it, idle, coldq = c
+            else:
+                t, ap, exited, svr, times, rep, clean, it = c
             arrived = arr_rank < ap
             q = arrived & ~exited
             nq = q.any()
@@ -267,7 +297,16 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             t_arr = arr_t[ap]
             mins = jnp.min(svr)
             next_comp = jnp.min(jnp.where(svr > t, svr, jnp.inf))
-            td = jnp.where(nq, jnp.where(mins <= t, t, next_comp), jnp.inf)
+            if pooled:
+                # a free-but-retired slot (window closed) offers no
+                # dispatch *opportunity*, but retired-slot completions
+                # stay in next_comp: the DES's drain events still sweep
+                free_t = (svr <= t) & (t < off_k)
+                td = jnp.where(nq, jnp.where(free_t.any(), t, next_comp),
+                               jnp.inf)
+            else:
+                td = jnp.where(nq, jnp.where(mins <= t, t, next_comp),
+                               jnp.inf)
             advance = clean & ~done
             is_arr = advance & (t_arr <= td)
             t_new = jnp.where(advance, jnp.minimum(t_arr, td), t)
@@ -297,14 +336,36 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             # DES shares; mutually exclusive with eviction: one queue exit).
             # A dispatched stage runs dur * speed of the chosen replica —
             # straggler factors bind at dispatch, exactly as in the DES.
-            do_disp = ~has_viol & ~done & (nq | is_arr) & (mins <= t_new)
-            sidx = jnp.argmax(svr <= t_new)  # absent slots are never free
+            if pooled:
+                free_new = (svr <= t_new) & (t_new < off_k)
+                do_disp = ~has_viol & ~done & (nq | is_arr) & free_new.any()
+                sidx = jnp.argmax(free_new)  # lowest live free slot
+            else:
+                do_disp = ~has_viol & ~done & (nq | is_arr) & (mins <= t_new)
+                sidx = jnp.argmax(svr <= t_new)  # absent slots: never free
             exit_idx = jnp.where(has_viol | do_disp, pos_x, J)
             exited = exited.at[exit_idx].set(True, mode="drop")
             times = times.at[exit_idx].set(
                 jnp.where(has_viol, -t_new - 1.0, t_new), mode="drop")
             rep = rep.at[jnp.where(do_disp, pos_x, J)].set(
                 sidx.astype(rep.dtype), mode="drop")
+            if cold:
+                # cold start: the slot sat idle past the keep-alive window
+                # (or was never used, under scale-to-zero). The warm-up is
+                # additive — never scaled by the replica's slowdown — and
+                # the slot frees at warm-up + scaled duration, exactly the
+                # DES's `start + dur` completion event.
+                wu_priv, ka, s2z = csd
+                is_cold = do_disp & ((t_new - idle[sidx] > ka)
+                                     | jnp.isneginf(idle[sidx]))
+                wu_eff = jnp.where(is_cold, wu_priv, 0.0)
+                svr_new = (t_new + wu_eff) + dur_q[pos_x] * speed_k[sidx]
+                coldq = coldq.at[jnp.where(do_disp, pos_x, J)].set(
+                    is_cold, mode="drop")
+                idle = jnp.where(do_disp, idle.at[sidx].set(svr_new), idle)
+                svr = jnp.where(do_disp, svr.at[sidx].set(svr_new), svr)
+                return (t_new, ap, exited, svr, times, rep, ~has_viol,
+                        it + 1, idle, coldq)
             svr = jnp.where(do_disp,
                             svr.at[sidx].set(
                                 t_new + dur_q[pos_x] * speed_k[sidx]), svr)
@@ -315,10 +376,17 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                  svr0, jnp.full((J,), jnp.nan),
                  jnp.full((J,), -1, jnp.int32),
                  jnp.zeros((), bool), jnp.zeros((), jnp.int32))
+        if cold:
+            # idle-since per slot: the turn-on instant (clock0 covers late
+            # pool slots), -inf = never used under scale-to-zero
+            idle0 = jnp.where(csd[2] > 0.5,
+                              jnp.full_like(clock0_k, -jnp.inf), clock0_k)
+            carry = carry + (idle0, jnp.zeros((J,), bool))
         carry = jax.lax.while_loop(cond, body, carry)
-        _, _, _, svr, times, rep, _, _ = carry
+        svr, times, rep = carry[3], carry[4], carry[5]
+        coldq = carry[9][inv] if cold else jnp.zeros((J,), bool)
         # back to job coordinates
-        return times[inv], rep[inv], svr
+        return times[inv], rep[inv], svr, coldq
 
     def run_one(P_pred, act_priv, pub_a, up_a, down_a, dgb_pred, cost_ps,
                 sel_ps, lat_ps, eg_ps, edges_ps,
@@ -329,6 +397,14 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             # scenario fault data: [J, M, A_att] failure draws + backoff
             # delays, [P, W, 2] outage windows, and scalar knobs
             fail_g, delay_g, outw, kill_frac, okill, fb_on = fault_args
+        elif loaded:
+            # load data (faults x load is rejected upstream, so *fault_args
+            # carries exactly one of the two families): [P] concurrency
+            # caps (inf = unbounded), [P, S, M] occupancy $/s, [P] public
+            # warm-ups, (warm_up, keep_alive, scale_to_zero) scalars, and
+            # [M, I_max] pool turn-off instants
+            caps_v, occ_psm, wu_pub, cs3, off_pool = fault_args
+            csd = (cs3[0], cs3[1], cs3[2])
         # per-stage critical-path remainder (reverse index order = reverse
         # topological order; edges go low -> high)
         rem_l: List[Optional[jax.Array]] = [None] * M
@@ -367,6 +443,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
         failc_l: List[Optional[jax.Array]] = [None] * M
         qexit_l: List[Optional[jax.Array]] = [None] * M
         clocks_l: List[Optional[jax.Array]] = [None] * M
+        qwait_l: List[Optional[jax.Array]] = [None] * M
+        coldm_l: List[Optional[jax.Array]] = [None] * M
         ab_j = jnp.zeros(J, dtype=bool)
         # per-job accumulators (host-side canonical-order reductions make
         # monolithic and paged runs bit-identical)
@@ -393,10 +471,12 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                 # dead jobs (abandoned upstream) never enter a queue
                 elig = elig & jnp.isfinite(a)
             acd_k = ~pinned[k]
-            times_j, rep_j, svr_k = run_stage(
+            times_j, rep_j, svr_k, coldq = run_stage(
                 k, a, forced_k, elig, speed[k], clock0[k], acd_k,
                 P_pred[:, k], rem_l[k], act_priv[:, k], stage_keys[:, k],
-                deadline, t0)
+                deadline, t0,
+                off_k=off_pool[k] if pooled else None,
+                csd=csd if cold else None)
             qexit_l[k] = times_j
             clocks_l[k] = svr_k
             evicted = times_j < -0.5  # NaN (never exited) compares False
@@ -449,6 +529,128 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                             eg_cand * dgb_pred[:, k][None, :], 0.0)
                 return s, seg_pj
 
+            if not faulty and capped:
+                # ---- concurrency caps: sequential slot scan ------------
+                # Public dispatches of stage k replay in the DES's
+                # chronological event order — offload epoch first, forced
+                # jobs (arrival-event order = ascending job id) before
+                # evicted jobs (queue rank) on ties — each taking every
+                # provider's earliest-free FIFO slot, pricing its wait
+                # (+ warm-up, under ``cold``) into the argmin as
+                # occupancy $/s, then advancing the chosen provider's
+                # slot clock: ``_start_public_capped`` expression for
+                # expression. Slot pools are per (provider, stage), so
+                # the scan state never crosses stages.
+                selc, seg_pj = placement_at(tau)
+                lm_pj = jnp.take_along_axis(lat_ps, seg_pj, axis=1)
+                occ_pj = jnp.take_along_axis(occ_psm[:, :, k], seg_pj,
+                                             axis=1)          # [P, J]
+                if include_transfers:
+                    needs_up = jnp.zeros(J, dtype=bool)
+                    for u in range(k):
+                        needs_up = needs_up | (A[u, k] & ~loc_l[u])
+                    has_pred = A[:k, k].any() if k else jnp.asarray(False)
+                    needs_up = jnp.where(has_pred, needs_up, True)
+                    up_raw = jnp.where(needs_up, up_a[:, k], 0.0)
+                else:
+                    up_raw = jnp.zeros(J)
+                ready_pj = tau[None, :] + up_raw[None, :] * lm_pj
+                dur_pj = pub_a[:, k][None, :] * lm_pj
+                capped_p = jnp.isfinite(caps_v)
+                wu_p = wu_pub if cold else jnp.zeros(P)
+                qrank = jnp.argsort(jnp.argsort(stage_keys[:, k],
+                                                stable=True), stable=True)
+                order_j = jnp.lexsort((
+                    jnp.where(forced_k, iota_J, qrank),
+                    jnp.where(forced_k, 0, 1),
+                    jnp.where(locpub, tau, jnp.inf)))
+                present = capped_p[:, None] & (jnp.arange(C)
+                                               < caps_v[:, None])
+                sclk0 = jnp.where(present, t0, jnp.inf)
+                if cold:
+                    sidle0 = jnp.where(
+                        present,
+                        jnp.where(csd[2] > 0.5, -jnp.inf, t0), jnp.inf)
+                else:
+                    sidle0 = sclk0
+
+                def slot_step(i, c):
+                    (sclk, sidle, prov_o, seg_o, wait_o, cold_o,
+                     start_o, end_o, extra_o) = c
+                    j = order_j[i]
+                    pub = locpub[j]
+                    ready_p = ready_pj[:, j]
+                    si = jnp.argmin(sclk, axis=1)             # [P]
+                    sc_sel = sclk[iota_P, si]
+                    wait_p = jnp.where(
+                        capped_p, jnp.maximum(0.0, sc_sel - ready_p), 0.0)
+                    if cold:
+                        idle_sel = sidle[iota_P, si]
+                        cold_p = capped_p & (
+                            (ready_p + wait_p - idle_sel > csd[1])
+                            | jnp.isneginf(idle_sel))
+                    else:
+                        cold_p = jnp.zeros(P, dtype=bool)
+                    pen = occ_pj[:, j] * (wait_p + cold_p * wu_p)
+                    prov = jnp.argmin(selc[:, j] + pen)
+                    start = (ready_p[prov] + wait_p[prov]
+                             + cold_p[prov] * wu_p[prov])
+                    end = start + dur_pj[prov, j]
+                    tgt = jnp.where(pub, j, J)
+                    prov_o = prov_o.at[tgt].set(
+                        prov.astype(prov_o.dtype), mode="drop")
+                    seg_o = seg_o.at[tgt].set(
+                        seg_pj[prov, j].astype(seg_o.dtype), mode="drop")
+                    wait_o = wait_o.at[tgt].set(wait_p[prov], mode="drop")
+                    cold_o = cold_o.at[tgt].set(cold_p[prov], mode="drop")
+                    start_o = start_o.at[tgt].set(start, mode="drop")
+                    end_o = end_o.at[tgt].set(end, mode="drop")
+                    extra_o = extra_o.at[tgt].set(pen[prov], mode="drop")
+                    upd = pub & capped_p[prov]
+                    sclk = jnp.where(
+                        upd, sclk.at[prov, si[prov]].set(end), sclk)
+                    sidle = jnp.where(
+                        upd, sidle.at[prov, si[prov]].set(end), sidle)
+                    return (sclk, sidle, prov_o, seg_o, wait_o, cold_o,
+                            start_o, end_o, extra_o)
+
+                (_, _, pidx_k, seg_k, wait_f, coldpub_f, start_pub,
+                 end_pub, extra_f) = jax.lax.fori_loop(
+                    0, J, slot_step,
+                    (sclk0, sidle0,
+                     jnp.zeros(J, jnp.int64), jnp.zeros(J, jnp.int64),
+                     jnp.zeros(J), jnp.zeros(J, bool),
+                     jnp.zeros(J), jnp.zeros(J), jnp.zeros(J)))
+                lm = lat_ps[pidx_k, seg_k]                    # [J]
+                # billed + occupancy extra add as one value per (job,
+                # stage) — the single float the DES adds to its total
+                cost_l[k] = cost_ps[pidx_k, seg_k, iota_J, k] + extra_f
+                down_l[k] = down_a[:, k] * lm
+                prov_l[k] = pidx_k
+                seg_l[k] = seg_k
+                if include_transfers:
+                    for u in range(k):
+                        moved = (A[u, k] & loc_l[u] & locpub
+                                 & (prov_l[u] != pidx_k))
+                        rate_u = eg_ps[prov_l[u], seg_l[u]]
+                        xeg_j = xeg_j + jnp.where(
+                            moved,
+                            rate_u * (down_a[:, u] * EGRESS_GB_PER_S),
+                            0.0)
+                if cold:
+                    start_priv = times_j + coldq * csd[0]
+                else:
+                    start_priv = times_j
+                start = jnp.where(locpub, start_pub, start_priv)
+                priv_dur = act_priv[:, k] * speed[k][jnp.maximum(rep_j, 0)]
+                end = jnp.where(locpub, end_pub, start_priv + priv_dur)
+                start_l[k], end_l[k] = start, end
+                loc_l[k], evict_l[k] = locpub, evicted
+                rep_l[k] = jnp.where(locpub, -1, rep_j)
+                qwait_l[k] = wait_f
+                coldm_l[k] = coldpub_f | coldq
+                continue
+
             if not faulty:
                 selc, seg_pj = placement_at(tau)
                 pidx_k = jnp.argmin(selc, axis=0)             # [J]
@@ -480,7 +682,15 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                     upk = jnp.where(needs_up, up_a[:, k] * lm, 0.0)
                 else:
                     upk = jnp.zeros(J)
-                start = jnp.where(locpub, tau + upk, times_j)
+                if cold:
+                    # uncapped public = unbounded warm fleet (never cold);
+                    # private dispatches pay the warm-up recorded by the
+                    # event loop (additive: t + 0.0 == t keeps the
+                    # zero-penalty graph bit-exact)
+                    start_priv = times_j + coldq * csd[0]
+                else:
+                    start_priv = times_j
+                start = jnp.where(locpub, tau + upk, start_priv)
                 # private durations run on the *assigned* replica's speed
                 # (the loop body already advanced the clock by the scaled
                 # duration)
@@ -489,6 +699,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                 start_l[k], end_l[k] = start, end
                 loc_l[k], evict_l[k] = locpub, evicted
                 rep_l[k] = jnp.where(locpub, -1, rep_j)
+                qwait_l[k] = jnp.zeros(J)
+                coldm_l[k] = coldq
                 continue
 
             # ---- fault layer: unrolled attempt chain -------------------
@@ -636,6 +848,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
             rep_l[k] = jnp.where(locpub, -1, rep_j)
             att_l[k] = att_cnt
             failc_l[k] = fail_cnt
+            qwait_l[k] = jnp.zeros(J)
+            coldm_l[k] = jnp.zeros(J, dtype=bool)
 
         start = jnp.stack(start_l, axis=1)
         end = jnp.stack(end_l, axis=1)
@@ -660,6 +874,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
         # former drives the page-safety check, the latter is the carry.
         qexit = jnp.stack(qexit_l, axis=1)
         clocks = jnp.stack(clocks_l, axis=0)
+        qwait = jnp.stack(qwait_l, axis=1)
+        coldm = jnp.stack(coldm_l, axis=1)
         if not faulty:
             cost_j = jnp.sum(jnp.where(locpub, cost_m, 0.0), axis=1) + xeg_j
             return dict(cost_j=cost_j, init_off=off,
@@ -671,7 +887,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                         segment=jnp.where(locpub, seg_m, -1),
                         attempts=locpub.astype(jnp.int64),
                         failed=jnp.zeros((J, M), dtype=jnp.int64),
-                        abandoned=jnp.zeros(J, dtype=bool))
+                        abandoned=jnp.zeros(J, dtype=bool),
+                        queue_wait=qwait, cold=coldm)
         # abandoned jobs never complete: NaN completion, NaN stage ends
         ok_j = ~ab_j
         completion_out = jnp.where(ok_j, completion, jnp.nan)
@@ -687,7 +904,8 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
                     segment=jnp.where(locpub, seg_m, -1),
                     attempts=jnp.stack(att_l, axis=1),
                     failed=jnp.stack(failc_l, axis=1),
-                    abandoned=ab_j)
+                    abandoned=ab_j,
+                    queue_wait=qwait, cold=coldm)
 
     return run_one
 
@@ -696,11 +914,13 @@ def _build_engine(M: int, I_max: int, J: int, P: int, S: int,
 def _engine_fn(M: int, I_max: int, J: int, P: int, S: int,
                include_transfers: bool, init_mode: int, adaptive: bool,
                A_att: int, W: int, faulty: bool, lookahead: bool,
+               capped: bool, cold: bool, pooled: bool, C: int,
                n_dev: int):
     """jit(vmap) on one device; pmap(vmap) sharding the scenario axis
     across host devices when more are available."""
     run_one = _build_engine(M, I_max, J, P, S, include_transfers, init_mode,
-                            adaptive, A_att, W, faulty, lookahead)
+                            adaptive, A_att, W, faulty, lookahead,
+                            capped, cold, pooled, C)
     if n_dev > 1:
         return jax.pmap(jax.vmap(run_one))
     return jax.jit(jax.vmap(run_one))
@@ -940,6 +1160,7 @@ class _Task:
                  price_traces=None, S_seg: Optional[int] = None,
                  faults=None, retry=None, init_window=None,
                  A_att: int = 0, W: int = 0,
+                 caps=None, coldstart=None, pool=None,
                  where: str = ""):
         from .simulator import _with_transfer_defaults
 
@@ -1128,6 +1349,61 @@ class _Task:
             out[:, :, :M] = v[:, :, topo]
             return out
 
+        # load-dependent latency (concurrency caps / cold starts / pool
+        # traces) as engine data: per-call configs, not grid axes —
+        # shared by every scenario, with occupancy rates per price trace.
+        # Mutually exclusive with the fault axis (validated upstream), so
+        # the engine's trailing *args carry exactly one family.
+        self.capped = caps is not None
+        self.cold = coldstart is not None
+        self.pooled = pool is not None
+        self.loaded = self.capped or self.cold or self.pooled
+        caps_eff = (np.asarray(caps, dtype=np.float64) if self.capped
+                    else np.full(self.n_providers, np.inf))
+        self.C = (int(caps_eff[np.isfinite(caps_eff)].max())
+                  if self.capped else 0)
+        clock0 = np.full((S, M_pad, self.I_max), self.t0)
+        load_args: Tuple[np.ndarray, ...] = ()
+        if self.loaded:
+            occ_by_tr = [tpf.np_occupancy_rates_seg(mem, num_segments=S_seg)
+                         for tpf in trace_cfgs]       # [P, S_seg, M] each
+
+            def pad_occ(o):
+                out = np.zeros(o.shape[:2] + (M_pad,))
+                out[:, :, :M] = o[:, :, topo]
+                return out
+
+            occ_s = np.stack([pad_occ(occ_by_tr[tr])
+                              for (_, _, _, _, _, tr, _) in self.grid])
+            cs = coldstart
+            wu_p = (cs.provider_warm_ups(self.n_providers)
+                    if self.cold else np.zeros(self.n_providers))
+            cs3 = np.array([cs.warm_up_s if self.cold else 0.0,
+                            cs.keep_alive_s if self.cold else np.inf,
+                            1.0 if (self.cold and cs.scale_to_zero)
+                            else 0.0])
+            off_pad = np.full((M_pad, self.I_max), np.inf)
+            if self.pooled:
+                on_w, off_w = pool
+                w = off_w.shape[1]
+                off_pad[:M, :w] = off_w[topo, :]
+                # late pool slots enter busy until their turn-on instant
+                # (the DES's _pool_on_event twin); never-on slots are
+                # absent from the speed matrix anyway
+                clk = np.full((M_pad, self.I_max), self.t0)
+                with np.errstate(invalid="ignore"):
+                    clk[:M, :w] = np.where(
+                        np.isfinite(on_w[topo, :]),
+                        np.maximum(self.t0, on_w[topo, :]), self.t0)
+                clock0 = np.broadcast_to(
+                    clk, (S, M_pad, self.I_max)).copy()
+            load_args = (
+                np.broadcast_to(caps_eff, (S, self.n_providers)),
+                occ_s,
+                np.broadcast_to(wu_p, (S, self.n_providers)),
+                np.broadcast_to(cs3, (S, 3)),
+                np.broadcast_to(off_pad, (S, M_pad, self.I_max)))
+
         fault_args: Tuple[np.ndarray, ...] = ()
         if self.faulty:
             rt = retry if retry is not None else RetryPolicy()
@@ -1175,8 +1451,8 @@ class _Task:
                 np.broadcast_to(pinned, (S,) + pinned.shape),
                 np.broadcast_to(inert, (S,) + inert.shape),
                 speed,
-                np.full((S, M_pad, self.I_max), self.t0),   # clock0
-            ) + fault_args)
+                clock0,
+            ) + load_args + fault_args)
 
     # engine-arg positions carrying a job axis (position -> axis), for the
     # job pager; fault args (fail/delay grids) follow at _N_BASE_ARGS
@@ -1251,7 +1527,9 @@ class _Task:
             attempts=out["attempts"][:, :, inv],
             failed=out["failed"][:, :, inv],
             abandoned=out["abandoned"],
-            fault_idx=self.fault_out.copy())
+            fault_idx=self.fault_out.copy(),
+            queue_wait=out["queue_wait"][:, :, inv],
+            cold=out["cold"][:, :, inv])
 
 
 def _dispatch(fn, args, S: int, n_dev: int) -> Dict[str, np.ndarray]:
@@ -1375,7 +1653,8 @@ def _run_paged(task: _Task, I_max: int, include_transfers: bool,
                         task.n_segments, include_transfers,
                         2 if init_phase else 0, adaptive,
                         task.n_attempts, task.n_windows, task.faulty,
-                        lookahead, n_dev)
+                        lookahead, task.capped, task.cold, task.pooled,
+                        task.C, n_dev)
         out = _dispatch(fn, args, S, n_dev)
         qx = out["qexit"][:, :n, :]
         with np.errstate(invalid="ignore"):
@@ -1428,7 +1707,8 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
                         task.n_segments, include_transfers,
                         1 if init_phase else 0, adaptive,
                         task.n_attempts, task.n_windows, task.faulty,
-                        lookahead, n_dev)
+                        lookahead, task.capped, task.cold, task.pooled,
+                        task.C, n_dev)
         out = _dispatch(fn, task.args, S, n_dev)
     return task.pack(_finalize(task, out))
 
@@ -1456,6 +1736,9 @@ def simulate_scenarios(
     chunk_jobs: Optional[int] = None,
     egress_lookahead: bool = False,
     workload=None,
+    concurrency: ConcurrencyLike = None,
+    coldstart: ColdStartLike = None,
+    pool_trace: PoolTraceLike = None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
@@ -1514,6 +1797,15 @@ def simulate_scenarios(
     ``"azure:day=tue,scale=1e5"``) deriving ``pred``/``act`` and the
     release stream from the committed Azure-calibrated trace sample —
     pass ``pred=None`` with it.
+
+    ``concurrency``/``coldstart``/``pool_trace`` add load-dependent
+    latency (:mod:`.coldstart`) — per-provider concurrency caps with
+    FIFO queueing, a keep-alive/cold-start model, and time-varying
+    private pool sizes. They are per-call configs shared by every
+    scenario of the grid (not grid axes), identical in both engines;
+    degenerate values compile the pre-change graph bit-exactly. They
+    cannot combine with ``faults``, ``chunk_jobs``, or (for
+    ``pool_trace``) a ``replicas`` axis.
     """
     from .simulator import _with_transfer_defaults, simulate
     from .workloads import resolve_workload
@@ -1525,6 +1817,15 @@ def simulate_scenarios(
         if arrivals is None:
             arrivals = wl_release
     if engine == "des":
+        # same load-config validation as the vector path (simulate() also
+        # validates, but the replicas-axis x pool_trace exclusion is only
+        # visible at the grid level)
+        validate_load_kwargs(
+            np.isfinite(norm_concurrency(
+                concurrency, as_portfolio(portfolio, cost_model))).any(),
+            as_coldstart(coldstart), as_pool_trace(pool_trace),
+            faulty=faults is not None, chunk_jobs=chunk_jobs,
+            replicas_axis=replicas is not None)
         act_d = act if act is not None else pred
         _validate_workload_axes(pred, act_d)
         pred_d = _with_transfer_defaults(pred)
@@ -1568,7 +1869,9 @@ def simulate_scenarios(
                          replica_slowdown=slow[g],
                          faults=fault_cfgs[f], retry=retry_eff,
                          init_window=init_window, chunk_jobs=chunk_jobs,
-                         egress_lookahead=egress_lookahead)
+                         egress_lookahead=egress_lookahead,
+                         concurrency=concurrency, coldstart=coldstart,
+                         pool_trace=pool_trace)
                 for (b, o, c, r, g, tr, f) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
@@ -1596,7 +1899,9 @@ def simulate_scenarios(
             attempts=np.stack([r.attempts for r in sims]),
             failed=np.stack([r.failed for r in sims]),
             abandoned=np.stack([r.abandoned for r in sims]),
-            fault_idx=np.array([f for (_, _, _, _, _, _, f) in grid]))
+            fault_idx=np.array([f for (_, _, _, _, _, _, f) in grid]),
+            queue_wait=np.stack([r.queue_wait for r in sims]),
+            cold=np.stack([r.cold for r in sims]))
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
     return sweep_scenarios(
@@ -1607,7 +1912,9 @@ def simulate_scenarios(
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
         portfolio=portfolio, retry=retry, init_window=init_window,
-        chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead)[0]
+        chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
+        concurrency=concurrency, coldstart=coldstart,
+        pool_trace=pool_trace)[0]
 
 
 def sweep_scenarios(
@@ -1623,6 +1930,9 @@ def sweep_scenarios(
     init_window: Optional[float] = None,
     chunk_jobs: Optional[int] = None,
     egress_lookahead: bool = False,
+    concurrency: ConcurrencyLike = None,
+    coldstart: ColdStartLike = None,
+    pool_trace: PoolTraceLike = None,
 ) -> List[VectorSimResult]:
     """Run several scenario grids — e.g. a whole Fig.-4 figure, one task per
     application — as one batched, device-parallel sweep.
@@ -1668,7 +1978,8 @@ def sweep_scenarios(
             price_traces=t.get("price_traces"),
             faults=t.get("faults"), retry=retry, init_window=init_window,
             chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
-            workload=t.get("workload"))
+            workload=t.get("workload"), concurrency=concurrency,
+            coldstart=coldstart, pool_trace=pool_trace)
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -1688,7 +1999,25 @@ def sweep_scenarios(
     base_pf = as_portfolio(portfolio, cost_model)
     any_faulty = any(t.get("faults") is not None for t in tasks)
     retry_eff = (retry or RetryPolicy()) if any_faulty else retry
+    # load-dependent latency configs: per-call, shared by every task of
+    # the sweep (caps bind per provider, which every price trace shares)
+    cs = as_coldstart(coldstart)
+    ptr = as_pool_trace(pool_trace)
+    caps_vec = norm_concurrency(concurrency, base_pf)
+    caps_eff = caps_vec if np.isfinite(caps_vec).any() else None
+    validate_load_kwargs(
+        caps_eff is not None, cs, ptr, faulty=any_faulty,
+        chunk_jobs=chunk_jobs,
+        replicas_axis=any(t.get("replicas") is not None for t in tasks))
     for i, t in enumerate(tasks):
+        if ptr is not None:
+            # provision each task's pool at the trace's per-stage max and
+            # mask availability with the slot windows (the DES path of
+            # simulate() applies the identical transform)
+            on_t, off_t, _ = ptr.slot_windows(t["dag"].num_stages)
+            t["dag"] = t["dag"].with_replicas(
+                ptr.materialize(t["dag"].num_stages).max(axis=0))
+            t["_pool"] = (on_t, off_t)
         if t.get("workload") is not None:
             from .workloads import resolve_workload
             if t.get("pred") is not None:
@@ -1727,6 +2056,7 @@ def sweep_scenarios(
                      price_traces=t["price_traces"], S_seg=S_seg,
                      faults=t.get("faults"), retry=retry_eff,
                      init_window=init_window, A_att=A_att, W=W,
+                     caps=caps_eff, coldstart=cs, pool=t.get("_pool"),
                      where=f"tasks[{i}]")
                for i, t in enumerate(tasks)]
 
@@ -1758,7 +2088,9 @@ def sweep_scenarios(
                 attempts=np.zeros((p.S, 0, p.M), dtype=np.int64),
                 failed=np.zeros((p.S, 0, p.M), dtype=np.int64),
                 abandoned=np.zeros((p.S, 0), dtype=bool),
-                fault_idx=p.fault_out.copy()))
+                fault_idx=p.fault_out.copy(),
+                queue_wait=np.zeros((p.S, 0, p.M)),
+                cold=np.zeros((p.S, 0, p.M), dtype=bool)))
         else:
             results.append(_run_task(
                 p, I_max, bool(include_transfers), bool(init_phase),

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.arrivals import ArrivalsLike, resolve_release
+from ..core.coldstart import queue_wait_ewma
 from ..core.cost import (USD_PER_GB_MS, CostModel, PriceTrace, Provider,
                          ProviderPortfolio)
 from ..core.dag import AppDAG, Stage
@@ -711,7 +712,11 @@ class HybridServingScheduler:
                      replica_step_times=None,
                      workload=None,
                      chunk_jobs: Optional[int] = None,
-                     egress_lookahead: bool = True) -> OnlineReport:
+                     egress_lookahead: bool = True,
+                     concurrency=None,
+                     coldstart=None,
+                     pool_trace=None,
+                     stage_queue_waits=None) -> OnlineReport:
         """Continuous serving: requests arrive over time, each with an SLA.
 
         ``arrivals`` is any :mod:`repro.core.arrivals` stream (process,
@@ -773,6 +778,22 @@ class HybridServingScheduler:
         parking fat intermediate results on cheap-compute/expensive-
         egress providers; with a single provider the term is
         argmin-neutral, leaving solo serving byte-identical.
+
+        Load-dependent serving: ``concurrency``/``coldstart``/
+        ``pool_trace`` switch on the congestion model
+        (:mod:`repro.core.coldstart` — per-provider concurrency caps
+        with FIFO queueing, keep-alive/cold-start warm-up penalties,
+        mid-horizon pod resizing). Because the scheduler's latency
+        *predictions* stay load-independent, a congested elastic pool
+        would otherwise be offloaded to as eagerly as an idle one —
+        ``stage_queue_waits`` closes that loop: a chronological list of
+        per-replan observations (each a length-M vector of mean public
+        queue wait per stage, the telemetry twin of
+        ``replica_step_times``), smoothed by
+        :func:`repro.core.coldstart.queue_wait_ewma` and folded into the
+        predicted public latencies, so the replan priority keys, the ACD
+        eviction slack, and the placement argmin all see the congestion
+        the controller has actually observed.
         """
         from ..training.fault import straggler_slowdowns
 
@@ -799,11 +820,26 @@ class HybridServingScheduler:
             admitted = release.copy()
         slow = (straggler_slowdowns(replica_step_times)
                 if replica_step_times else None)
+        qw = (queue_wait_ewma(stage_queue_waits)
+              if stage_queue_waits is not None else None)
+        if qw is not None:
+            if qw.shape != (self.dag.num_stages,):
+                raise ValueError(
+                    f"stage_queue_waits samples must have length "
+                    f"{self.dag.num_stages}, got shape {qw.shape}")
+            # congestion feedback: observed queue wait inflates the
+            # *predicted* public latencies only — priority keys, ACD
+            # slack, and the placement argmin see the congested pool,
+            # while the actual draws (act) stay the ground truth
+            pred = dict(pred)
+            pred["P_public"] = pred["P_public"] + qw[None, :]
         kw = dict(order=order, cost_model=self.cost_model,
                   portfolio=self.portfolio, arrivals=admitted,
                   engine=engine, faults=faults, retry=retry,
                   replica_slowdown=slow or None, chunk_jobs=chunk_jobs,
-                  egress_lookahead=egress_lookahead)
+                  egress_lookahead=egress_lookahead,
+                  concurrency=concurrency, coldstart=coldstart,
+                  pool_trace=pool_trace)
         if mode == "hybrid":
             res = simulate(self.dag, pred, act, c_max=sla_s,
                            init_phase=bool(init_offload),

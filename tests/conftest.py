@@ -10,6 +10,15 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "equivalence: differential DES==vector parity suites "
+        "(run standalone via -m equivalence)")
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end tests")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,140 @@
+"""Shared scenario vocabulary for the property/differential suites.
+
+The per-file ad-hoc generators of ``test_property.py`` /
+``test_faults.py`` / ``test_pricetrace.py`` extracted into one
+composable module: DAGs, latency workloads, provider portfolios,
+arrival streams, and fault grids are all drawn here, so new suites (the
+cold-start properties) reuse the same distributions instead of growing
+another per-file dialect.
+
+Plain fixture builders at the top import without hypothesis (the
+deterministic suites use them too); the ``st.composite`` strategies are
+defined only when hypothesis is available, mirroring the
+``pytest.importorskip`` gate of the property suites.
+"""
+import numpy as np
+
+from repro.core import APPS
+from repro.core.cost import (USD_PER_GB_MS, PriceTrace, Provider,
+                             ProviderPortfolio)
+from repro.core.dag import AppDAG, Stage, matrix_app
+from repro.core.faults import FaultModel
+
+try:
+    from hypothesis import strategies as st
+except ImportError:          # deterministic suites still import the builders
+    st = None
+
+
+# -- plain fixture builders (no hypothesis needed) -------------------------
+
+def one_stage_dag(replicas=1):
+    """Single-stage app: the minimal congestion/queueing testbed."""
+    return AppDAG("one", (Stage("s", replicas=replicas),), ())
+
+
+def flat_then_double(break_at):
+    """One provider whose rate doubles (and latency halves) at
+    ``t = break_at`` — the decision-epoch pricing fixture."""
+    return ProviderPortfolio((Provider(
+        "p", quantum_ms=100.0,
+        trace=PriceTrace(
+            usd_per_gb_ms=(USD_PER_GB_MS, 2 * USD_PER_GB_MS),
+            egress_usd_per_gb=(0.0, 0.0),
+            latency_mult=(1.0, 0.5),
+            breakpoints=(break_at,))),))
+
+
+def chaos_model(dag, J, seed, rate=0.35, max_attempts=3,
+                outages=((0, 2.0, 6.0), (1, 4.0, 5.0))):
+    """The chaos-suite fault fixture: seeded iid failures + two
+    staggered provider outages + partial-kill billing."""
+    return FaultModel.from_rate(rate, J, dag.num_stages,
+                                max_attempts=max_attempts, seed=seed,
+                                outages=outages, kill_frac=0.6)
+
+
+# -- hypothesis strategies -------------------------------------------------
+
+if st is not None:
+    # bounded positive stage latency, the scalar draw every suite shares
+    latencies = st.floats(min_value=0.5, max_value=50.0)
+
+    # one Lambda-shaped public provider (the ranges the portfolio
+    # properties have always used)
+    providers = st.builds(
+        Provider,
+        name=st.just("p"),
+        quantum_ms=st.sampled_from([1.0, 50.0, 100.0, 1000.0]),
+        usd_per_gb_ms=st.floats(min_value=0.2, max_value=3.0).map(
+            lambda f: f * USD_PER_GB_MS),
+        egress_usd_per_gb=st.floats(min_value=0.0, max_value=0.2),
+        latency_mult=st.floats(min_value=0.5, max_value=2.0),
+    )
+
+    @st.composite
+    def portfolios(draw, min_size=1, max_size=4):
+        """Multi-provider portfolio; names uniqued by position so the
+        validator never rejects a draw."""
+        ps = draw(st.lists(providers, min_size=min_size,
+                           max_size=max_size))
+        ps = [Provider(f"p{i}", p.quantum_ms, p.usd_per_gb_ms,
+                       p.egress_usd_per_gb, p.latency_mult)
+              for i, p in enumerate(ps)]
+        return ProviderPortfolio(tuple(ps))
+
+    @st.composite
+    def scenario_dags(draw, max_replicas=3):
+        """A small app DAG: the canonical apps at drawn pool sizes,
+        plus the single-stage pool."""
+        kind = draw(st.sampled_from(["matrix", "video", "image", "one"]))
+        I = draw(st.integers(min_value=1, max_value=max_replicas))
+        if kind == "one":
+            return one_stage_dag(replicas=I)
+        if kind == "matrix":
+            return matrix_app(replicas=I)
+        return APPS[kind]
+
+    @st.composite
+    def workloads(draw, dag=None, min_jobs=2, max_jobs=12,
+                  transfers=False):
+        """(dag, pred) scenario: seeded uniform private latencies with
+        a drawn public speed ratio (and optional transfer volumes)."""
+        if dag is None:
+            dag = draw(scenario_dags())
+        J = draw(st.integers(min_value=min_jobs, max_value=max_jobs))
+        seed = draw(st.integers(min_value=0, max_value=10**6))
+        speed = draw(st.floats(min_value=0.3, max_value=0.9))
+        rng = np.random.default_rng(seed)
+        M = dag.num_stages
+        P = rng.uniform(0.5, 5.0, (J, M))
+        pred = dict(P_private=P, P_public=P * speed)
+        if transfers:
+            pred["upload"] = rng.uniform(0.05, 0.3, (J, M))
+            pred["download"] = rng.uniform(0.05, 0.3, (J, M))
+        return dag, pred
+
+    @st.composite
+    def arrival_streams(draw, J, horizon=10.0):
+        """[J] sorted release times over ``[0, horizon)`` (seeded draw
+        — continuous, so ties have measure zero and event orders stay
+        engine-exact)."""
+        seed = draw(st.integers(min_value=0, max_value=10**6))
+        rng = np.random.default_rng(seed)
+        return np.sort(rng.uniform(0.0, horizon, int(J)))
+
+    @st.composite
+    def fault_models(draw, J, M, max_attempts=3):
+        """A seeded fault grid: drawn failure rate, attempt budget, and
+        an optional provider-0 outage window."""
+        rate = draw(st.floats(min_value=0.0, max_value=0.5))
+        attempts = draw(st.integers(min_value=1, max_value=max_attempts))
+        seed = draw(st.integers(min_value=0, max_value=10**6))
+        outages = ()
+        if draw(st.booleans()):
+            t_on = draw(st.floats(min_value=0.0, max_value=5.0))
+            width = draw(st.floats(min_value=0.5, max_value=5.0))
+            outages = ((0, t_on, t_on + width),)
+        return FaultModel.from_rate(rate, int(J), int(M),
+                                    max_attempts=attempts, seed=seed,
+                                    outages=outages, kill_frac=0.6)

@@ -1,0 +1,363 @@
+"""Load-dependent latency: concurrency caps, queueing, cold starts.
+
+Queue state is the first *cross-job* coupling in the placement argmin,
+so this suite is differential-first: DES and vector engine must agree
+*exactly* — start/end/queue-wait/cold attribution, provider, replica —
+on concurrency-capped, cold-start, and pool-trace scenarios, and every
+degenerate config (uncapped, zero penalty, constant pool) must be
+bit-exact against the pre-change path. The hypothesis properties pin
+the monotonicity a congestion model owes: raising a cap never increases
+makespan (single-stage/single-provider, where it is a theorem), and
+lengthening keep-alive never increases total cold starts (zero warm-up,
+where the schedule is invariant).
+"""
+import numpy as np
+import pytest
+
+from repro.core import APPS, simulate
+from repro.core.coldstart import (ColdStartModel, PoolTrace,
+                                  queue_wait_ewma, validate_load_kwargs)
+from repro.core.dag import matrix_app
+from repro.core.vectorsim import simulate_scenarios
+from tests.strategies import one_stage_dag
+from tests.test_vectorsim import FIELDS, assert_equivalent
+
+pytestmark = pytest.mark.equivalence
+
+CS = ColdStartModel(warm_up_s=0.5, keep_alive_s=1.0, scale_to_zero=True)
+POOL = PoolTrace(counts=(1, 2), breakpoints=(2.0,))
+
+# the engine-exactness claim: these are computed values, compared to the
+# bit (cost_usd is the one reduction whose *order* differs by design —
+# DES accumulates chronologically, the vector engine sums per job — so
+# it stays under assert_equivalent's 1e-9 like the rest of the suite)
+EXACT_FIELDS = ("makespan", "start", "end", "completion", "queue_wait",
+                "cold", "provider", "replica", "segment", "public_mask")
+
+LOAD_CONFIGS = [
+    pytest.param(dict(concurrency=1), id="capped"),
+    pytest.param(dict(concurrency=2), id="capped2"),
+    pytest.param(dict(coldstart=CS), id="cold"),
+    pytest.param(dict(concurrency=1, coldstart=CS), id="capped+cold"),
+    pytest.param(dict(pool_trace=POOL), id="pool"),
+    pytest.param(dict(pool_trace=POOL, coldstart=CS), id="pool+cold"),
+    pytest.param(dict(pool_trace=POOL, coldstart=CS, concurrency=1),
+                 id="pool+cold+capped"),
+]
+
+
+def congested(dag, J=9, seed=0, horizon=2.0):
+    """A scenario tight enough that caps bind and keep-alive lapses:
+    bursty arrivals, a deadline forcing offloads."""
+    rng = np.random.default_rng(seed)
+    M = dag.num_stages
+    pred = dict(P_private=rng.uniform(0.5, 2.0, (J, M)),
+                P_public=rng.uniform(0.2, 1.5, (J, M)),
+                up_mb=rng.uniform(1.0, 30.0, (J, M)),
+                down_mb=rng.uniform(1.0, 30.0, (J, M)))
+    arrivals = np.sort(rng.uniform(0.0, horizon, J))
+    return pred, arrivals
+
+
+def assert_exact(v, d):
+    """Bitwise agreement on the executed schedule (assert_equivalent
+    covers the full FIELDS tuple at suite tolerance on top)."""
+    for fld in EXACT_FIELDS:
+        a = np.nan_to_num(np.asarray(getattr(v, fld), float), nan=-1.0)
+        b = np.nan_to_num(np.asarray(getattr(d, fld), float), nan=-1.0)
+        np.testing.assert_array_equal(a, b, err_msg=f"field {fld}")
+    assert_equivalent(v, d)
+
+
+class TestEquivalence:
+    """DES == vector on every load-model configuration."""
+
+    @pytest.mark.parametrize("kw", LOAD_CONFIGS)
+    def test_engines_agree(self, kw):
+        dag = matrix_app(replicas=2)
+        pred, arrivals = congested(dag)
+        call = dict(c_max_grid=(4.0, 8.0), orders=("spt", "hcf"),
+                    arrivals=arrivals, **kw)
+        v = simulate_scenarios(dag, pred, **call)
+        d = simulate_scenarios(dag, pred, **call, engine="des")
+        assert_exact(v, d)
+
+    def test_engines_agree_multistage_capped_cold(self):
+        """The widest DAG of the canon, caps + cold together."""
+        dag = APPS["video"]
+        pred, arrivals = congested(dag, J=7, seed=3, horizon=3.0)
+        call = dict(c_max_grid=(6.0,), orders=("spt",), arrivals=arrivals,
+                    concurrency=2, coldstart=CS)
+        v = simulate_scenarios(dag, pred, **call)
+        d = simulate_scenarios(dag, pred, **call, engine="des")
+        assert_exact(v, d)
+
+    def test_queueing_is_real_and_billed(self):
+        """Cap 1 on a congested batch genuinely queues — positive waits,
+        higher cost than uncapped (the wait is billed occupancy) — and
+        both engines report the identical wait matrix."""
+        dag = matrix_app(replicas=1)
+        pred, arrivals = congested(dag, J=10, seed=1)
+        base = simulate(dag, pred, c_max=2.0, order="spt",
+                        arrivals=arrivals)
+        capped = simulate(dag, pred, c_max=2.0, order="spt",
+                          arrivals=arrivals, concurrency=1)
+        assert np.asarray(capped.queue_wait).sum() > 0.0
+        assert capped.cost_usd > base.cost_usd
+        assert capped.makespan >= base.makespan
+
+    def test_cold_penalty_is_real(self):
+        """Scale-to-zero makes the first dispatch everywhere cold; the
+        warm-up penalty shows up in start times."""
+        dag = matrix_app(replicas=2)
+        pred, arrivals = congested(dag, seed=2)
+        warm = simulate(dag, pred, c_max=4.0, order="spt",
+                        arrivals=arrivals)
+        cold = simulate(dag, pred, c_max=4.0, order="spt",
+                        arrivals=arrivals, coldstart=CS)
+        assert np.asarray(cold.cold).sum() > 0
+        priv = ~np.asarray(cold.public_mask)
+        first = np.asarray(cold.cold) & priv
+        assert (np.asarray(cold.start)[first]
+                >= np.asarray(warm.start)[first]).all()
+
+
+class TestDegenerateBitExact:
+    """Uncapped / zero-penalty / constant-pool configs are the
+    pre-change path, bit for bit."""
+
+    def _base(self, **kw):
+        dag = matrix_app(replicas=2)
+        pred, arrivals = congested(dag)
+        call = dict(c_max_grid=(4.0, 8.0), orders=("spt", "hcf"),
+                    arrivals=arrivals)
+        return (simulate_scenarios(dag, pred, **call),
+                simulate_scenarios(dag, pred, **call, **kw))
+
+    def _assert_bitwise(self, base, other, skip=()):
+        for fld in FIELDS + ("public_mask",):
+            if fld in skip:
+                continue
+            a = np.nan_to_num(np.asarray(getattr(base, fld), float),
+                              nan=-1.0)
+            b = np.nan_to_num(np.asarray(getattr(other, fld), float),
+                              nan=-1.0)
+            np.testing.assert_array_equal(a, b, err_msg=f"field {fld}")
+
+    def test_uncapped_concurrency(self):
+        base, un = self._base(concurrency=np.inf)
+        self._assert_bitwise(base, un)
+
+    def test_zero_penalty_coldstart(self):
+        # cold *flags* may set (keep-alive bookkeeping is active); every
+        # pre-existing field is untouched because the penalty is 0.0
+        base, zp = self._base(coldstart=ColdStartModel(
+            warm_up_s=0.0, keep_alive_s=0.25, scale_to_zero=True))
+        self._assert_bitwise(base, zp, skip=("cold",))
+
+    def test_constant_pool_trace(self):
+        dag = matrix_app(replicas=2)
+        base, const = self._base(pool_trace=PoolTrace(
+            counts=(dag.replicas,)))
+        self._assert_bitwise(base, const)
+
+    def test_degenerate_des_matches_too(self):
+        dag = matrix_app(replicas=2)
+        pred, arrivals = congested(dag)
+        base = simulate(dag, pred, c_max=4.0, order="spt",
+                        arrivals=arrivals)
+        un = simulate(dag, pred, c_max=4.0, order="spt", arrivals=arrivals,
+                      concurrency=np.inf,
+                      coldstart=ColdStartModel(warm_up_s=0.0,
+                                               keep_alive_s=np.inf))
+        for fld in ("makespan", "cost_usd", "start", "end", "completion",
+                    "queue_wait"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(base, fld)),
+                np.asarray(getattr(un, fld)), err_msg=f"field {fld}")
+
+
+class TestValidation:
+    """The load kwargs compose with the other engine features only where
+    the semantics are defined — everything else fails fast, by name."""
+
+    def test_faults_exclusion(self):
+        with pytest.raises(ValueError, match="faults"):
+            validate_load_kwargs(True, None, None, faulty=True,
+                                 chunk_jobs=None)
+
+    def test_chunking_exclusion(self):
+        with pytest.raises(ValueError, match="chunk_jobs"):
+            validate_load_kwargs(False, CS, None, faulty=False,
+                                 chunk_jobs=64)
+
+    def test_replicas_axis_pool_exclusion(self):
+        dag = matrix_app(replicas=2)
+        pred, arrivals = congested(dag)
+        with pytest.raises(ValueError, match="replicas axis"):
+            simulate_scenarios(dag, pred, c_max_grid=(4.0,),
+                               orders=("spt",), arrivals=arrivals,
+                               replicas=[[1, 1], [2, 2]], pool_trace=POOL)
+
+    def test_noop_when_inactive(self):
+        validate_load_kwargs(False, None, None, faulty=True, chunk_jobs=8)
+
+    def test_bad_concurrency_rejected(self):
+        dag = matrix_app(replicas=2)
+        pred, arrivals = congested(dag)
+        with pytest.raises(ValueError, match="concurrency"):
+            simulate(dag, pred, c_max=4.0, arrivals=arrivals,
+                     concurrency=0)
+
+
+class TestOnlineCongestionFeedback:
+    """serve_online reacts to observed queue waits instead of trusting
+    load-independent predictions."""
+
+    def _sched(self):
+        from repro.configs import get_config
+        from repro.serving.hybrid import HybridServingScheduler
+        return HybridServingScheduler(get_config("llama3-8b"))
+
+    def test_ewma_math(self):
+        est = queue_wait_ewma([np.array([1.0, 0.0]), np.array([3.0, 1.0])],
+                              alpha=0.5)
+        np.testing.assert_allclose(est, [2.0, 0.5])
+        assert queue_wait_ewma([]) is None
+        with pytest.raises(ValueError, match="alpha"):
+            queue_wait_ewma([np.zeros(2)], alpha=0.0)
+        with pytest.raises(ValueError):
+            queue_wait_ewma([np.array([-1.0])])
+
+    def test_serve_online_threads_load_kwargs(self):
+        sched = self._sched()
+        rng = np.random.default_rng(0)
+        J = 12
+        plen = rng.integers(64, 1024, J)
+        ntok = rng.integers(16, 128, J)
+        rep = sched.serve_online(
+            plen, ntok, arrivals="poisson:6.0", sla_s=4.0,
+            concurrency=1, coldstart=ColdStartModel(warm_up_s=0.2,
+                                                    keep_alive_s=0.5),
+            stage_queue_waits=[np.full(3, 0.1), np.full(3, 0.4)])
+        assert rep.result.queue_wait is not None
+        assert np.isfinite(rep.result.completion).all()
+
+    def test_queue_wait_telemetry_length_checked(self):
+        sched = self._sched()
+        with pytest.raises(ValueError, match="stage_queue_waits"):
+            sched.serve_online(np.array([128]), np.array([16]),
+                               arrivals=np.array([0.0]), sla_s=4.0,
+                               stage_queue_waits=[np.zeros(2)])
+
+    def test_observed_congestion_shifts_the_plan(self):
+        """Huge observed public queue wait inflates predicted public
+        latency; on a multi-provider portfolio (non-dominated quanta and
+        rates) the placement argmin genuinely flips, so the plan must
+        differ from the congestion-blind one."""
+        from repro.configs import get_config
+        from repro.serving.hybrid import (HybridServingScheduler,
+                                          elastic_portfolio)
+        sched = HybridServingScheduler(get_config("llama3-8b"),
+                                       portfolio=elastic_portfolio(3))
+        rng = np.random.default_rng(7)
+        J = 16
+        plen = rng.integers(256, 4096, J)
+        ntok = rng.integers(64, 512, J)
+        arrivals = np.sort(rng.uniform(0.0, 1.0, J))
+        kw = dict(arrivals=arrivals, sla_s=1.5, order="hcf", seed=3)
+        blind = sched.serve_online(plen, ntok, **kw)
+        seen = sched.serve_online(plen, ntok, **kw,
+                                  stage_queue_waits=[np.full(3, 50.0)])
+        changed = (
+            not np.array_equal(blind.result.public_mask,
+                               seen.result.public_mask)
+            or not np.array_equal(
+                np.nan_to_num(blind.result.provider, nan=-1),
+                np.nan_to_num(seen.result.provider, nan=-1))
+            or not np.array_equal(blind.result.start, seen.result.start))
+        assert changed, "congestion telemetry did not reach the plan"
+
+
+# -- hypothesis properties (skipped when hypothesis is unavailable) --------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    from tests.strategies import arrival_streams, workloads
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    J_PROP = 6  # fixed job count: one compiled engine per flag family
+
+    class TestLoadProperties:
+        @given(data=workloads(dag=one_stage_dag(replicas=1),
+                              min_jobs=J_PROP, max_jobs=J_PROP),
+               arr=arrival_streams(J_PROP, horizon=4.0),
+               cap=st.integers(min_value=1, max_value=2),
+               frac=st.floats(min_value=0.2, max_value=0.6))
+        @settings(max_examples=12, deadline=None)
+        def test_raising_cap_never_increases_makespan(self, data, arr,
+                                                      cap, frac):
+            """Single stage, single provider: a looser cap dispatches
+            every queued offload no later, so makespan is monotone.
+            (Multi-stage/multi-provider reopens Graham-style anomalies —
+            the cap changes the placement argmin itself.)"""
+            dag, pred = data
+            c_max = float(pred["P_private"].sum()) * frac
+            kw = dict(c_max_grid=(c_max,), orders=("spt",), arrivals=arr,
+                      include_transfers=False)
+            for engine in ("vector", "des"):
+                lo = simulate_scenarios(dag, pred, **kw, engine=engine,
+                                        concurrency=cap)
+                hi = simulate_scenarios(dag, pred, **kw, engine=engine,
+                                        concurrency=cap + 1)
+                assert hi.makespan[0] <= lo.makespan[0] + 1e-9, engine
+
+        @given(data=workloads(dag=matrix_app(replicas=2),
+                              min_jobs=J_PROP, max_jobs=J_PROP),
+               arr=arrival_streams(J_PROP, horizon=6.0),
+               ka=st.floats(min_value=0.1, max_value=2.0),
+               dka=st.floats(min_value=0.1, max_value=5.0))
+        @settings(max_examples=12, deadline=None)
+        def test_longer_keepalive_never_more_colds(self, data, arr, ka,
+                                                   dka):
+            """With zero warm-up the schedule is invariant, so lengthening
+            the keep-alive window can only turn colds warm."""
+            dag, pred = data
+            kw = dict(c_max_grid=(4.0,), orders=("spt",), arrivals=arr)
+            for engine in ("vector", "des"):
+                short = simulate_scenarios(
+                    dag, pred, **kw, engine=engine,
+                    coldstart=ColdStartModel(warm_up_s=0.0,
+                                             keep_alive_s=ka))
+                long = simulate_scenarios(
+                    dag, pred, **kw, engine=engine,
+                    coldstart=ColdStartModel(warm_up_s=0.0,
+                                             keep_alive_s=ka + dka))
+                assert (np.asarray(long.cold).sum()
+                        <= np.asarray(short.cold).sum()), engine
+
+        @given(data=workloads(dag=matrix_app(replicas=2),
+                              min_jobs=J_PROP, max_jobs=J_PROP),
+               arr=arrival_streams(J_PROP, horizon=6.0),
+               ka=st.floats(min_value=0.1, max_value=3.0))
+        @settings(max_examples=12, deadline=None)
+        def test_zero_penalty_is_bit_exact(self, data, arr, ka):
+            dag, pred = data
+            kw = dict(c_max_grid=(4.0,), orders=("spt",), arrivals=arr)
+            for engine in ("vector", "des"):
+                base = simulate_scenarios(dag, pred, **kw, engine=engine)
+                zp = simulate_scenarios(
+                    dag, pred, **kw, engine=engine,
+                    coldstart=ColdStartModel(warm_up_s=0.0,
+                                             keep_alive_s=ka))
+                for fld in ("makespan", "cost_usd", "start", "end",
+                            "completion"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(base, fld)),
+                        np.asarray(getattr(zp, fld)),
+                        err_msg=f"{engine}:{fld}")

@@ -19,17 +19,11 @@ from repro.core.faults import (FaultModel, RetryPolicy, as_fault_model,
 from repro.core.vectorsim import simulate_scenarios
 from repro.serving.hybrid import (HybridServingScheduler, elastic_portfolio,
                                   serving_dag)
+from tests.strategies import chaos_model
 from tests.test_vectorsim import (FIELDS, PINNED_DAG, assert_equivalent,
                                   grid_for, workload)
 
 J = 11
-
-
-def chaos_model(dag, J, seed, rate=0.35, max_attempts=3,
-                outages=((0, 2.0, 6.0), (1, 4.0, 5.0))):
-    return FaultModel.from_rate(rate, J, dag.num_stages,
-                                max_attempts=max_attempts, seed=seed,
-                                outages=outages, kill_frac=0.6)
 
 
 class TestEquivalence:

@@ -21,6 +21,8 @@ from repro.core import (APPS, AppDAG, LAMBDA_COST, PriceTrace, Provider,
 from repro.core.cost import EGRESS_GB_PER_S, USD_PER_GB_MS
 from repro.core.vectorsim import simulate_scenarios, sweep_scenarios
 
+from .strategies import flat_then_double as _flat_then_double
+from .strategies import one_stage_dag as _one_stage_dag
 from .test_vectorsim import (FIELDS, J, assert_equivalent, grid_for,
                              workload)
 
@@ -87,21 +89,6 @@ class TestPriceTrace:
 
 
 # -- decision-epoch billing semantics (DES, deterministic) -----------------
-
-def _one_stage_dag(replicas=1):
-    return AppDAG("one", (Stage("s", replicas=replicas),), ())
-
-
-def _flat_then_double(break_at: float) -> ProviderPortfolio:
-    """One provider whose rate doubles (and latency halves) at t=break_at."""
-    return ProviderPortfolio((Provider(
-        "p", quantum_ms=100.0,
-        trace=PriceTrace(
-            usd_per_gb_ms=(USD_PER_GB_MS, 2 * USD_PER_GB_MS),
-            egress_usd_per_gb=(0.0, 0.0),
-            latency_mult=(1.0, 0.5),
-            breakpoints=(break_at,))),))
-
 
 @pytest.mark.parametrize("engine", ["des", "vector"])
 class TestDecisionEpochPricing:

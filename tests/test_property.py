@@ -14,7 +14,8 @@ from repro.training.optimizer import (dequantize_q8, dequantize_q8_log,
                                       quantize_q8, quantize_q8_log)
 import jax.numpy as jnp
 
-f_lat = st.floats(min_value=0.5, max_value=50.0)
+# shared scenario vocabulary (tests/strategies.py)
+from tests.strategies import latencies as f_lat, providers as _provider
 
 
 class TestCostProperties:
@@ -38,17 +39,6 @@ class TestCostProperties:
         """Zero/negative draws bill exactly one quantum, never $0."""
         one = 100.0 * (m / 1024.0) * USD_PER_GB_MS
         assert float(LAMBDA_COST.np_cost(t, m)) == pytest.approx(one)
-
-
-_provider = st.builds(
-    Provider,
-    name=st.just("p"),
-    quantum_ms=st.sampled_from([1.0, 50.0, 100.0, 1000.0]),
-    usd_per_gb_ms=st.floats(min_value=0.2, max_value=3.0).map(
-        lambda f: f * USD_PER_GB_MS),
-    egress_usd_per_gb=st.floats(min_value=0.0, max_value=0.2),
-    latency_mult=st.floats(min_value=0.5, max_value=2.0),
-)
 
 
 class TestPortfolioProperties:

@@ -13,11 +13,18 @@ from repro.core import APPS, AppDAG, Stage, simulate
 from repro.core.vectorsim import simulate_scenarios, sweep_scenarios
 from repro.serving.hybrid import serving_dag
 
+pytestmark = pytest.mark.equivalence
+
 J = 17
 FIELDS = ("makespan", "cost_usd", "completion", "start", "end",
           "n_offloaded_stages", "n_init_offloaded_jobs",
           "per_stage_offloads", "provider", "replica", "segment",
-          "attempts", "failed", "abandoned")
+          "attempts", "failed", "abandoned", "queue_wait", "cold")
+
+# SimResult fields the DES==vector comparison covers some other way:
+# public_mask is asserted exactly in assert_equivalent, deadline/release
+# are scenario *inputs* echoed back, not engine outputs.
+FIELDS_EXEMPT = {"public_mask", "deadline", "release"}
 
 PINNED_DAG = AppDAG(
     "pinned",
@@ -274,3 +281,22 @@ def test_degenerate_replica_axes_bit_exact():
         a = np.nan_to_num(np.asarray(getattr(base, fld), float), nan=-1.0)
         b = np.nan_to_num(np.asarray(getattr(one, fld), float), nan=-1.0)
         np.testing.assert_array_equal(a, b, err_msg=f"field {fld}")
+
+
+def test_fields_cover_every_sim_result_field():
+    """Coverage audit: a new SimResult field must join the DES==vector
+    comparison (or be explicitly exempted in FIELDS_EXEMPT with a
+    reason) — the equivalence suite can never silently under-compare."""
+    import dataclasses
+
+    from repro.core.simulator import SimResult
+
+    declared = {f.name for f in dataclasses.fields(SimResult)}
+    missing = declared - set(FIELDS) - FIELDS_EXEMPT
+    assert not missing, (
+        f"SimResult fields missing from the equivalence FIELDS: "
+        f"{sorted(missing)} — add them to FIELDS (or FIELDS_EXEMPT, "
+        f"with a reason)")
+    unknown = (set(FIELDS) | FIELDS_EXEMPT) - declared
+    assert not unknown, (
+        f"FIELDS entries that are not SimResult fields: {sorted(unknown)}")

@@ -39,6 +39,7 @@ def point_key(point: dict) -> str:
                        ("replica_configs", "repl"),
                        ("price_traces", "traces"),
                        ("fault_rate", "fault"),
+                       ("coldstart", "cold"),
                        ("workload", "wl"),
                        ("chunk_jobs", "chunk")):
         if point.get(field) is not None:
