@@ -75,6 +75,48 @@ def run(full: bool = False):
     rows.append(row("kernel/rglru", t * 1e6,
                     f"ref_gbps={2 * xr.nbytes / t / 1e9:.1f}"))
 
+    # scheduler kernels (f64, like the vector engine): time the jnp
+    # oracle (the CPU hot path) and check the Pallas kernel bodies in
+    # interpret mode — both chains are sequential, so the figure of
+    # merit is rows/sec of queue swept, not FLOPs
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        B, J = (30, 512) if full else (30, 64)
+        Ps = jnp.asarray(rng.lognormal(0.0, 0.6, (B, J)))
+        th = jnp.asarray(rng.uniform(0.0, 0.5 * J, (B, J)) * float(Ps.mean()))
+        mk = jnp.asarray(rng.random((B, J)) < 0.8)
+        acd = jax.jit(ref.acd_evict_ref)
+        out, t = _bench(acd, Ps, th, mk)
+        err = int((np.asarray(ops.acd_evict(Ps, th, mk, use_pallas=True))
+                   != np.asarray(out)).sum())
+        rows.append(row("kernel/acd_sweep", t * 1e6,
+                        f"rows_per_s={B / t:.0f};J={J};"
+                        f"pallas_interp_mismatches={err}"))
+
+        P_, C_, npub = 4, 2, int(0.8 * J)
+        order = jnp.asarray(np.concatenate([
+            rng.permutation(npub), np.arange(npub, J)]).astype(np.int32))
+        locp = jnp.asarray(np.arange(J) < npub)
+        ready = jnp.asarray(rng.uniform(0, 5, (P_, J)))
+        dur = jnp.asarray(rng.lognormal(0, 0.5, (P_, J)))
+        selc = jnp.asarray(rng.uniform(0, 2, (P_, J)))
+        occ = jnp.asarray(rng.uniform(0, 0.3, (P_, J)))
+        seg = jnp.asarray(rng.integers(0, 4, (P_, J)))
+        cap = jnp.asarray(np.ones(P_, bool))
+        wu = jnp.asarray(rng.uniform(0.1, 1.0, P_))
+        clk = jnp.asarray(rng.uniform(0, 3, (P_, C_)))
+        fd = jax.jit(lambda *a: ref.fifo_dispatch_ref(*a, cold=True))
+        args = (order, locp, jnp.asarray(npub, jnp.int32), ready, dur,
+                selc, occ, seg, cap, wu, clk, clk, 0.75)
+        out, t = _bench(fd, *args)
+        pall = ops.fifo_dispatch(*args, cold=True, use_pallas=True)
+        err = int(sum((np.asarray(a) != np.asarray(b)).sum()
+                      for a, b in zip(pall, out)))
+        rows.append(row("kernel/fifo_dispatch", t * 1e6,
+                        f"jobs_per_s={npub / t:.0f};J={J};"
+                        f"pallas_interp_mismatches={err}"))
+
     # rwkv6
     Hh, Tk, Dk = 4, (1024 if full else 256), 64
     r_ = jnp.asarray(rng.normal(size=(1, Hh, Tk, Dk)), jnp.float32)
@@ -90,5 +132,11 @@ def run(full: bool = False):
 
 
 if __name__ == "__main__":
+    import json
     import sys
-    print_rows(run(full="--full" in sys.argv))
+    rows = run(full="--full" in sys.argv)
+    print_rows(rows)
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+        f.write("\n")
+    print("wrote BENCH_kernels.json")

@@ -142,21 +142,46 @@ def run_serial(tasks, sim_fn, portfolio=None):
     return time.perf_counter() - t0, chk, n
 
 
+#: wall-time breakdown of the last ``run_vector`` call (``--profile``):
+#: cold-call compile+run wall vs the timed call's host-prep / engine
+#: dispatch+compute / host-finalize split from the engine's own
+#: ``_LAST_RUN_STATS`` instrumentation, plus the inner-loop impl used.
+LAST_PROFILE: dict = {}
+
+
 def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector",
                retry=None, **sweep_kw):
     """Whole-sweep runner: one batched call per app on ``vector``, a
     serial scenario-grid replay on ``des`` (the path that understands the
     ``replicas=``/``price_traces=``/``faults=`` axes). Per-call sweep
     configs (``concurrency=``/``coldstart=``) pass through ``sweep_kw``."""
+    from repro.core import vectorsim as _vs
+
     keys = ("dag", "pred", "act", "c_max_grid", "orders", "arrivals",
             "replicas", "price_traces", "faults")
     calls = [{k: t[k] for k in keys if t.get(k) is not None} for t in tasks]
+    LAST_PROFILE.clear()
     if warm and engine == "vector":  # compile outside the timed region
+        tw = time.perf_counter()
         sweep_scenarios(calls, portfolio=portfolio, retry=retry, **sweep_kw)
+        LAST_PROFILE["cold_wall_s"] = time.perf_counter() - tw
     t0 = time.perf_counter()
     outs = sweep_scenarios(calls, portfolio=portfolio, engine=engine,
                            retry=retry, **sweep_kw)
     dt = time.perf_counter() - t0
+    if engine == "vector":
+        st = _vs._LAST_RUN_STATS
+        LAST_PROFILE.update(
+            impl=st.get("impl"),
+            warm_wall_s=dt,
+            prep_s=st.get("prep_s", 0.0),
+            engine_s=st.get("engine_s", 0.0),
+            finalize_s=st.get("finalize_s", 0.0))
+        if "cold_wall_s" in LAST_PROFILE:
+            # the cold call pays compile + one run; its excess over the
+            # warm call is (to box noise) pure XLA compile time
+            LAST_PROFILE["compile_s"] = max(
+                0.0, LAST_PROFILE["cold_wall_s"] - dt)
     chk = float(sum(o.makespan.sum() + o.cost_usd.sum() for o in outs))
     return dt, chk, sum(o.num_scenarios for o in outs)
 
@@ -280,7 +305,7 @@ def measure_azure_point(J: int, engines, chunk_jobs: int = 4096,
 
 def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
                   arrivals=None, replica_sweep=None, price_traces=None,
-                  fault_rate=None, coldstart=None):
+                  fault_rate=None, coldstart=None, profile=False):
     tasks = fig4_workload(J)
     if deadlines != N_DEADLINES:
         for t in tasks:
@@ -353,6 +378,15 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
         }
         print(f"  J={J:>6} {eng:>6}: {dt:8.3f}s  "
               f"{n / dt:8.2f} scen/s  {n * J / dt:10.0f} jobs/s")
+        if profile and eng == "vector" and LAST_PROFILE:
+            pr = {k: (round(v, 5) if isinstance(v, float) else v)
+                  for k, v in LAST_PROFILE.items()}
+            point["engines"][eng]["profile"] = pr
+            print(f"           profile[{pr.get('impl')}]: "
+                  f"compile {pr.get('compile_s', 0.0) * 1e3:8.1f}ms | "
+                  f"prep {pr.get('prep_s', 0.0) * 1e3:6.1f}ms | "
+                  f"engine {pr.get('engine_s', 0.0) * 1e3:8.1f}ms | "
+                  f"finalize {pr.get('finalize_s', 0.0) * 1e3:6.1f}ms")
     ref = checks.get("seed", checks.get("des"))
     for eng, chk in checks.items():
         if not np.isclose(chk, ref, rtol=1e-6):
@@ -374,6 +408,11 @@ def main(argv=None):
                     help="add the very slow J=32768 point")
     ap.add_argument("--one-device", action="store_true",
                     help="do not shard the vector engine across cores")
+    ap.add_argument("--profile", action="store_true",
+                    help="emit a wall-time breakdown per vector-engine "
+                         "point (XLA compile vs host prep vs engine "
+                         "dispatch+compute vs host finalize) so a "
+                         "regression is attributable to a phase")
     ap.add_argument("--providers", type=int, default=3, metavar="N",
                     help="provider count for the multi-provider point "
                          "(demo_portfolio(N); des/vector engines)")
@@ -422,11 +461,20 @@ def main(argv=None):
     if args.smoke:
         print("smoke: J=64, full sweep, all engines")
         report["points"].append(
-            measure_point(64, ("seed", "des", "vector")))
+            measure_point(64, ("seed", "des", "vector"),
+                          profile=args.profile))
+        print("smoke: J=512, 1 deadline, des+vector")
+        # the ROADMAP speedup targets are stated at J=512, so CI tracks
+        # a ratcheted point at that scale too; one deadline per
+        # app/order keeps the serial DES replay affordable
+        report["points"].append(
+            measure_point(512, ("des", "vector"), deadlines=1,
+                          profile=args.profile))
         print(f"smoke: J=64, {args.providers}-provider portfolio, "
               "des+vector")
         report["points"].append(
-            measure_point(64, ("des", "vector"), portfolio=pf))
+            measure_point(64, ("des", "vector"), portfolio=pf,
+                          profile=args.profile))
         if args.arrivals:
             print(f"smoke: J=64, online arrivals ({args.arrivals}), "
                   "des+vector")
@@ -456,7 +504,8 @@ def main(argv=None):
                   f"(warm-up {args.coldstart}s), des+vector")
             report["points"].append(
                 measure_point(64, ("des", "vector"), portfolio=pf,
-                              coldstart=args.coldstart))
+                              coldstart=args.coldstart,
+                              profile=args.profile))
         if args.workload:
             if args.workload != "azure":
                 raise SystemExit(f"unknown --workload {args.workload!r} "

@@ -76,7 +76,8 @@ from .priority import ORDERS, hcf_key, sort_queue, spt_key
 from .scheduler import BatchReport, SkedulixScheduler
 from .simulator import (SimResult, simulate, simulate_all_private,
                         simulate_all_public)
-from .vectorsim import VectorSimResult, simulate_scenarios, sweep_scenarios
+from .vectorsim import (ENGINE_IMPLS, VectorSimResult, resolve_engine_impl,
+                        simulate_scenarios, sweep_scenarios)
 from .workloads import (AzureWorkload, load_azure_sample, parse_workload,
                         resolve_workload)
 
@@ -100,6 +101,7 @@ __all__ = [
     "SkedulixScheduler", "BatchReport",
     "SimResult", "simulate", "simulate_all_public", "simulate_all_private",
     "VectorSimResult", "simulate_scenarios", "sweep_scenarios",
+    "ENGINE_IMPLS", "resolve_engine_impl",
     "AzureWorkload", "parse_workload", "resolve_workload",
     "load_azure_sample",
 ]

@@ -6,8 +6,13 @@
 #   flash_decode    — one-token decode vs long KV (GQA rows on the MXU)
 #   rglru           — RecurrentGemma RG-LRU scan (time-sequential, VPU)
 #   rwkv6           — RWKV-6 WKV recurrence (rank-1 state updates)
+# plus the *scheduler's own* hot spots (the vector engine's inner loop):
+#   acd_sweep       — greedy ACD kept-prefix sweep over the priority queue
+#   dispatch        — capped FIFO pop/dispatch chain (slot-clock argmin)
 # ops.py = jit'd wrappers (ref fallback + interpret on CPU); ref.py = oracles.
 from . import ops, ref
+from .acd_sweep import acd_evict
+from .dispatch import fifo_dispatch
 from .flash_attention import flash_attention
 from .flash_decode import flash_decode
 from .matmul import matmul
@@ -15,4 +20,4 @@ from .rglru import rglru
 from .rwkv6 import rwkv6
 
 __all__ = ["ops", "ref", "matmul", "flash_attention", "flash_decode",
-           "rglru", "rwkv6"]
+           "rglru", "rwkv6", "acd_evict", "fifo_dispatch"]

@@ -14,6 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import acd_sweep as _acd
+from . import dispatch as _dp
 from . import flash_attention as _fa
 from . import flash_decode as _fd
 from . import matmul as _mm
@@ -24,6 +26,25 @@ from . import rwkv6 as _rk
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def acd_evict(P, thresh, mask, *, use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.acd_evict_ref(P, thresh, mask)
+    return _acd.acd_evict(P, thresh, mask, interpret=_interpret(), **kw)
+
+
+def fifo_dispatch(order, locpub, n_pub, ready, dur, selc, occ, seg,
+                  capped_p, wu_p, sclk0, sidle0, keep_alive, *,
+                  cold: bool = False, use_pallas: bool = False, **kw):
+    if not use_pallas:
+        return ref.fifo_dispatch_ref(order, locpub, n_pub, ready, dur,
+                                     selc, occ, seg, capped_p, wu_p,
+                                     sclk0, sidle0, keep_alive, cold=cold)
+    return _dp.fifo_dispatch(order, locpub, n_pub, ready, dur, selc, occ,
+                             seg, capped_p, wu_p, sclk0, sidle0,
+                             keep_alive, cold=cold,
+                             interpret=_interpret(), **kw)
 
 
 def matmul(x, y, *, use_pallas: bool = False, **kw):

@@ -98,6 +98,88 @@ def rglru_ref(x: jax.Array, a: jax.Array, h0: Optional[jax.Array] = None
     return ys.swapaxes(0, 1).astype(x.dtype), hT
 
 
+def acd_evict_ref(P: jax.Array, thresh: jax.Array, mask: jax.Array
+                  ) -> jax.Array:
+    """Greedy ACD evict set per queue row (oracle for `acd_sweep`).
+
+    Left-to-right scan over each [B, J] row carrying the running *kept*
+    demand sum: a masked job evicts iff the kept prefix ahead of it
+    exceeds its threshold, else its demand joins the prefix. Equals the
+    DES's iterated remove-first-violator-and-resweep fixpoint (removing
+    the first violator never changes earlier prefix sums, so the
+    iteration telescopes into this single pass).
+    """
+    def step(s, ts):
+        p, t, m = ts                                   # each [B]
+        ev = m & (s > t)
+        return s + jnp.where(m & ~ev, p, 0.0), ev
+
+    s0 = jnp.zeros(P.shape[:-1], P.dtype)
+    _, evs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(P, -1, 0), jnp.moveaxis(thresh, -1, 0),
+                   jnp.moveaxis(mask, -1, 0)))
+    return jnp.moveaxis(evs, 0, -1)
+
+
+def fifo_dispatch_ref(order: jax.Array, locpub: jax.Array,
+                      n_pub: jax.Array, ready: jax.Array, dur: jax.Array,
+                      selc: jax.Array, occ: jax.Array, seg: jax.Array,
+                      capped_p: jax.Array, wu_p: jax.Array,
+                      sclk0: jax.Array, sidle0: jax.Array, keep_alive,
+                      cold: bool = False):
+    """Capped FIFO dispatch chain (oracle for `dispatch`): jobs visit in
+    ``order`` (public first, ``n_pub`` of them); each takes every
+    provider's earliest-free slot from the [P, C] clock pool, prices its
+    wait (+ warm-up when the slot idled past ``keep_alive``) into the
+    argmin as occupancy $/s, and advances the chosen provider's slot
+    clock. Mirrors the vector engine's ``slot_step`` / the DES's
+    ``_start_public_capped`` expression for expression."""
+    J = order.shape[-1]
+    P = ready.shape[0]
+    iota_P = jnp.arange(P)
+    ka = jnp.asarray(keep_alive, ready.dtype)
+
+    def body(i, c):
+        sclk, sidle, prov_o, seg_o, wait_o, cold_o, start_o, end_o, \
+            extra_o = c
+        j = order[i]
+        ready_p = ready[:, j]
+        si = jnp.argmin(sclk, axis=1)
+        sc_sel = sclk[iota_P, si]
+        wait_p = jnp.where(capped_p, jnp.maximum(0.0, sc_sel - ready_p),
+                           0.0)
+        if cold:
+            idle_sel = sidle[iota_P, si]
+            cold_p = capped_p & ((ready_p + wait_p - idle_sel > ka)
+                                 | jnp.isneginf(idle_sel))
+        else:
+            cold_p = jnp.zeros(P, dtype=bool)
+        pen = occ[:, j] * (wait_p + cold_p * wu_p)
+        prov = jnp.argmin(selc[:, j] + pen)
+        start = ready_p[prov] + wait_p[prov] + cold_p[prov] * wu_p[prov]
+        end = start + dur[prov, j]
+        prov_o = prov_o.at[j].set(prov.astype(prov_o.dtype))
+        seg_o = seg_o.at[j].set(seg[prov, j].astype(seg_o.dtype))
+        wait_o = wait_o.at[j].set(wait_p[prov])
+        cold_o = cold_o.at[j].set(cold_p[prov])
+        start_o = start_o.at[j].set(start)
+        end_o = end_o.at[j].set(end)
+        extra_o = extra_o.at[j].set(pen[prov])
+        upd = capped_p[prov]
+        sclk = jnp.where(upd, sclk.at[prov, si[prov]].set(end), sclk)
+        sidle = jnp.where(upd, sidle.at[prov, si[prov]].set(end), sidle)
+        return (sclk, sidle, prov_o, seg_o, wait_o, cold_o, start_o,
+                end_o, extra_o)
+
+    f = ready.dtype
+    out = jax.lax.fori_loop(
+        0, n_pub.astype(jnp.int32), body,
+        (sclk0, sidle0, jnp.zeros(J, jnp.int32), jnp.zeros(J, jnp.int32),
+         jnp.zeros(J, f), jnp.zeros(J, bool), jnp.zeros(J, f),
+         jnp.zeros(J, f), jnp.zeros(J, f)))
+    return out[2:]
+
+
 def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
               u: jax.Array, s0: Optional[jax.Array] = None
               ) -> tuple[jax.Array, jax.Array]:

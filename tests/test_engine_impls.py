@@ -1,0 +1,151 @@
+"""Equivalence suite for the vector engine's inner-loop twins.
+
+The vector engine has three interchangeable inner-loop implementations
+(``engine_impl=``): the per-event scalar ``while_loop`` ("loop"), the
+batched fused-scan form ("scan"), and the Pallas-kernel dispatch path
+("pallas").  All three must be *bit-exact* with each other — they are
+algebraic rearrangements of the same event recurrence, with no change
+in floating-point association — and must agree with the discrete-event
+reference to solver tolerance.  The deterministic axis grid below pins
+scan==loop==pallas across concurrency caps, cold starts, faults, price
+traces, and egress lookahead; the hypothesis properties fuzz random
+workloads and arrival streams on top.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (APPS, ColdStartModel, RetryPolicy, demo_portfolio,
+                        matrix_app, simulate_scenarios, spot_portfolio)
+from repro.core.vectorsim import ENGINE_IMPLS, resolve_engine_impl
+
+pytestmark = pytest.mark.equivalence
+
+J = 13
+FIELDS = ("makespan", "cost_usd", "start", "end", "completion", "provider",
+          "replica", "segment", "attempts", "failed", "queue_wait", "cold")
+
+
+def _workload(seed, J=J, S=2):
+    rng = np.random.default_rng(seed)
+    dag = APPS["video"]
+    M = dag.num_stages
+    pred = {"P_private": rng.uniform(0.5, 3.0, (S, J, M)),
+            "P_public": rng.uniform(0.3, 2.5, (S, J, M)),
+            "T_up": rng.uniform(0.01, 0.3, (S, J, M)),
+            "T_down": rng.uniform(0.01, 0.3, (S, J, M))}
+    act = {k: v * rng.uniform(0.9, 1.1, v.shape) for k, v in pred.items()}
+    return dag, pred, act
+
+
+def _run(impl, dag, pred, act, **kw):
+    return simulate_scenarios(dag, pred, act, c_max_grid=(25.0, 60.0),
+                              orders=("spt", "hcf"),
+                              portfolio=demo_portfolio(),
+                              engine_impl=impl, **kw)
+
+
+def assert_same(a, b, tag, exact=True):
+    for fld in FIELDS:
+        x = np.asarray(getattr(a, fld))
+        y = np.asarray(getattr(b, fld))
+        if exact or x.dtype.kind in "ib":
+            assert np.array_equal(x, y, equal_nan=True), f"{tag}:{fld}"
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-12, atol=1e-12,
+                                       err_msg=f"{tag}:{fld}")
+
+
+AXES = {
+    "base": {},
+    "arrivals": dict(arrivals="poisson:1.5"),
+    "traces": dict(price_traces=[None, spot_portfolio(seed=3)],
+                   arrivals="poisson:2.0"),
+    "faults": dict(faults=[None, 0.3], retry=RetryPolicy(max_attempts=3),
+                   arrivals="poisson:1.0"),
+    "caps": dict(concurrency=4, arrivals="poisson:2.0"),
+    "cold": dict(concurrency=3, coldstart=ColdStartModel(0.5, 2.0),
+                 arrivals="poisson:2.0"),
+    "lookahead": dict(egress_lookahead=True, arrivals="poisson:1.5"),
+}
+
+
+class TestImplTwins:
+    @pytest.mark.parametrize("axis", sorted(AXES), ids=str)
+    def test_scan_and_pallas_match_loop_bitexact(self, axis):
+        kw = AXES[axis]
+        dag, pred, act = _workload(7)
+        loop = _run("loop", dag, pred, act, **kw)
+        for impl in ("scan", "pallas"):
+            assert_same(loop, _run(impl, dag, pred, act, **kw),
+                        f"{axis}:{impl}==loop")
+
+    @pytest.mark.parametrize("axis", ["base", "cold", "faults"], ids=str)
+    def test_scan_matches_des(self, axis):
+        kw = AXES[axis]
+        dag, pred, act = _workload(7)
+        scan = _run("scan", dag, pred, act, **kw)
+        des = simulate_scenarios(dag, pred, act, c_max_grid=(25.0, 60.0),
+                                 orders=("spt", "hcf"),
+                                 portfolio=demo_portfolio(),
+                                 engine="des", **kw)
+        assert_same(scan, des, f"{axis}:scan~des", exact=False)
+
+
+class TestImplSelection:
+    def test_resolver_rejects_unknown(self):
+        with pytest.raises(ValueError, match="engine_impl"):
+            resolve_engine_impl("vectorized")
+
+    def test_env_override(self, monkeypatch):
+        for impl in ENGINE_IMPLS:
+            monkeypatch.setenv("REPRO_ENGINE_IMPL", impl)
+            assert resolve_engine_impl(None) == impl
+        monkeypatch.delenv("REPRO_ENGINE_IMPL")
+        assert resolve_engine_impl(None) in ENGINE_IMPLS
+
+    def test_explicit_beats_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ENGINE_IMPL", "scan")
+        assert resolve_engine_impl("loop") == "loop"
+
+
+# -- hypothesis properties (skipped when hypothesis is unavailable) --------
+
+try:
+    from hypothesis import given, settings
+
+    from tests.strategies import arrival_streams, workloads
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in the image
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    J_PROP = 6  # fixed job count: one compiled engine per flag family
+
+    class TestImplProperties:
+        @given(data=workloads(dag=matrix_app(replicas=2),
+                              min_jobs=J_PROP, max_jobs=J_PROP),
+               arr=arrival_streams(J_PROP, horizon=6.0))
+        @settings(max_examples=12, deadline=None)
+        def test_scan_matches_loop_on_random_workloads(self, data, arr):
+            """The fused-scan rewrite is bit-exact with the event loop on
+            arbitrary workloads, not just the curated grid above."""
+            dag, pred = data
+            kw = dict(c_max_grid=(4.0,), orders=("spt",), arrivals=arr)
+            loop = simulate_scenarios(dag, pred, **kw, engine_impl="loop")
+            scan = simulate_scenarios(dag, pred, **kw, engine_impl="scan")
+            assert_same(loop, scan, "prop:scan==loop")
+
+        @given(data=workloads(dag=matrix_app(replicas=2),
+                              min_jobs=J_PROP, max_jobs=J_PROP),
+               arr=arrival_streams(J_PROP, horizon=6.0))
+        @settings(max_examples=8, deadline=None)
+        def test_scan_matches_loop_under_cold_and_caps(self, data, arr):
+            dag, pred = data
+            kw = dict(c_max_grid=(4.0,), orders=("spt",), arrivals=arr,
+                      concurrency=2,
+                      coldstart=ColdStartModel(warm_up_s=0.4,
+                                               keep_alive_s=1.5))
+            loop = simulate_scenarios(dag, pred, **kw, engine_impl="loop")
+            scan = simulate_scenarios(dag, pred, **kw, engine_impl="scan")
+            assert_same(loop, scan, "prop-cold:scan==loop")

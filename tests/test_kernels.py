@@ -159,3 +159,132 @@ class TestRWKV6:
                                    rtol=2e-3, atol=2e-3)
         np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
                                    rtol=2e-3, atol=2e-3)
+
+
+def _brute_acd(P, thresh, mask):
+    """Iterated remove-first-violator-and-resweep fixpoint (the DES's
+    literal cascade) — the claim the one-pass kernels telescope into."""
+    J = len(P)
+    ev = np.zeros(J, bool)
+    while True:
+        s, viol = 0.0, None
+        for i in range(J):
+            if mask[i] and not ev[i]:
+                if s > thresh[i]:
+                    viol = i
+                    break
+                s += P[i]
+        if viol is None:
+            return ev
+        ev[viol] = True
+
+
+class TestACDEvict:
+    """Scheduler hot spot #1: greedy ACD kept-prefix sweep."""
+
+    @pytest.mark.parametrize("b,j", [(1, 8), (4, 64), (30, 64), (3, 512)])
+    def test_pallas_vs_ref_f64(self, rng, b, j):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            P = jnp.asarray(rng.lognormal(0.0, 0.6, (b, j)))
+            # thresholds in the contested range so sweeps actually evict
+            thresh = jnp.asarray(
+                rng.uniform(0.0, 0.5 * j, (b, j)) * float(P.mean()))
+            mask = jnp.asarray(rng.random((b, j)) < 0.8)
+            got = ops.acd_evict(P, thresh, mask, use_pallas=True)
+            want = ref.acd_evict_ref(P, thresh, mask)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            assert not np.asarray(got)[~np.asarray(mask)].any()
+
+    def test_matches_iterated_cascade(self, rng):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            for _ in range(10):
+                j = int(rng.integers(4, 40))
+                P = rng.lognormal(0.0, 0.8, j)
+                thresh = rng.uniform(0.0, P.sum() * 0.6, j)
+                mask = rng.random(j) < 0.7
+                want = _brute_acd(P, thresh, mask)
+                got = ops.acd_evict(jnp.asarray(P)[None],
+                                    jnp.asarray(thresh)[None],
+                                    jnp.asarray(mask)[None],
+                                    use_pallas=True)[0]
+                np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_empty_mask_no_evictions(self, rng):
+        P = jnp.asarray(rng.lognormal(0.0, 0.5, (2, 16)), jnp.float32)
+        out = ops.acd_evict(P, jnp.zeros((2, 16), jnp.float32),
+                            jnp.zeros((2, 16), bool), use_pallas=True)
+        assert not np.asarray(out).any()
+
+
+def _dispatch_inputs(rng, J, P, C, n_pub, cold):
+    f = np.float64
+    order = np.concatenate([rng.permutation(n_pub),
+                            np.arange(n_pub, J)]).astype(np.int32)
+    locpub = np.zeros(J, bool)
+    locpub[order[:n_pub]] = True
+    ready = rng.uniform(0.0, 5.0, (P, J)).astype(f)
+    dur = rng.lognormal(0.0, 0.5, (P, J)).astype(f)
+    selc = rng.uniform(0.0, 2.0, (P, J)).astype(f)
+    occ = rng.uniform(0.0, 0.3, (P, J)).astype(f)
+    seg = rng.integers(0, 4, (P, J))
+    capped_p = rng.random(P) < 0.7
+    wu_p = rng.uniform(0.1, 1.0, P).astype(f)
+    sclk0 = rng.uniform(0.0, 3.0, (P, C)).astype(f)
+    sidle0 = np.where(rng.random((P, C)) < (0.5 if cold else 0.0),
+                      -np.inf, sclk0).astype(f)
+    return (jnp.asarray(order), jnp.asarray(locpub),
+            jnp.asarray(n_pub, jnp.int32), jnp.asarray(ready),
+            jnp.asarray(dur), jnp.asarray(selc), jnp.asarray(occ),
+            jnp.asarray(seg), jnp.asarray(capped_p), jnp.asarray(wu_p),
+            jnp.asarray(sclk0), jnp.asarray(sidle0), 0.75)
+
+
+class TestFIFODispatch:
+    """Scheduler hot spot #2: capped FIFO pop/dispatch chain."""
+
+    @pytest.mark.parametrize("cold", [False, True])
+    @pytest.mark.parametrize("j,p,c,n_pub", [(8, 2, 2, 8), (24, 3, 4, 17),
+                                             (64, 4, 2, 50)])
+    def test_pallas_vs_ref_bitexact(self, rng, cold, j, p, c, n_pub):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            args = _dispatch_inputs(rng, j, p, c, n_pub, cold)
+            got = ops.fifo_dispatch(*args, cold=cold, use_pallas=True)
+            want = ref.fifo_dispatch_ref(*args, cold=cold)
+            assert len(got) == len(want) == 7
+            for g, w in zip(got, want):
+                # bitwise: the kernel keeps gathers/argmins/float
+                # association identical to the oracle
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_chain_advances_clocks_sequentially(self, rng):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            # all jobs to one capped provider with one slot: starts must
+            # chain end-to-end in visit order (pure FIFO queueing)
+            J = 6
+            args = list(_dispatch_inputs(rng, J, 1, 1, J, False))
+            args[8] = jnp.asarray(np.ones(1, bool))        # capped
+            args[6] = jnp.asarray(np.zeros((1, J)))        # occ $0: no tiebreak
+            got = ops.fifo_dispatch(*args, use_pallas=True)
+            order = np.asarray(args[0])
+            start, end = np.asarray(got[4]), np.asarray(got[5])
+            for a, b in zip(order[:-1], order[1:]):
+                assert start[b] >= end[a] or np.isclose(start[b], end[a])
+
+    def test_n_pub_truncates(self, rng):
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            args = list(_dispatch_inputs(rng, 12, 2, 2, 12, False))
+            args[2] = jnp.asarray(5, jnp.int32)            # only 5 dispatch
+            got = ops.fifo_dispatch(*args, use_pallas=True)
+            tail = np.asarray(args[0])[5:]
+            # untouched jobs keep the zero fill on every output
+            assert (np.asarray(got[5])[tail] == 0.0).all()

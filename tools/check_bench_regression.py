@@ -9,6 +9,9 @@ baseline file's ``tolerance`` field, overridable with ``--tolerance``
 or ``BENCH_RATCHET_TOL``). Points are identified by their workload
 signature (J + providers/arrivals/replica-configs/price-traces), so
 reordering points in the bench script does not confuse the ratchet.
+When a ``BENCH_kernels.json`` is present (``--kernels``), the
+scheduler-kernel rows (ACD sweep, FIFO dispatch) join the ratchet as
+``kernel`` engine points in calls/sec.
 
 The baseline is a *ratchet*: refresh it with ``--update`` after a
 deliberate perf change (or when CI hardware shifts), commit the result,
@@ -30,6 +33,11 @@ import os
 import sys
 
 ENGINES = ("seed", "des", "vector")
+
+# scheduler-kernel rows from BENCH_kernels.json tracked by the ratchet
+# (the transformer kernels stay informational — their regressions are
+# owned by the accelerator burn-down, not the scheduler hot path)
+KERNEL_ROWS = ("kernel/acd_sweep", "kernel/fifo_dispatch")
 
 
 def point_key(point: dict) -> str:
@@ -58,12 +66,29 @@ def extract(report: dict) -> dict:
     return out
 
 
+def extract_kernels(report: dict) -> dict:
+    """{row_name + size: {"kernel": calls_per_sec}} for tracked rows."""
+    out = {}
+    for r in report.get("rows", []):
+        if not r["name"].startswith(KERNEL_ROWS):
+            continue
+        size = [p for p in r.get("derived", "").split(";")
+                if p.startswith("J=")]
+        key = " ".join([r["name"]] + size)
+        out[key] = {"kernel": 1e6 / float(r["us_per_call"])}
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("bench", nargs="?", default="BENCH_scheduler.json")
     ap.add_argument("baseline", nargs="?",
                     default=os.path.join(os.path.dirname(__file__),
                                          "bench_baseline.json"))
+    ap.add_argument("--kernels", default="BENCH_kernels.json",
+                    help="kernel bench report; its scheduler-kernel rows "
+                         "(kernel/acd_sweep, kernel/fifo_dispatch) join "
+                         "the ratchet when the file exists")
     ap.add_argument("--tolerance", type=float, default=None,
                     help="allowed fractional regression (default: the "
                          "baseline file's tolerance, else 0.25)")
@@ -76,6 +101,9 @@ def main(argv=None) -> int:
     if not current:
         print(f"error: no bench points in {args.bench}")
         return 2
+    if os.path.exists(args.kernels):
+        with open(args.kernels) as f:
+            current.update(extract_kernels(json.load(f)))
 
     if args.update or not os.path.exists(args.baseline):
         if not args.update:
@@ -107,18 +135,19 @@ def main(argv=None) -> int:
             if cur is None:
                 failures.append(f"[{key}] {eng}: engine missing from run")
                 continue
+            unit = "calls/s" if eng == "kernel" else "scen/s"
             floor = ref * (1.0 - tol)
             verdict = "OK"
             if cur < floor:
                 verdict = "REGRESSION"
                 failures.append(
-                    f"[{key}] {eng}: {cur:.2f} scen/s < floor "
+                    f"[{key}] {eng}: {cur:.2f} {unit} < floor "
                     f"{floor:.2f} (baseline {ref:.2f}, tol {tol:.0%})")
             elif cur > ref * (1.0 + tol):
                 notes.append(
-                    f"[{key}] {eng}: {cur:.2f} scen/s is {cur / ref:.2f}x "
+                    f"[{key}] {eng}: {cur:.2f} {unit} is {cur / ref:.2f}x "
                     f"baseline — consider --update to raise the floor")
-            print(f"  [{key}] {eng:>6}: {cur:8.2f} scen/s "
+            print(f"  [{key}] {eng:>6}: {cur:8.2f} {unit} "
                   f"(baseline {ref:8.2f}, floor {floor:8.2f}) {verdict}")
     for key in sorted(set(current) - set(base.get("points", {}))):
         notes.append(f"[{key}] untracked point (run --update to adopt)")
