@@ -175,6 +175,10 @@ def run_vector(tasks, warm: bool = True, portfolio=None, engine="vector",
             impl=st.get("impl"),
             warm_wall_s=dt,
             prep_s=st.get("prep_s", 0.0),
+            # replan/policy-decision time: priority keys, placement
+            # argmin matrices, offload-plan resolution (a prep_s
+            # sub-bucket; 0.0 when the prep cache reused the decisions)
+            plan_s=st.get("plan_s", 0.0),
             engine_s=st.get("engine_s", 0.0),
             finalize_s=st.get("finalize_s", 0.0))
         if "cold_wall_s" in LAST_PROFILE:
@@ -384,7 +388,8 @@ def measure_point(J: int, engines, deadlines=N_DEADLINES, portfolio=None,
             point["engines"][eng]["profile"] = pr
             print(f"           profile[{pr.get('impl')}]: "
                   f"compile {pr.get('compile_s', 0.0) * 1e3:8.1f}ms | "
-                  f"prep {pr.get('prep_s', 0.0) * 1e3:6.1f}ms | "
+                  f"prep {pr.get('prep_s', 0.0) * 1e3:6.1f}ms "
+                  f"(plan {pr.get('plan_s', 0.0) * 1e3:6.1f}ms) | "
                   f"engine {pr.get('engine_s', 0.0) * 1e3:8.1f}ms | "
                   f"finalize {pr.get('finalize_s', 0.0) * 1e3:6.1f}ms")
     ref = checks.get("seed", checks.get("des"))
@@ -410,7 +415,8 @@ def main(argv=None):
                     help="do not shard the vector engine across cores")
     ap.add_argument("--profile", action="store_true",
                     help="emit a wall-time breakdown per vector-engine "
-                         "point (XLA compile vs host prep vs engine "
+                         "point (XLA compile vs host prep — with the "
+                         "replan/policy-decision sub-bucket — vs engine "
                          "dispatch+compute vs host finalize) so a "
                          "regression is attributable to a phase")
     ap.add_argument("--providers", type=int, default=3, metavar="N",

@@ -13,7 +13,6 @@ import sys
 import time
 from typing import Any, Dict, List, Tuple
 
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

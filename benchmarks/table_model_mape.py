@@ -5,7 +5,6 @@ Paper: matrix 6.5/4.6%% private; video 4.4/1.4/8.5/51%%; image 13.7/12.2/
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import mape
 

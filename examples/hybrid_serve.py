@@ -20,8 +20,8 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import Model
-from repro.serving import (HybridServingScheduler, InferenceEngine, Request,
-                           ServingLatencyModel)
+from repro.serving import (HybridServingScheduler, InferenceEngine,
+                           Request)
 
 
 def main():

@@ -39,7 +39,8 @@ def _rotate_stage(ins: List[Any]):
     x0 = jnp.clip(jnp.floor(xsrc).astype(jnp.int32), 0, w - 2)
     fy = jnp.clip(ysrc - y0, 0.0, 1.0)[..., None]
     fx = jnp.clip(xsrc - x0, 0.0, 1.0)[..., None]
-    g = lambda dy, dx: img[y0 + dy, x0 + dx]
+    def g(dy, dx):
+        return img[y0 + dy, x0 + dx]
     out = ((1 - fy) * (1 - fx) * g(0, 0) + (1 - fy) * fx * g(0, 1)
            + fy * (1 - fx) * g(1, 0) + fy * fx * g(1, 1))
     inside = ((ysrc >= 0) & (ysrc <= h - 1) & (xsrc >= 0) & (xsrc <= w - 1))
@@ -61,7 +62,8 @@ def _dct_matrix(n: int = 8) -> jnp.ndarray:
 
 _DCT = _dct_matrix()
 # luminance-style quantization table scaled flat for simplicity
-_QTAB = jnp.asarray(np.full((8, 8), 24.0) + 4.0 * np.add.outer(np.arange(8), np.arange(8)),
+_QTAB = jnp.asarray(np.full((8, 8), 24.0)
+                    + 4.0 * np.add.outer(np.arange(8), np.arange(8)),
                     dtype=jnp.float32)
 
 

@@ -7,7 +7,6 @@ the rescaled frames. Synthetic BDD100K-like clips: duration < 10 s.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, List, Tuple
 
 import jax

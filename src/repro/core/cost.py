@@ -54,7 +54,7 @@ A 1-segment trace is bit-exact against the same provider's static fields.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np

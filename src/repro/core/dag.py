@@ -176,7 +176,6 @@ class AppDAG:
     @cached_property
     def descendant_masks(self) -> np.ndarray:
         """[M, M] bool: descendant_masks[k, d] iff d is reachable from k."""
-        M = self.num_stages
         reach = self.adjacency.copy()
         # reverse-topo DP: reach[k] = A[k] | union of reach over successors
         for k in reversed(self.topo):

@@ -11,7 +11,6 @@ on-device serving control loop (fixed-size, masked) in ``serving/hybrid.py``.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

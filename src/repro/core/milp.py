@@ -124,7 +124,7 @@ def solve_milp(
     # rows a relaxation (never over-constrains), so the optimum stays a
     # valid lower bound for every placement. Exact for one provider.
     min_lat = float(lat.min())
-    I = dag.replicas
+    repl = dag.replicas
     Q = float(c_max + P_priv.sum() + float(lat.max()) * P_pub.sum()
               + U.sum() + D.sum() + 1.0)
     BIG = float(max(dag.stages[k].replicas for k in range(M)) + M + J + 1)
@@ -142,7 +142,7 @@ def solve_milp(
     x_index: Dict[Tuple[int, int, int], int] = {}
     for k in range(M):
         for j in range(J):
-            for i in range(int(I[k])):
+            for i in range(int(repl[k])):
                 x_index[(j, k, i)] = _block(1)
     y_index: Dict[Tuple[int, int, int], int] = {}
     for k in range(M):
@@ -152,11 +152,20 @@ def solve_milp(
     u0 = _block(J * M)
     d0 = _block(J * M)
     n_var = idx
-    S = lambda j, k: s0 + j * M + k
-    E = lambda j, k: e0 + j * M + k
-    G = lambda j, k, p, s: g0 + ((j * M + k) * nP + p) * nS + s
-    Uv = lambda j, k: u0 + j * M + k
-    Dv = lambda j, k: d0 + j * M + k
+    def S(j, k):
+        return s0 + j * M + k
+
+    def E(j, k):
+        return e0 + j * M + k
+
+    def G(j, k, p, s):
+        return g0 + ((j * M + k) * nP + p) * nS + s
+
+    def Uv(j, k):
+        return u0 + j * M + k
+
+    def Dv(j, k):
+        return d0 + j * M + k
 
     rows: List[Dict[int, float]] = []
     lbs: List[float] = []
@@ -189,7 +198,7 @@ def solve_milp(
             _con(coef, -np.inf, c_max)
             # (5) sum_i x = e
             coef = {E(j, k): -1.0}
-            for i in range(int(I[k])):
+            for i in range(int(repl[k])):
                 coef[x_index[(j, k, i)]] = 1.0
             _con(coef, 0.0, 0.0)
             # source upload: batch input lives in private storage, so a
@@ -235,7 +244,7 @@ def solve_milp(
         for j in range(J):
             for r in range(j + 1, J):
                 y = y_index[(j, r, k)]
-                for i in range(int(I[k])):
+                for i in range(int(repl[k])):
                     xj = x_index[(j, k, i)]
                     xr = x_index[(r, k, i)]
                     _con({S(j, k): 1.0, S(r, k): -1.0, y: Q, xj: -Q, xr: -Q},
@@ -255,14 +264,18 @@ def solve_milp(
             for q in succ:
                 xcoef[E(j, q)] = xcoef.get(E(j, q), 0.0) - 1.0
             # (8): X - BIG*u >= 0.001 - BIG   (9): X - BIG*u <= 0
-            c8 = dict(xcoef); c8[Uv(j, p)] = c8.get(Uv(j, p), 0.0) - BIG
+            c8 = dict(xcoef)
+            c8[Uv(j, p)] = c8.get(Uv(j, p), 0.0) - BIG
             _con(c8, 0.001 - BIG, np.inf)
-            c9 = dict(xcoef); c9[Uv(j, p)] = c9.get(Uv(j, p), 0.0) - BIG
+            c9 = dict(xcoef)
+            c9[Uv(j, p)] = c9.get(Uv(j, p), 0.0) - BIG
             _con(c9, -np.inf, 0.0)
             # (10): X + BIG*d <= BIG - 0.001  (11): X + BIG*d >= 0
-            c10 = dict(xcoef); c10[Dv(j, p)] = c10.get(Dv(j, p), 0.0) + BIG
+            c10 = dict(xcoef)
+            c10[Dv(j, p)] = c10.get(Dv(j, p), 0.0) + BIG
             _con(c10, -np.inf, BIG - 0.001)
-            c11 = dict(xcoef); c11[Dv(j, p)] = c11.get(Dv(j, p), 0.0) + BIG
+            c11 = dict(xcoef)
+            c11[Dv(j, p)] = c11.get(Dv(j, p), 0.0) + BIG
             _con(c11, 0.0, np.inf)
     # (12) privacy pins + provider feasibility (memory caps; padded
     # segments — ``+inf`` opening edge — and segments that end before

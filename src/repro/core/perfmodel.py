@@ -121,7 +121,8 @@ def mape(y_true, y_pred) -> float:
 FeatureBuilder = Callable[[int, np.ndarray, Optional[np.ndarray]], np.ndarray]
 
 
-def default_feature_builder(k: int, base: np.ndarray, insize: Optional[np.ndarray]) -> np.ndarray:
+def default_feature_builder(k: int, base: np.ndarray,
+                            insize: Optional[np.ndarray]) -> np.ndarray:
     """Source stages see raw job features; downstream stages see the
     predicted input size prepended to the raw features (Sec. IV-B: latency
     models of later stages are parameterized by predicted data properties)."""
@@ -180,9 +181,12 @@ class AppPerfModel:
             else:
                 sizes[:, k] = base[:, 0]  # convention: feature 0 = input bytes
             if sm.upload is not None:
-                up[:, k] = np.maximum(np.asarray(sm.upload.predict(sizes[:, k:k + 1])), 0.0)
+                up[:, k] = np.maximum(
+                    np.asarray(sm.upload.predict(sizes[:, k:k + 1])), 0.0)
             if sm.download is not None:
-                down[:, k] = np.maximum(np.asarray(sm.download.predict(sizes[:, k:k + 1])), 0.0)
+                down[:, k] = np.maximum(
+                    np.asarray(sm.download.predict(sizes[:, k:k + 1])),
+                    0.0)
             insize[k] = insize_k
         return {"P_private": P_priv, "P_public": P_pub, "sizes": sizes,
                 "upload": up, "download": down}

@@ -20,13 +20,15 @@ import numpy as np
 KeyFn = Callable[[np.ndarray, np.ndarray, int | None], np.ndarray]
 
 
-def spt_key(P_private: np.ndarray, H: np.ndarray, stage: int | None = None) -> np.ndarray:
+def spt_key(P_private: np.ndarray, H: np.ndarray,
+            stage: int | None = None) -> np.ndarray:
     """Shortest Processing Time: key = (stage or total) private latency."""
     P = np.asarray(P_private, dtype=np.float64)
     return P[:, stage] if stage is not None else P.sum(axis=1)
 
 
-def hcf_key(P_private: np.ndarray, H: np.ndarray, stage: int | None = None) -> np.ndarray:
+def hcf_key(P_private: np.ndarray, H: np.ndarray,
+            stage: int | None = None) -> np.ndarray:
     """Highest Cost First: key = -(stage or total) public cost."""
     Hm = np.asarray(H, dtype=np.float64)
     return -(Hm[:, stage] if stage is not None else Hm.sum(axis=1))

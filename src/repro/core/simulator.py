@@ -170,7 +170,8 @@ class _Sim:
                  egress_lookahead: bool = False,
                  caps: Optional[np.ndarray] = None,
                  coldstart: Optional[ColdStartModel] = None,
-                 pool: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+                 pool: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                 offload_mask: Optional[np.ndarray] = None):
         self.dag = dag
         self.J, self.M = pred["P_private"].shape
         self.pred = pred
@@ -195,6 +196,10 @@ class _Sim:
         # None = classic Alg. 1 (whole trace visible at t0); a float gates
         # init offload to jobs released within [t0, t0 + init_window]
         self.init_window = init_window
+        # precomputed per-job offload plan ([J] bool): when given it
+        # REPLACES the capacity-prefix initialization rule — the policy
+        # harness's hook for externally-decided placements
+        self.offload_mask = offload_mask
         # windowed event admission: arrival epochs enter the heap in pages
         # of >= chunk_jobs jobs (the same page boundaries the vector
         # engine's streaming path uses); None keeps the whole horizon in
@@ -438,7 +443,11 @@ class _Sim:
 
     # -- Alg. 1 initialization phase ------------------------------------
     def _initialize(self):
-        if self.init_phase:
+        if self.offload_mask is not None:
+            # externally-decided placement (policy harness): the mask is
+            # the whole plan — no capacity-prefix scan
+            off = np.asarray(self.offload_mask, dtype=bool).copy()
+        elif self.init_phase:
             C_total = self.pred["P_private"].sum(axis=1)
             cap = t_max(self.dag.replicas, self.c_max)
             if self.init_window is not None:
@@ -983,6 +992,7 @@ def simulate(
     concurrency: ConcurrencyLike = None,
     coldstart: ColdStartLike = None,
     pool_trace: PoolTraceLike = None,
+    offload_mask: Optional[np.ndarray] = None,
 ) -> SimResult:
     """Run Alg. 1 over the hybrid platform simulator.
 
@@ -1041,11 +1051,27 @@ def simulate(
     Degenerate configs (uncapped, zero penalty, constant pool) are
     bit-exact vs the pre-change path. Not combinable with ``faults``,
     ``chunk_jobs``, or (for ``pool_trace``) a ``replicas`` axis.
+
+    ``offload_mask`` ([J] bool) injects an externally-decided offload
+    plan: marked jobs are forced public at every non-pinned stage (the
+    same cascade the initialization phase uses) and the capacity-prefix
+    rule is skipped entirely — the hook the pluggable policy harness
+    (:mod:`repro.serving.policies`) drives. Not combinable with
+    ``init_window`` (the mask already *is* the resolved plan).
     """
     act = act if act is not None else pred
     pred = _with_transfer_defaults(pred)
     act = _with_transfer_defaults(act)
     release = resolve_release(arrivals, pred["P_private"].shape[0], t0)
+    if offload_mask is not None:
+        if init_window is not None:
+            raise ValueError("offload_mask and init_window are mutually "
+                             "exclusive (the mask is the resolved plan)")
+        offload_mask = np.asarray(offload_mask, dtype=bool)
+        J_m = pred["P_private"].shape[0]
+        if offload_mask.shape != (J_m,):
+            raise ValueError(f"offload_mask must have shape ({J_m},), "
+                             f"got {offload_mask.shape}")
     fault_model = None
     if faults is not None:
         retry = retry if retry is not None else RetryPolicy()
@@ -1087,7 +1113,7 @@ def simulate(
             retry=retry, init_window=init_window,
             chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
             concurrency=concurrency, coldstart=coldstart,
-            pool_trace=pool_trace)
+            pool_trace=pool_trace, offload_mask=offload_mask)
         return batched.scenario(0)
     if engine != "des":
         raise ValueError(f"unknown engine {engine!r}")
@@ -1096,7 +1122,8 @@ def simulate(
                release=release, faults=fault_model, retry=retry,
                init_window=init_window, chunk_jobs=chunk_jobs,
                egress_lookahead=egress_lookahead,
-               caps=caps, coldstart=cs, pool=pool)
+               caps=caps, coldstart=cs, pool=pool,
+               offload_mask=offload_mask)
     return sim.run()
 
 

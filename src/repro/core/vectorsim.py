@@ -100,7 +100,7 @@ from .coldstart import (ColdStartLike, ConcurrencyLike, PoolTraceLike,
                         as_coldstart, as_pool_trace, norm_concurrency,
                         validate_load_kwargs)
 from .cost import (CostModel, EGRESS_GB_PER_S, LAMBDA_COST, PriceTrace,
-                   Provider, ProviderPortfolio, as_portfolio)
+                   ProviderPortfolio, as_portfolio)
 from .dag import AppDAG
 from .faults import RetryPolicy, max_outage_slots, normalize_fault_axis
 from .greedy import init_offload_jax
@@ -1503,7 +1503,8 @@ class _Task:
                  faults=None, retry=None, init_window=None,
                  A_att: int = 0, W: int = 0,
                  caps=None, coldstart=None, pool=None,
-                 where: str = ""):
+                 offload_mask=None, init_override=None,
+                 adaptive_override=None, where: str = ""):
         from .simulator import _with_transfer_defaults
 
         act = act if act is not None else pred
@@ -1677,10 +1678,37 @@ class _Task:
         capacity = np.array([float(repl_cfgs[r].sum()) * c
                              for (_, _, c, r, _, _, _) in self.grid])
 
+        # per-task scheduling-flag overrides (None = inherit the sweep's
+        # init_phase/adaptive) — the policy harness mixes e.g. an
+        # ACD-adaptive task and a fixed-placement baseline in one sweep
+        self.init_override = (None if init_override is None
+                              else bool(init_override))
+        self.adaptive_override = (None if adaptive_override is None
+                                  else bool(adaptive_override))
+        # externally-decided offload plan ([J] bool): replaces the
+        # capacity-prefix rule; rides the init_mode=2 engine path (the
+        # precomputed-mask branch the paged runs already use)
+        if offload_mask is not None:
+            if init_window is not None:
+                raise ValueError(
+                    f"{where + ': ' if where else ''}offload_mask and "
+                    "init_window are mutually exclusive")
+            offload_mask = np.asarray(offload_mask, dtype=bool)
+            if offload_mask.shape != (self.J,):
+                raise ValueError(
+                    f"{where + ': ' if where else ''}offload_mask must "
+                    f"have shape ({self.J},), got {offload_mask.shape}")
+        self.mask = offload_mask
+
         # windowed init offload: only jobs released within the window
-        # compete for the budget (all-True when no window — bit-exact)
-        init_elig = (np.ones(self.J, dtype=bool) if init_window is None
-                     else rel <= self.t0 + float(init_window))
+        # compete for the budget (all-True when no window — bit-exact).
+        # A policy mask takes the same arg slot: init_mode=2 consumes it
+        # as the resolved plan.
+        if offload_mask is not None:
+            init_elig = offload_mask
+        else:
+            init_elig = (np.ones(self.J, dtype=bool) if init_window is None
+                         else rel <= self.t0 + float(init_window))
 
         S = self.S
 
@@ -1803,6 +1831,16 @@ class _Task:
     _N_BASE_ARGS = 26
     _IDX_DEADLINE, _IDX_RELEASE = 13, 16
     _IDX_INIT_ELIG, _IDX_LIVE, _IDX_CLOCK0 = 17, 18, 25
+
+    def eff_modes(self, init_phase: bool, adaptive: bool) -> Tuple[int, bool]:
+        """(engine init_mode, adaptive) for this task under the sweep's
+        defaults: per-task overrides win, and a policy-supplied offload
+        mask compiles the precomputed-plan engine (``init_mode=2``)."""
+        ip = init_phase if self.init_override is None else self.init_override
+        ad = adaptive if self.adaptive_override is None \
+            else self.adaptive_override
+        mode = 2 if self.mask is not None else (1 if ip else 0)
+        return mode, bool(ad)
 
     def page_args(self, idx: np.ndarray, J_fam: int, init_mask: np.ndarray,
                   clocks: np.ndarray) -> tuple:
@@ -1978,8 +2016,17 @@ def _run_paged(task: _Task, I_max: int, include_transfers: bool,
     rel = task.release
     order = np.argsort(rel, kind="stable")
     rel_sorted = rel[order]
-    off_full = (_host_init_offload(task) if init_phase
-                else np.zeros((S, J), dtype=bool))
+    t_plan = time.perf_counter()
+    if task.mask is not None:
+        # policy-supplied plan: already global, nothing to resolve
+        off_full = np.broadcast_to(task.mask, (S, J)).copy()
+    elif init_phase:
+        off_full = _host_init_offload(task)
+    else:
+        off_full = np.zeros((S, J), dtype=bool)
+    _LAST_RUN_STATS["plan_s"] = (_LAST_RUN_STATS.get("plan_s", 0.0)
+                                 + time.perf_counter() - t_plan)
+    masked = init_phase or task.mask is not None
     bufs: Optional[Dict[str, np.ndarray]] = None
     clocks = task.args[task._IDX_CLOCK0]
     pos, size = 0, int(chunk)
@@ -1999,7 +2046,7 @@ def _run_paged(task: _Task, I_max: int, include_transfers: bool,
         args = task.page_args(idx, J_fam, off_full[:, idx], clocks)
         fn = _engine_fn(task.M_pad, I_max, J_fam, task.n_providers,
                         task.n_segments, include_transfers,
-                        2 if init_phase else 0, adaptive,
+                        2 if masked else 0, adaptive,
                         task.n_attempts, task.n_windows, task.faulty,
                         lookahead, task.capped, task.cold, task.pooled,
                         task.C, n_dev, impl)
@@ -2048,14 +2095,16 @@ def _run_task(task: _Task, I_max: int, include_transfers: bool,
     n_dev = jax.local_device_count() if S > 1 else 1
     chunked = (chunk_jobs is not None and task.release is not None
                and int(chunk_jobs) < task.J)
+    init_mode, adaptive = task.eff_modes(init_phase, adaptive)
     t_run = time.perf_counter()
     if chunked:
-        out = _run_paged(task, I_max, include_transfers, init_phase,
-                         adaptive, lookahead, int(chunk_jobs), n_dev, impl)
+        out = _run_paged(task, I_max, include_transfers,
+                         init_mode == 1, adaptive, lookahead,
+                         int(chunk_jobs), n_dev, impl)
     else:
         fn = _engine_fn(task.M_pad, I_max, task.J, task.n_providers,
                         task.n_segments, include_transfers,
-                        1 if init_phase else 0, adaptive,
+                        init_mode, adaptive,
                         task.n_attempts, task.n_windows, task.faulty,
                         lookahead, task.capped, task.cold, task.pooled,
                         task.C, n_dev, impl)
@@ -2097,6 +2146,7 @@ def simulate_scenarios(
     coldstart: ColdStartLike = None,
     pool_trace: PoolTraceLike = None,
     engine_impl: Optional[str] = None,
+    offload_mask: Optional[np.ndarray] = None,
 ) -> VectorSimResult:
     """Run Alg. 1 over a whole scenario grid in one batched device call.
 
@@ -2164,6 +2214,13 @@ def simulate_scenarios(
     degenerate values compile the pre-change graph bit-exactly. They
     cannot combine with ``faults``, ``chunk_jobs``, or (for
     ``pool_trace``) a ``replicas`` axis.
+
+    ``offload_mask`` ([J] bool) injects an externally-decided offload
+    plan shared by every scenario of the grid (see
+    :func:`.simulator.simulate`): the capacity-prefix rule is skipped
+    and marked jobs are forced public at every non-pinned stage. The
+    vector engine consumes it through the ``init_mode=2``
+    precomputed-plan path; not combinable with ``init_window``.
 
     ``engine_impl`` picks the vector engine's inner-loop implementation:
     ``"loop"`` (the original one-event-per-iteration ``while_loop``),
@@ -2238,7 +2295,7 @@ def simulate_scenarios(
                          init_window=init_window, chunk_jobs=chunk_jobs,
                          egress_lookahead=egress_lookahead,
                          concurrency=concurrency, coldstart=coldstart,
-                         pool_trace=pool_trace)
+                         pool_trace=pool_trace, offload_mask=offload_mask)
                 for (b, o, c, r, g, tr, f) in grid]
         return VectorSimResult(
             makespan=np.array([r.makespan for r in sims]),
@@ -2275,7 +2332,7 @@ def simulate_scenarios(
         [dict(dag=dag, pred=pred, act=act, c_max_grid=c_max_grid,
               orders=orders, arrivals=arrivals, replicas=replicas,
               replica_speeds=replica_speeds, price_traces=price_traces,
-              faults=faults)],
+              faults=faults, offload_mask=offload_mask)],
         cost_model=cost_model, include_transfers=include_transfers,
         init_phase=init_phase, adaptive=adaptive, t0=t0,
         portfolio=portfolio, retry=retry, init_window=init_window,
@@ -2379,6 +2436,12 @@ def _prep_sweep(tasks, cost_model, include_transfers, t0, portfolio,
     A_att = retry_eff.max_attempts if any_faulty else 0
     W = max([max_outage_slots(t["faults"]) for t in tasks
              if t.get("faults") is not None] or [0])
+    # the _Task constructors below ARE the replan/policy decisions:
+    # priority keys, placement argmin matrices, offload-plan resolution.
+    # Timed into the plan_s bucket so --profile can attribute policy
+    # overhead separately from generic host prep (0 on a prep-cache hit
+    # — the decisions were genuinely reused).
+    t_plan = time.perf_counter()
     prepped = [_Task(t["dag"], t["pred"], t.get("act"),
                      t.get("c_max_grid", (60.0,)),
                      t.get("orders", ("spt",)), cost_model, t0, M_pad,
@@ -2389,10 +2452,16 @@ def _prep_sweep(tasks, cost_model, include_transfers, t0, portfolio,
                      replica_speeds=t.get("replica_speeds"),
                      price_traces=t["price_traces"], S_seg=S_seg,
                      faults=t.get("faults"), retry=retry_eff,
-                     init_window=init_window, A_att=A_att, W=W,
+                     init_window=t.get("init_window", init_window),
+                     A_att=A_att, W=W,
                      caps=caps_eff, coldstart=cs, pool=t.get("_pool"),
+                     offload_mask=t.get("offload_mask"),
+                     init_override=t.get("init_phase"),
+                     adaptive_override=t.get("adaptive"),
                      where=f"tasks[{i}]")
                for i, t in enumerate(tasks)]
+    _LAST_RUN_STATS["plan_s"] = (_LAST_RUN_STATS.get("plan_s", 0.0)
+                                 + time.perf_counter() - t_plan)
     return prepped, I_max
 
 
@@ -2441,6 +2510,16 @@ def sweep_scenarios(
     the largest DAG; the scenario axis shards across host devices);
     differing job counts fall back to one call per group.
 
+    Tasks may also override the sweep-level scheduling flags per task:
+    ``init_phase``, ``adaptive``, ``init_window`` (each defaulting to
+    the sweep-level keyword) and ``offload_mask`` (a [J] bool plan that
+    replaces the capacity-prefix rule — see
+    :func:`.simulator.simulate`). The policy-comparison harness
+    (:mod:`repro.serving.policies`) relies on this to evaluate an
+    ACD-adaptive policy and fixed-placement baselines in ONE batched
+    sweep; tasks with differing effective flags simply land in
+    different fusion groups (separate executables, same call).
+
     Malformed inputs fail fast with a :class:`ValueError` naming the
     task and the offending axis (e.g. ``tasks[1]: act['P_public']: ...``
     or ``tasks[0]: replicas[2]: ...``) instead of a shape error from
@@ -2451,15 +2530,18 @@ def sweep_scenarios(
             t["dag"], t.get("pred"), t.get("act"),
             t.get("c_max_grid", (60.0,)), t.get("orders", ("spt",)),
             cost_model=cost_model, include_transfers=include_transfers,
-            init_phase=init_phase, adaptive=adaptive, t0=t0, engine="des",
+            init_phase=t.get("init_phase", init_phase),
+            adaptive=t.get("adaptive", adaptive), t0=t0, engine="des",
             portfolio=portfolio, arrivals=t.get("arrivals"),
             replicas=t.get("replicas"),
             replica_speeds=t.get("replica_speeds"),
             price_traces=t.get("price_traces"),
-            faults=t.get("faults"), retry=retry, init_window=init_window,
+            faults=t.get("faults"), retry=retry,
+            init_window=t.get("init_window", init_window),
             chunk_jobs=chunk_jobs, egress_lookahead=egress_lookahead,
             workload=t.get("workload"), concurrency=concurrency,
-            coldstart=coldstart, pool_trace=pool_trace)
+            coldstart=coldstart, pool_trace=pool_trace,
+            offload_mask=t.get("offload_mask"))
             for t in tasks]
     if engine != "vector":
         raise ValueError(f"unknown engine {engine!r}")
@@ -2546,7 +2628,8 @@ def sweep_scenarios(
             groups.append([i])
             continue
         key = (p.J, p.faulty, p.n_providers, p.n_segments, p.n_attempts,
-               p.n_windows, p.capped, p.cold, p.pooled, p.C)
+               p.n_windows, p.capped, p.cold, p.pooled, p.C,
+               p.eff_modes(bool(init_phase), bool(adaptive)))
         grp = by_key.get(key)
         if grp is None:
             by_key[key] = grp = []
@@ -2566,9 +2649,11 @@ def sweep_scenarios(
         t_run = time.perf_counter()
         fused = tuple(np.concatenate([p.args[k] for p in ps])
                       for k in range(len(p0.args)))
+        grp_mode, grp_adapt = p0.eff_modes(bool(init_phase),
+                                           bool(adaptive))
         fn = _engine_fn(p0.M_pad, I_max, p0.J, p0.n_providers,
                         p0.n_segments, bool(include_transfers),
-                        1 if init_phase else 0, bool(adaptive),
+                        grp_mode, grp_adapt,
                         p0.n_attempts, p0.n_windows, p0.faulty,
                         bool(egress_lookahead), p0.capped, p0.cold,
                         p0.pooled, p0.C, 1, impl)

@@ -7,10 +7,8 @@ host computes exactly the global batch slice it needs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..models.config import ModelConfig

@@ -12,12 +12,11 @@ the pjit auto-partitioned path keeps XLA's native reductions.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 Params = Any
 _BLOCK = 256

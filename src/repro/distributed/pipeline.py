@@ -8,12 +8,11 @@ whole-model gradients.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 Params = Any
 
@@ -59,7 +58,6 @@ def gpipe(stage_fn: Callable[[Params, jax.Array], jax.Array],
             outs * (stage == n_stages - 1).astype(outs.dtype), axis)
         return outs
 
-    pspec = jax.tree_util.tree_map(lambda _: P(axis), {"x": 0})["x"]
     return shard_map(run, mesh=mesh,
                      in_specs=(P(axis), P()),
                      out_specs=P(), check_rep=False)

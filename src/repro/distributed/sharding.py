@@ -18,7 +18,6 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -105,7 +104,6 @@ class ShardingRules:
 
     # -- named activation hints (used by MeshSharder) --
     def hint(self, name: str, shape: Tuple[int, ...]) -> Optional[P]:
-        cfg = self.cfg
         bd = self.batch_dim(shape[0]) if shape else None
         bd_axes = (bd,) if isinstance(bd, str) else (bd or ())
 
@@ -164,7 +162,6 @@ class ShardingRules:
 
     # -- parameter tree --------------------------------------------------
     def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
-        cfg = self.cfg
         # strip leading scan-stack dims: specs computed on trailing dims
         # (layer-stacked leaves get None prepended by caller)
         last = path.split("/")[-1]

@@ -107,8 +107,11 @@ def fifo_dispatch(order: jax.Array, locpub: jax.Array, n_pub: jax.Array,
     J = order.shape[-1]
     P, C = sclk0.shape
     f = ready.dtype
-    as_row = lambda v, dt=None: v.reshape(1, -1) if dt is None \
-        else v.reshape(1, -1).astype(dt)
+    def as_row(v, dt=None):
+        if dt is None:
+            return v.reshape(1, -1)
+        return v.reshape(1, -1).astype(dt)
+
     outs = pl.pallas_call(
         functools.partial(_dispatch_kernel, cold=cold),
         in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 13,

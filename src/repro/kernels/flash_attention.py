@@ -76,8 +76,9 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ik == nk - 1)
     def _finish():
-        l = l_ref[:, :1]
-        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        denom = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.where(denom == 0.0, 1.0, denom)
                        ).astype(o_ref.dtype)
 
 

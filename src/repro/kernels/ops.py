@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import acd_sweep as _acd
 from . import dispatch as _dp

@@ -64,7 +64,6 @@ def flash_decode_ref(
     out = flash_attention_ref(q[:, :, None], k, v, causal=False, scale=scale)
     if length is not None:
         # mask out positions >= length before softmax: recompute with mask
-        hkv = k.shape[1]
         kk = _expand_kv(k, hq)
         vv = _expand_kv(v, hq)
         s = (d ** -0.5) if scale is None else scale

@@ -25,7 +25,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.registry import ARCHS, SHAPES, ShapeSpec, cell_applicable, get_config

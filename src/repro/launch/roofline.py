@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # bytes/s / chip

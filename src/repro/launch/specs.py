@@ -6,7 +6,7 @@ precomputed frame/patch embeddings here (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +45,6 @@ def prefill_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
 def decode_specs(model: Model, shape: ShapeSpec) -> Dict[str, Any]:
     """One decode step: new token + position + the full KV/state cache
     (cache specs via eval_shape on init_cache — no allocation)."""
-    cfg = model.cfg
     b, s = shape.global_batch, shape.seq_len
     cache = jax.eval_shape(lambda: model.init_cache(b, s))
     return {

@@ -9,15 +9,13 @@ preemption handling and elastic resume.
         --smoke --steps 50 --ckpt /tmp/ck
 """
 import argparse
-import os
 
 import jax
-import numpy as np
 
 from ..configs.registry import ARCHS, get_config, get_smoke_config
 from ..data.pipeline import DataConfig, SyntheticLM
 from ..distributed.sharding import (MeshSharder, ShardingRules,
-                                    batch_shardings, param_shardings)
+                                    param_shardings)
 from ..models.model import Model
 from ..training.fault import PreemptionGuard, run_with_restarts
 from ..training.optimizer import AdamWConfig

@@ -58,7 +58,8 @@ class ModelConfig:
     # ---- derived ----
     @property
     def hd(self) -> int:
-        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+        return (self.head_dim if self.head_dim is not None
+                else self.d_model // self.num_heads)
 
     @property
     def is_encdec(self) -> bool:
@@ -81,7 +82,8 @@ class ModelConfig:
         kinds = {self.layer_kind(i) for i in range(self.num_layers)}
         if kinds <= {"rglru", "rwkv6"}:
             return True
-        return "attn" in kinds and self.window is not None and kinds <= {"attn", "rglru", "rwkv6"}
+        return ("attn" in kinds and self.window is not None
+                and kinds <= {"attn", "rglru", "rwkv6"})
 
     def param_count(self) -> int:
         """Approximate parameter count (embeddings + blocks)."""

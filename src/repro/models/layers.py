@@ -9,8 +9,6 @@ Sharding: activations/caches receive hints through an optional ``Sharder``
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -180,7 +178,7 @@ def chunked_attention(
 
         @jax.checkpoint
         def kv_step(carry, inputs):
-            acc, m, l = carry
+            acc, m, denom = carry
             ik, kc, vc = inputs                        # [B,Hkv,kvc,D]
             kc = jnp.repeat(kc, group, axis=1)         # [B,Hq,kvc,D]
             vc = jnp.repeat(vc, group, axis=1)
@@ -196,20 +194,20 @@ def chunked_attention(
             m_new = jnp.maximum(m, logits.max(-1))
             p = jnp.exp(logits - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + p.sum(-1)
+            denom_new = denom * alpha + p.sum(-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
                 "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc,
                 preferred_element_type=jnp.float32)
-            return (acc_new, m_new, l_new), ()
+            return (acc_new, m_new, denom_new), ()
 
         init = (jnp.zeros((b, hq, q_chunk, d), jnp.float32),
                 jnp.full((b, hq, q_chunk), neg),
                 jnp.zeros((b, hq, q_chunk), jnp.float32))
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, denom), _ = jax.lax.scan(
             kv_step, init,
             (jnp.arange(nk), kp.swapaxes(0, 2).swapaxes(1, 2),
              vp.swapaxes(0, 2).swapaxes(1, 2)))
-        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return (acc / jnp.maximum(denom, 1e-30)[..., None]).astype(q.dtype)
 
     qp = qp.reshape(b, hq, nq, q_chunk, d)
     out = jax.lax.map(lambda args: q_step(*args),

@@ -20,14 +20,13 @@ Modes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import (NO_SHARD, Params, Sharder, apply_norm, attn_init,
+from .layers import (Params, Sharder, apply_norm, attn_init,
                      attention_apply, chunked_attention, decode_attention,
                      ffn_apply, ffn_init, init_norm, onehot_cache_update, rope)
 from .moe import moe_apply, moe_init

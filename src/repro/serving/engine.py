@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -54,7 +54,6 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.arrivals import ArrivalsLike, resolve_release
@@ -62,14 +61,15 @@ from ..core.coldstart import queue_wait_ewma
 from ..core.cost import (USD_PER_GB_MS, CostModel, PriceTrace, Provider,
                          ProviderPortfolio)
 from ..core.dag import AppDAG, Stage
-from ..core.greedy import init_offload_jax, t_max
+from ..core.greedy import init_offload_jax
 from ..core.perfmodel import fit_app_perf_model, AppPerfModel
-from ..core.priority import ORDERS
 from ..core.scheduler import BatchReport, SkedulixScheduler
 from ..core.simulator import SimResult, simulate
 from ..core.vectorsim import VectorSimResult
 from ..launch.roofline import HBM_BW, PEAK_FLOPS
 from ..models.config import ModelConfig
+from .policies import (PolicyContext, SkedulixGreedy, compare_policies,
+                       policy_from_mode)
 
 
 def serving_dag(prefill_replicas: int = 2, decode_replicas: int = 4,
@@ -716,7 +716,8 @@ class HybridServingScheduler:
                      concurrency=None,
                      coldstart=None,
                      pool_trace=None,
-                     stage_queue_waits=None) -> OnlineReport:
+                     stage_queue_waits=None,
+                     policy=None) -> OnlineReport:
         """Continuous serving: requests arrive over time, each with an SLA.
 
         ``arrivals`` is any :mod:`repro.core.arrivals` stream (process,
@@ -733,7 +734,13 @@ class HybridServingScheduler:
         ``mode`` selects the policy: ``"hybrid"`` (Alg. 1's ACD eviction
         loop), ``"private"`` (never offload — requests queue on the
         pod), or ``"public"`` (every request straight to elastic
-        capacity). Hybrid mode is genuinely non-clairvoyant by default:
+        capacity). ``policy=`` generalizes ``mode=``: any
+        :class:`.policies.Policy` instance (or registry name, e.g.
+        ``"noah"``, ``"costanalysis"``) supplies the admission,
+        ordering, and placement decisions instead — the legacy modes
+        are exactly ``SkedulixGreedy`` / ``PrivateOnly`` /
+        ``PublicOnly`` and stay bit-identical through the policy path.
+        Hybrid mode is genuinely non-clairvoyant by default:
         the clairvoyant initialization offload (which plans over the
         whole trace at t0) is disabled, so every offload is an ACD
         eviction decided from queue state and per-request deadlines at
@@ -814,10 +821,18 @@ class HybridServingScheduler:
         release = resolve_release(arrivals, J, 0.0)
         if release is None:
             release = np.zeros(J)
-        if replan_every_s > 0.0:
-            admitted = np.ceil(release / replan_every_s) * replan_every_s
+        if policy is None:
+            # legacy mode strings resolve to their extracted policies
+            if mode == "hybrid":
+                policy = SkedulixGreedy(init_offload=init_offload)
+            else:
+                policy = policy_from_mode(mode)
+            label = mode
         else:
-            admitted = release.copy()
+            if isinstance(policy, str):
+                policy = policy_from_mode(policy)
+            label = policy.name
+        admitted = policy.admit(release, float(replan_every_s))
         slow = (straggler_slowdowns(replica_step_times)
                 if replica_step_times else None)
         qw = (queue_wait_ewma(stage_queue_waits)
@@ -833,32 +848,57 @@ class HybridServingScheduler:
             # while the actual draws (act) stay the ground truth
             pred = dict(pred)
             pred["P_public"] = pred["P_public"] + qw[None, :]
-        kw = dict(order=order, cost_model=self.cost_model,
+        ctx = PolicyContext(
+            dag=self.dag, sla_s=float(sla_s),
+            replan_every_s=float(replan_every_s), release=release,
+            admitted=admitted, order=policy.order or order,
+            cost_model=self.cost_model, portfolio=self.portfolio)
+        plan = policy.plan(pred, act, ctx)
+        kw = dict(order=policy.order or order, cost_model=self.cost_model,
                   portfolio=self.portfolio, arrivals=admitted,
                   engine=engine, faults=faults, retry=retry,
                   replica_slowdown=slow or None, chunk_jobs=chunk_jobs,
                   egress_lookahead=egress_lookahead,
                   concurrency=concurrency, coldstart=coldstart,
                   pool_trace=pool_trace)
-        if mode == "hybrid":
-            res = simulate(self.dag, pred, act, c_max=sla_s,
-                           init_phase=bool(init_offload),
-                           init_window=float(replan_every_s)
-                           if init_offload else None, **kw)
-        elif mode == "private":
-            res = simulate(self.dag, pred, act, c_max=sla_s,
-                           init_phase=False, adaptive=False, **kw)
-        elif mode == "public":
-            blocked = dict(pred)
-            blocked["P_private"] = np.full_like(pred["P_private"], 1e12)
-            res = simulate(self.dag, blocked, act, c_max=0.0,
-                           adaptive=False, **kw)
-            res = dataclasses.replace(res, deadline=sla_s)
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
+        res = simulate(self.dag, plan.pred, act, c_max=plan.c_max,
+                       **plan.sim_kwargs, **kw)
+        if plan.report_deadline is not None:
+            res = dataclasses.replace(res, deadline=plan.report_deadline)
         return OnlineReport(result=res, release=release, admitted=admitted,
                             sla_s=float(sla_s),
-                            replan_every_s=float(replan_every_s), mode=mode)
+                            replan_every_s=float(replan_every_s),
+                            mode=label)
+
+    def compare_policies(self, prompt_len: np.ndarray,
+                         new_tokens: np.ndarray,
+                         policies: Sequence, sla_s: float,
+                         arrivals: ArrivalsLike = None,
+                         replan_every_s: float = 0.0, order: str = "spt",
+                         seed: int = 1, use_ridge: bool = True,
+                         engine: str = "vector",
+                         faults=None, retry=None, price_traces=None,
+                         concurrency=None, coldstart=None, pool_trace=None,
+                         egress_lookahead: bool = True,
+                         chunk_jobs: Optional[int] = None):
+        """Evaluate several online policies on one request stream as ONE
+        batched sweep and return the Fig.-4-style
+        :class:`.policies.PolicyReport` (cost, SLA attainment against
+        true arrivals, makespan, offload/abandonment fractions per
+        policy). ``policies`` entries are :class:`.policies.Policy`
+        instances or registry names; ``faults``/``price_traces`` add
+        scenario axes shared by every policy. See
+        :func:`.policies.compare_policies`.
+        """
+        pred, act = self._pred_act(prompt_len, new_tokens, seed, use_ridge)
+        return compare_policies(
+            policies, self.dag, pred, act, sla_s, arrivals=arrivals,
+            replan_every_s=replan_every_s, order=order, engine=engine,
+            cost_model=self.cost_model, portfolio=self.portfolio,
+            faults=faults, retry=retry, price_traces=price_traces,
+            concurrency=concurrency, coldstart=coldstart,
+            pool_trace=pool_trace, egress_lookahead=egress_lookahead,
+            chunk_jobs=chunk_jobs)
 
     def baselines(self, prompt_len, new_tokens, seed: int = 1):
         rng = np.random.default_rng(seed)

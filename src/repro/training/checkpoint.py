@@ -17,7 +17,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import ml_dtypes

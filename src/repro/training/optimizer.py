@@ -9,8 +9,7 @@ sharded under ZeRO-1 specs.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

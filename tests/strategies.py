@@ -88,11 +88,11 @@ if st is not None:
         """A small app DAG: the canonical apps at drawn pool sizes,
         plus the single-stage pool."""
         kind = draw(st.sampled_from(["matrix", "video", "image", "one"]))
-        I = draw(st.integers(min_value=1, max_value=max_replicas))
+        n_repl = draw(st.integers(min_value=1, max_value=max_replicas))
         if kind == "one":
-            return one_stage_dag(replicas=I)
+            return one_stage_dag(replicas=n_repl)
         if kind == "matrix":
-            return matrix_app(replicas=I)
+            return matrix_app(replicas=n_repl)
         return APPS[kind]
 
     @st.composite

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.apps import SPECS, fit_models, generate_traces, run_job, split_traces
-from repro.core import mape, simulate
+from repro.core import simulate
 
 
 @pytest.mark.parametrize("name", ["matrix", "video", "image"])

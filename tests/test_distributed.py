@@ -1,7 +1,5 @@
 """Distribution layer: sharding rules + multi-device subprocess tests
 (pipeline, compression, sharded train step, elastic restore)."""
-import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.distributed.sharding import ShardingRules
@@ -10,8 +8,6 @@ from ._subproc import run_py
 
 class TestShardingRules:
     def _rules(self, arch):
-        import jax
-        from jax.sharding import Mesh
         # rules only need mesh axis names/sizes; fake with a 1-dev mesh is
         # impossible, so construct shape metadata through a Mesh of size 1
         # replicated — instead test the pure logic with a stub mesh object.

@@ -1,6 +1,5 @@
 """Dry-run machinery: HLO collective parsing, roofline terms, and the full
 lower+compile path on a small fake mesh (subprocess)."""
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (collective_bytes, model_flops_estimate,

@@ -4,7 +4,6 @@ import pytest
 
 from repro.core import (johnson_makespan, knapsack_lower_bound, matrix_app,
                         simulate, simulate_all_private, solve_milp, video_app)
-from repro.core.dag import AppDAG, Stage
 
 
 def _instance(rng, dag, J):

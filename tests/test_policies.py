@@ -1,0 +1,242 @@
+"""Policy harness: SkedulixGreedy bit-exactness vs the pre-refactor
+serve_online, Fig-4 bracketing/ordering, literature baselines, engine
+equivalence of the policy comparison sweep."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.arrivals import MMPPArrivals, PoissonArrivals, resolve_release
+from repro.core.faults import RetryPolicy
+from repro.core.simulator import simulate
+from repro.serving import (CostAnalysisPlacement, HybridServingScheduler,
+                           NoahSharedQueue, PolicyReport, PrivateOnly,
+                           PublicOnly, RandomFeasible, SkedulixGreedy,
+                           elastic_portfolio, policy_from_mode)
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return HybridServingScheduler(get_config("llama3-8b"),
+                                  portfolio=elastic_portfolio(3))
+
+
+@pytest.fixture(scope="module")
+def stream():
+    rng = np.random.default_rng(0)
+    J = 48
+    return rng.integers(64, 2048, J), rng.integers(16, 256, J)
+
+
+def pre_refactor_serve(sched, plen, ntok, arrivals, sla_s, replan_every_s,
+                       engine, mode="hybrid", init_offload=False,
+                       faults=None, retry=None):
+    """The exact pre-refactor serve_online body (verbatim simulate
+    keywords), kept as the bit-exactness reference for the extracted
+    policies."""
+    pred, act = sched._pred_act(plen, ntok, seed=1, use_ridge=False)
+    J = len(plen)
+    release = resolve_release(arrivals, J, 0.0)
+    if release is None:
+        release = np.zeros(J)
+    if replan_every_s > 0.0:
+        admitted = np.ceil(release / replan_every_s) * replan_every_s
+    else:
+        admitted = release.copy()
+    kw = dict(order="spt", cost_model=sched.cost_model,
+              portfolio=sched.portfolio, arrivals=admitted, engine=engine,
+              faults=faults, retry=retry, replica_slowdown=None,
+              chunk_jobs=None, egress_lookahead=True, concurrency=None,
+              coldstart=None, pool_trace=None)
+    if mode == "hybrid":
+        return simulate(sched.dag, pred, act, c_max=sla_s,
+                        init_phase=bool(init_offload),
+                        init_window=float(replan_every_s)
+                        if init_offload else None, **kw)
+    if mode == "private":
+        return simulate(sched.dag, pred, act, c_max=sla_s,
+                        init_phase=False, adaptive=False, **kw)
+    blocked = dict(pred)
+    blocked["P_private"] = np.full_like(pred["P_private"], 1e12)
+    res = simulate(sched.dag, blocked, act, c_max=0.0,
+                   adaptive=False, **kw)
+    return dataclasses.replace(res, deadline=sla_s)
+
+
+def assert_bit_exact(res, ref):
+    np.testing.assert_array_equal(res.completion, ref.completion)
+    np.testing.assert_array_equal(res.start, ref.start)
+    np.testing.assert_array_equal(res.end, ref.end)
+    np.testing.assert_array_equal(res.provider, ref.provider)
+    assert res.cost_usd == ref.cost_usd
+    assert res.makespan == ref.makespan
+
+
+class TestBitExact:
+    """The extracted policies reproduce the pre-refactor serve_online
+    byte-for-byte on arrival, fault, and multi-provider scenarios."""
+
+    SCENARIOS = [
+        # (arrivals, faults, retry, init_offload)
+        (PoissonArrivals(rate=8.0, seed=7), None, None, False),
+        (PoissonArrivals(rate=8.0, seed=7), None, None, True),
+        (MMPPArrivals(rates=(2.0, 24.0), dwell=(6.0, 3.0), seed=11),
+         0.3, RetryPolicy(max_attempts=3), False),
+    ]
+
+    @pytest.mark.parametrize("engine", ["des", "vector"])
+    @pytest.mark.parametrize("scenario", range(len(SCENARIOS)))
+    def test_skedulix_bit_exact(self, sched, stream, engine, scenario):
+        plen, ntok = stream
+        arr, faults, retry, init_off = self.SCENARIOS[scenario]
+        ref = pre_refactor_serve(sched, plen, ntok, arr, sla_s=4.0,
+                                 replan_every_s=0.5, engine=engine,
+                                 mode="hybrid", init_offload=init_off,
+                                 faults=faults, retry=retry)
+        rep = sched.serve_online(
+            plen, ntok, arr, sla_s=4.0, replan_every_s=0.5,
+            use_ridge=False, engine=engine, faults=faults, retry=retry,
+            policy=SkedulixGreedy(init_offload=init_off))
+        assert_bit_exact(rep.result, ref)
+        # the legacy mode= spelling routes through the same policy
+        legacy = sched.serve_online(
+            plen, ntok, arr, sla_s=4.0, replan_every_s=0.5,
+            use_ridge=False, engine=engine, faults=faults, retry=retry,
+            mode="hybrid", init_offload=init_off)
+        assert_bit_exact(legacy.result, ref)
+
+    @pytest.mark.parametrize("mode,policy", [
+        ("private", PrivateOnly()), ("public", PublicOnly())])
+    def test_brackets_bit_exact(self, sched, stream, mode, policy):
+        plen, ntok = stream
+        arr = PoissonArrivals(rate=8.0, seed=7)
+        for engine in ("des", "vector"):
+            ref = pre_refactor_serve(sched, plen, ntok, arr, sla_s=4.0,
+                                     replan_every_s=0.5, engine=engine,
+                                     mode=mode)
+            rep = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                                     replan_every_s=0.5, use_ridge=False,
+                                     engine=engine, policy=policy)
+            assert_bit_exact(rep.result, ref)
+            assert rep.result.deadline == ref.deadline
+
+
+class TestFig4:
+    """compare_policies reproduces the paper's qualitative Fig-4
+    ordering on the smoke grid."""
+
+    @pytest.fixture(scope="class")
+    def report(self, sched, stream) -> PolicyReport:
+        plen, ntok = stream
+        return sched.compare_policies(
+            plen, ntok,
+            ["skedulix", "private", "public", "random", "noah",
+             "costanalysis"],
+            sla_s=4.0, arrivals=PoissonArrivals(rate=8.0, seed=7),
+            replan_every_s=0.5, use_ridge=False, engine="vector",
+            faults=[None, 0.3], retry=RetryPolicy(max_attempts=3))
+
+    def test_hybrid_cost_fraction_at_matched_attainment(self, report):
+        hyb, pub = report["skedulix"], report["public"]
+        assert hyb["cost_usd"] <= 0.5 * pub["cost_usd"]
+        assert hyb["sla"] >= pub["sla"] - 0.05
+
+    def test_private_public_bracket_hybrids(self, report):
+        """PrivateOnly/PublicOnly bracket every hybrid policy: public
+        costs at least as much, private attains at most as much."""
+        pub, priv = report["public"], report["private"]
+        assert priv["cost_usd"] == 0.0
+        for name in ("skedulix", "noah", "costanalysis", "random"):
+            row = report[name]
+            assert pub["cost_usd"] >= row["cost_usd"] - 1e-12
+            assert priv["sla"] <= row["sla"] + 1e-9
+
+    def test_report_shape(self, report):
+        n = len(report.policies)
+        assert report.cost_usd.shape == report.sla.shape \
+            == report.makespan.shape == (n, 2)
+        assert len(report.results) == n
+        assert report.plan_s >= 0.0
+        assert "skedulix" in report.table()
+        with pytest.raises(KeyError):
+            report["nope"]
+
+    def test_engines_agree(self, sched, stream, report):
+        plen, ntok = stream
+        des = sched.compare_policies(
+            plen, ntok,
+            ["skedulix", "private", "public", "random", "noah",
+             "costanalysis"],
+            sla_s=4.0, arrivals=PoissonArrivals(rate=8.0, seed=7),
+            replan_every_s=0.5, use_ridge=False, engine="des",
+            faults=[None, 0.3], retry=RetryPolicy(max_attempts=3))
+        np.testing.assert_allclose(des.cost_usd, report.cost_usd,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(des.sla, report.sla, rtol=1e-9)
+        np.testing.assert_allclose(des.makespan, report.makespan,
+                                   rtol=1e-9)
+
+
+class TestBaselines:
+    def test_random_feasible_is_seeded_and_partial(self, sched, stream):
+        plen, ntok = stream
+        arr = PoissonArrivals(rate=8.0, seed=7)
+        a = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                               replan_every_s=0.5, use_ridge=False,
+                               engine="vector",
+                               policy=RandomFeasible(seed=3))
+        b = sched.serve_online(plen, ntok, arr, sla_s=4.0,
+                               replan_every_s=0.5, use_ridge=False,
+                               engine="vector",
+                               policy=RandomFeasible(seed=3))
+        assert a.result.cost_usd == b.result.cost_usd
+        assert 0.0 < a.result.offload_fraction < 1.0
+
+    def test_noah_spills_under_overload_only(self, sched, stream):
+        plen, ntok = stream
+        calm = sched.serve_online(plen, ntok, PoissonArrivals(rate=1.0,
+                                                              seed=7),
+                                  sla_s=30.0, replan_every_s=0.5,
+                                  use_ridge=False, engine="vector",
+                                  policy=NoahSharedQueue())
+        burst = sched.serve_online(
+            plen, ntok, MMPPArrivals(rates=(2.0, 24.0), dwell=(6.0, 3.0),
+                                     seed=11),
+            sla_s=2.5, replan_every_s=0.25, use_ridge=False,
+            engine="vector", policy=NoahSharedQueue())
+        assert calm.result.offload_fraction == 0.0
+        assert burst.result.offload_fraction > 0.0
+
+    def test_costanalysis_budget_knob(self, sched, stream):
+        plen, ntok = stream
+        arr = MMPPArrivals(rates=(2.0, 24.0), dwell=(6.0, 3.0), seed=11)
+        frugal = sched.serve_online(plen, ntok, arr, sla_s=2.5,
+                                    replan_every_s=0.25, use_ridge=False,
+                                    engine="vector",
+                                    policy=CostAnalysisPlacement(
+                                        budget_frac=1e-6))
+        lavish = sched.serve_online(plen, ntok, arr, sla_s=2.5,
+                                    replan_every_s=0.25, use_ridge=False,
+                                    engine="vector",
+                                    policy=CostAnalysisPlacement(
+                                        budget_frac=1e6))
+        assert frugal.result.offload_fraction == 0.0
+        assert (lavish.result.offload_fraction
+                >= frugal.result.offload_fraction)
+        assert lavish.result.cost_usd >= frugal.result.cost_usd
+
+    def test_registry_and_validation(self, sched, stream):
+        with pytest.raises(ValueError, match="unknown policy"):
+            policy_from_mode("nope")
+        with pytest.raises(ValueError, match="p_offload"):
+            RandomFeasible(p_offload=1.5)
+        with pytest.raises(ValueError, match="headroom"):
+            NoahSharedQueue(headroom=0.0)
+        with pytest.raises(ValueError, match="budget_frac"):
+            CostAnalysisPlacement(budget_frac=-1.0)
+        plen, ntok = stream
+        with pytest.raises(ValueError, match="duplicate policy names"):
+            sched.compare_policies(plen, ntok,
+                                   [SkedulixGreedy(), SkedulixGreedy()],
+                                   sla_s=4.0)

@@ -50,8 +50,9 @@ class TestMinQuantums:
 
     def test_positive_draws_unchanged_by_floor(self):
         # the floor only lifts t <= 0: the historical Eqn.-1 values hold
-        legacy = lambda t, m: (100.0 * np.ceil(t / 100.0)
-                               * (m / 1024.0) * USD_PER_GB_MS)
+        def legacy(t, m):
+            return (100.0 * np.ceil(t / 100.0)
+                    * (m / 1024.0) * USD_PER_GB_MS)
         for t in (0.5, 99.0, 101.0, 5432.1):
             assert float(LAMBDA_COST.np_cost(t, 2048.0)) == legacy(t, 2048.0)
 

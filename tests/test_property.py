@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (AppDAG, LAMBDA_COST, PriceTrace, Provider,
                         ProviderPortfolio, Stage, init_offload,
-                        johnson_makespan, lambda_cost, matrix_app,
+                        johnson_makespan, matrix_app,
                         scaled_portfolio, simulate, spot_portfolio)
 from repro.core.cost import USD_PER_GB_MS
 from repro.training.optimizer import (dequantize_q8, dequantize_q8_log,
@@ -247,16 +247,16 @@ class TestReplicaMonotonicityProperties:
            st.integers(min_value=1, max_value=3),
            st.floats(min_value=0.0, max_value=10.0))
     @settings(max_examples=25, deadline=None)
-    def test_makespan_monotone_in_replicas(self, works, I, spread):
+    def test_makespan_monotone_in_replicas(self, works, n_repl, spread):
         from repro.core.vectorsim import simulate_scenarios
         J = len(works)
         rel = np.linspace(0.0, spread, J)  # staggered, tie-free releases
         P = np.array(works)[:, None]
         pred = dict(P_private=P, P_public=P)
-        dag = AppDAG("pool", (Stage("s", replicas=I),), ())
+        dag = AppDAG("pool", (Stage("s", replicas=n_repl),), ())
         kw = dict(c_max_grid=(1e6,), orders=("spt",), arrivals=rel,
                   include_transfers=False, init_phase=False,
-                  adaptive=False, replicas=[[I], [I + 1]])
+                  adaptive=False, replicas=[[n_repl], [n_repl + 1]])
         for engine in ("vector", "des"):
             r = simulate_scenarios(dag, pred, engine=engine, **kw)
             assert r.makespan[1] <= r.makespan[0] + 1e-9, engine

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config, get_smoke_config
 from repro.models import Model
 from repro.serving import (HybridServingScheduler, InferenceEngine, Request,
-                           ServingLatencyModel, plan_batch_jax, serving_dag)
+                           ServingLatencyModel, plan_batch_jax)
 
 
 class TestEngine:

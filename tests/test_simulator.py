@@ -2,8 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import (APPS, LAMBDA_COST, matrix_app, simulate,
-                        simulate_all_private, simulate_all_public, video_app)
+from repro.core import (matrix_app, simulate, simulate_all_private,
+                        simulate_all_public, video_app)
 
 
 def _mk(rng, dag, J=20, pub_speed=0.5):

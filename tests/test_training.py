@@ -1,6 +1,5 @@
 """Training substrate: optimizer, checkpoints, fault tolerance."""
 import os
-import tempfile
 
 import jax
 import jax.numpy as jnp

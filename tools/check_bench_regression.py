@@ -11,7 +11,10 @@ signature (J + providers/arrivals/replica-configs/price-traces), so
 reordering points in the bench script does not confuse the ratchet.
 When a ``BENCH_kernels.json`` is present (``--kernels``), the
 scheduler-kernel rows (ACD sweep, FIFO dispatch) join the ratchet as
-``kernel`` engine points in calls/sec.
+``kernel`` engine points in calls/sec. When a ``BENCH_policies.json``
+is present (``--policies``), the policy-comparison points join too —
+same des/vector scenarios-per-sec semantics, keyed with a ``policies``
+prefix so they never collide with scheduler points.
 
 The baseline is a *ratchet*: refresh it with ``--update`` after a
 deliberate perf change (or when CI hardware shifts), commit the result,
@@ -66,6 +69,28 @@ def extract(report: dict) -> dict:
     return out
 
 
+def policy_point_key(point: dict) -> str:
+    """Stable identity of one policy-comparison bench point."""
+    parts = [f"policies J{point['J']}", f"npol={point['n_policies']}"]
+    for field, tag in (("providers", "prov"), ("arrivals", "arr"),
+                       ("fault_rate", "fault")):
+        if point.get(field) is not None:
+            parts.append(f"{tag}={point[field]}")
+    parts.append(f"sla={point.get('sla_s')}")
+    return " ".join(parts)
+
+
+def extract_policies(report: dict) -> dict:
+    """{policy_point_key: {engine: scenarios_per_sec}} from
+    BENCH_policies.json."""
+    out = {}
+    for point in report.get("points", []):
+        out[policy_point_key(point)] = {
+            eng: point["engines"][eng]["scenarios_per_sec"]
+            for eng in ENGINES if eng in point.get("engines", {})}
+    return out
+
+
 def extract_kernels(report: dict) -> dict:
     """{row_name + size: {"kernel": calls_per_sec}} for tracked rows."""
     out = {}
@@ -89,6 +114,10 @@ def main(argv=None) -> int:
                     help="kernel bench report; its scheduler-kernel rows "
                          "(kernel/acd_sweep, kernel/fifo_dispatch) join "
                          "the ratchet when the file exists")
+    ap.add_argument("--policies", default="BENCH_policies.json",
+                    help="policy-comparison bench report; its des/vector "
+                         "scenarios-per-sec points join the ratchet when "
+                         "the file exists")
     ap.add_argument("--tolerance", type=float, default=None,
                     help="allowed fractional regression (default: the "
                          "baseline file's tolerance, else 0.25)")
@@ -104,6 +133,9 @@ def main(argv=None) -> int:
     if os.path.exists(args.kernels):
         with open(args.kernels) as f:
             current.update(extract_kernels(json.load(f)))
+    if os.path.exists(args.policies):
+        with open(args.policies) as f:
+            current.update(extract_policies(json.load(f)))
 
     if args.update or not os.path.exists(args.baseline):
         if not args.update:

@@ -4,7 +4,10 @@
 The seed revision ships known-failing accelerator tests (kernels /
 models / training) that the scheduler work tracks but has not yet fixed.
 This tool runs the full tier-1 suite and compares the failure count
-against the committed budget in ``tools/tier1_budget.json``:
+against the committed budget in ``tools/tier1_budget.json``. The budget
+is keyed by Python ``major.minor`` (each CI matrix leg owns its own
+floor; a bare integer is accepted as a flat budget for every version,
+and a ``"default"`` key covers versions without their own entry):
 
 * more failures than the budget  -> exit 1 (a previously-passing test
   broke, or a new test landed red — either way the burn-down went the
@@ -27,6 +30,22 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PY_VERSION = f"{sys.version_info.major}.{sys.version_info.minor}"
+
+BUDGET_NOTE = ("known-failing tier-1 budget, keyed by Python major.minor "
+               "(burn-down only goes DOWN); refresh the running version's "
+               "entry with tools/check_tier1_budget.py --update")
+
+
+def read_budget(path: str) -> dict:
+    """Per-version budget map from the committed file; a legacy bare-int
+    ``max_failures`` becomes a flat ``default`` entry."""
+    with open(path) as f:
+        mf = json.load(f)["max_failures"]
+    if isinstance(mf, dict):
+        return {str(k): int(v) for k, v in mf.items()}
+    return {"default": int(mf)}
 
 
 def _pytest(args) -> tuple[dict, list, str]:
@@ -95,37 +114,45 @@ def main(argv=None) -> int:
 
     bad, passed, tail = run_suite(args.extra)
     print(tail)
-    print(f"\ntier-1: {bad} failing / {passed} passing")
+    print(f"\ntier-1 (py{PY_VERSION}): {bad} failing / {passed} passing")
 
     if args.update or not os.path.exists(args.budget):
         if not args.update:
             print(f"no budget at {args.budget}; writing one "
                   f"(commit it to arm the ratchet)")
+        budgets = (read_budget(args.budget)
+                   if os.path.exists(args.budget) else {})
+        budgets[PY_VERSION] = bad
         with open(args.budget, "w") as f:
-            json.dump({"max_failures": bad,
-                       "note": "known-failing seed accelerator tests "
-                               "(kernels/models/training) — burn-down "
-                               "only goes DOWN; refresh with "
-                               "tools/check_tier1_budget.py --update"},
-                      f, indent=2)
+            json.dump({"max_failures": dict(sorted(budgets.items())),
+                       "note": BUDGET_NOTE}, f, indent=2)
             f.write("\n")
-        print(f"wrote {args.budget} (max_failures={bad})")
+        print(f"wrote {args.budget} (max_failures[{PY_VERSION}]={bad})")
         return 0
 
-    with open(args.budget) as f:
-        budget = int(json.load(f)["max_failures"])
+    budgets = read_budget(args.budget)
+    budget = budgets.get(PY_VERSION, budgets.get("default"))
+    if budget is None:
+        print(f"tier-1 ratchet FAILED: no budget entry for Python "
+              f"{PY_VERSION} (and no 'default') in {args.budget} — run "
+              f"tools/check_tier1_budget.py --update on this version and "
+              f"commit the measured floor.")
+        return 1
     if bad > budget:
         print(f"tier-1 ratchet FAILED: {bad} failures exceed the "
-              f"committed budget of {budget} — a previously-passing test "
-              f"broke (or a new red test landed). Fix it, or consciously "
-              f"raise tools/tier1_budget.json in the same change.")
+              f"committed py{PY_VERSION} budget of {budget} — a "
+              f"previously-passing test broke (or a new red test landed). "
+              f"Fix it, or consciously raise tools/tier1_budget.json in "
+              f"the same change.")
         return 1
     if bad < budget:
         print(f"tier-1 ratchet OK — and the burn-down moved: {bad} < "
-              f"budget {budget}. Run tools/check_tier1_budget.py --update "
-              f"and commit to lock the improvement in.")
+              f"py{PY_VERSION} budget {budget}. Run "
+              f"tools/check_tier1_budget.py --update and commit to lock "
+              f"the improvement in.")
     else:
-        print(f"tier-1 ratchet OK ({bad} == budget {budget})")
+        print(f"tier-1 ratchet OK ({bad} == py{PY_VERSION} budget "
+              f"{budget})")
     return 0
 
 
